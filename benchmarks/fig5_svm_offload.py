@@ -1,0 +1,160 @@
+"""Fig.5 reproduction: offload + kernel time, copy-based SM vs zero-copy SVM.
+
+Four benchmarks with the paper's cost structure:
+  (a) PageRank        — pointer-rich linked graph; copy mode pays pointer
+                        flattening (adjacency dict -> CSR) on every offload;
+  (b) Random Hough Forests — large tree ensemble, only a fraction touched;
+                        copy mode ships the entire forest;
+  (c) MemCopy         — streaming; copy mode's staging dominates;
+  (d) MatMul          — compute amortizes the copy cost partially.
+
+Paper's reductions: (a) ~60%, (b) >60%, (c) >95%, (d) ~80%.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.offload import OffloadTarget
+from repro.core.tracing import TraceBuffer
+
+
+def _graph(n=4096, deg=8, seed=0):
+    """Adjacency dict: the pointer-rich host structure."""
+    rng = np.random.default_rng(seed)
+    return {v: rng.integers(0, n, deg).tolist() for v in range(n)}
+
+
+def _graph_to_csr(g: Dict[int, List[int]]):
+    """The pointer-flattening step copy-based offload must do every time."""
+    indptr = np.zeros(len(g) + 1, np.int32)
+    flat = []
+    for v in range(len(g)):
+        flat.extend(g[v])
+        indptr[v + 1] = len(flat)
+    return indptr, np.asarray(flat, np.int32)
+
+
+def pagerank_kernel(indptr, indices, rank):
+    n = rank.shape[0]
+    deg = (indptr[1:] - indptr[:-1]).astype(jnp.float32)
+    contrib = rank / jnp.maximum(deg, 1.0)
+
+    def body(r, _):
+        inc = jnp.zeros(n, jnp.float32).at[indices].add(
+            jnp.repeat(contrib, deg.astype(jnp.int32), total_repeat_length=indices.shape[0]))
+        return 0.85 * inc + 0.15 / n, None
+
+    out, _ = jax.lax.scan(body, rank, None, length=10)
+    return out
+
+
+def forest_kernel(feat_idx, thresh, children, x):
+    """Classify batch x through depth-8 trees via gathers (partial access)."""
+    node = jnp.zeros((x.shape[0], feat_idx.shape[0]), jnp.int32)
+    for _ in range(8):
+        f = feat_idx[jnp.arange(feat_idx.shape[0])[None, :], node]
+        t = thresh[jnp.arange(feat_idx.shape[0])[None, :], node]
+        go_right = x[:, 0][:, None] > t
+        node = children[jnp.arange(feat_idx.shape[0])[None, :], node,
+                        go_right.astype(jnp.int32)]
+    return node.sum(axis=1)
+
+
+def run_benchmarks(repeats: int = 3):
+    tgt = OffloadTarget(tracer=TraceBuffer())
+    rows = []
+
+    def bench(name, copy_fn, zero_setup, zero_fn):
+        copy_total, zc_total, copy_off, zc_kern = [], [], [], []
+        handles = zero_setup()
+        for _ in range(repeats):
+            out_c, rep_c = copy_fn()
+            out_h, rep_z = zero_fn(handles)
+            copy_total.append(rep_c.total_s)
+            zc_total.append(rep_z.total_s)
+            copy_off.append(rep_c.offload_s + rep_c.writeback_s)
+            zc_kern.append(rep_z.kernel_s)
+        c, z = float(np.median(copy_total)), float(np.median(zc_total))
+        rows.append({
+            "bench": name, "copy_total_s": c, "svm_total_s": z,
+            "copy_offload_s": float(np.median(copy_off)),
+            "svm_kernel_s": float(np.median(zc_kern)),
+            "reduction_pct": 100.0 * (1 - z / c),
+        })
+
+    # (a) PageRank — linked data structure
+    g = _graph()
+    n = len(g)
+
+    def pr_copy():
+        indptr, indices = _graph_to_csr(g)            # pointer fixing
+        rank = np.full(n, 1.0 / n, np.float32)
+        return tgt.run_copy_based(pagerank_kernel, indptr, indices, rank)
+
+    def pr_setup():
+        indptr, indices = _graph_to_csr(g)
+        return [tgt.svm.share(jax.device_put(indptr)),
+                tgt.svm.share(jax.device_put(indices)),
+                tgt.svm.share(jax.device_put(np.full(n, 1.0 / n, np.float32)))]
+
+    bench("pagerank", pr_copy, pr_setup,
+          lambda hs: tgt.run_zero_copy(pagerank_kernel, *hs))
+
+    # (b) Random Hough Forests — big, partially-accessed
+    rng = np.random.default_rng(1)
+    n_trees, n_nodes = 64, 2048
+    feat = rng.integers(0, 16, (n_trees, n_nodes)).astype(np.int32)
+    thr = rng.standard_normal((n_trees, n_nodes)).astype(np.float32)
+    child = rng.integers(0, n_nodes, (n_trees, n_nodes, 2)).astype(np.int32)
+    xq = rng.standard_normal((256, 16)).astype(np.float32)
+
+    bench("hough_forest",
+          lambda: tgt.run_copy_based(forest_kernel, feat, thr, child, xq),
+          lambda: [tgt.svm.share(jax.device_put(a))
+                   for a in (feat, thr, child, xq)],
+          lambda hs: tgt.run_zero_copy(forest_kernel, *hs))
+
+    # (c) MemCopy — streaming
+    big = rng.standard_normal((1 << 22,)).astype(np.float32)  # 16 MiB
+    ident = lambda x: x + 0.0
+    bench("memcopy",
+          lambda: tgt.run_copy_based(ident, big),
+          lambda: [tgt.svm.share(jax.device_put(big))],
+          lambda hs: tgt.run_zero_copy(ident, *hs))
+
+    # (d) MatMul
+    A = rng.standard_normal((768, 768)).astype(np.float32)
+    B = rng.standard_normal((768, 768)).astype(np.float32)
+    mm = lambda a, b: a @ b
+    bench("matmul",
+          lambda: tgt.run_copy_based(mm, A, B),
+          lambda: [tgt.svm.share(jax.device_put(A)),
+                   tgt.svm.share(jax.device_put(B))],
+          lambda hs: tgt.run_zero_copy(mm, *hs))
+    return rows
+
+
+def main():
+    print("# Fig.5: copy-based SM vs zero-copy SVM offload")
+    print("bench,copy_total_s,svm_total_s,copy_offload_s,svm_kernel_s,"
+          "reduction_pct,paper_claim_pct")
+    claims = {"pagerank": "~60", "hough_forest": ">60", "memcopy": ">95",
+              "matmul": "~80"}
+    for r in run_benchmarks():
+        print(f"{r['bench']},{r['copy_total_s']:.5f},{r['svm_total_s']:.5f},"
+              f"{r['copy_offload_s']:.5f},{r['svm_kernel_s']:.5f},"
+              f"{r['reduction_pct']:.1f},{claims[r['bench']]}")
+    print("# NOTE: memcopy under-reproduces the paper's >95% because on "
+          "CPU-JAX the kernel's copy bandwidth equals the host staging "
+          "bandwidth; in the HESoC the host's *uncached* staging path is "
+          "~20x slower than the PMCA DMA. Normalizing the kernel to DMA "
+          "bandwidth recovers the paper's ratio (EXPERIMENTS.md Fig.5).")
+
+
+if __name__ == "__main__":
+    main()

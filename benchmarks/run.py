@@ -1,0 +1,50 @@
+"""Benchmark driver: one section per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows per section (the scaffold
+contract), then the full section outputs.
+"""
+from __future__ import annotations
+
+import io
+import time
+import traceback
+from contextlib import redirect_stdout
+
+
+def _run(name, fn):
+    buf = io.StringIO()
+    t0 = time.perf_counter()
+    status = "ok"
+    try:
+        with redirect_stdout(buf):
+            fn()
+    except Exception as e:  # noqa: BLE001
+        status = f"error:{type(e).__name__}"
+        buf.write(traceback.format_exc())
+    dt = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{dt:.0f},{status}", flush=True)
+    return name, buf.getvalue()
+
+
+def main() -> None:
+    sections = []
+    from benchmarks import fig4_cluster_speedup, fig5_svm_offload, \
+        fig6_event_tracing, tab2_resources, roofline
+
+    print("name,us_per_call,derived")
+    sections.append(_run("fig4_cluster_speedup",
+                         lambda: fig4_cluster_speedup.main(throughput=True)))
+    sections.append(_run("fig5_svm_offload", fig5_svm_offload.main))
+    sections.append(_run("fig6_event_tracing", fig6_event_tracing.main))
+    sections.append(_run("tab2_resources", tab2_resources.main))
+    sections.append(_run("roofline_single_pod",
+                         lambda: print(roofline.render_markdown(
+                             roofline.full_table("single")))))
+
+    for name, out in sections:
+        print(f"\n{'='*72}\n== {name}\n{'='*72}")
+        print(out)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,42 @@
+"""Offload semantics demo (paper §2.2/Fig.5): the same kernel via
+copy-based SM vs zero-copy SVM, with the traced offload protocol.
+
+    PYTHONPATH=src python examples/svm_offload_demo.py
+"""
+import jax
+import numpy as np
+
+from repro.core import OffloadTarget, TraceBuffer
+from repro.core.analysis import layer1_decode
+from repro.kernels.cluster_matmul import cluster_matmul
+
+
+def main():
+    tgt = OffloadTarget(tracer=TraceBuffer())
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((256, 256)).astype(np.float32)
+    b = rng.standard_normal((256, 256)).astype(np.float32)
+
+    kern = lambda a, b: cluster_matmul(a, b, interpret=True)
+
+    out_c, rep_c = tgt.run_copy_based(kern, a, b)
+    print(f"copy-based : offload {rep_c.offload_s*1e3:7.2f} ms  "
+          f"kernel {rep_c.kernel_s*1e3:7.2f} ms  "
+          f"writeback {rep_c.writeback_s*1e3:6.2f} ms  "
+          f"({rep_c.bytes_to/2**20:.1f} MiB staged)")
+
+    ha, hb = tgt.svm.share(jax.device_put(a)), tgt.svm.share(jax.device_put(b))
+    out_h, rep_z = tgt.run_zero_copy(kern, ha, hb)
+    print(f"zero-copy  : offload {rep_z.offload_s*1e3:7.2f} ms  "
+          f"kernel {rep_z.kernel_s*1e3:7.2f} ms  (pointer pass only)")
+    print(f"total reduction: "
+          f"{100*(1 - rep_z.total_s/rep_c.total_s):.1f}%")
+
+    np.testing.assert_allclose(out_c, np.asarray(tgt.svm.deref(out_h)),
+                               rtol=1e-4, atol=1e-4)
+    print("results identical across offload modes ✓")
+    print(f"{len(layer1_decode(tgt.tracer.drain()))} protocol events traced")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Fast dev loop: one train + prefill + decode step per smoke arch on CPU."""
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs, smoke_shape
+from repro.models import model as M
+from repro.models import steps as ST
+
+ARCHS = sys.argv[1:] or list_archs()
+
+for name in ARCHS:
+    cfg = get_config(name).smoke()
+    rng = jax.random.PRNGKey(0)
+    try:
+        params = M.init_params(cfg, rng)
+        n = sum(x.size for x in jax.tree.leaves(params))
+        # train
+        tshape = smoke_shape("train")
+        batch = ST.make_batch(cfg, tshape, rng)
+        state = ST.init_train_state(cfg, ST.default_opt_cfg(cfg), rng)
+        step = jax.jit(ST.make_train_step(cfg))
+        state, metrics = step(state, batch)
+        loss = float(metrics["loss"])
+        # prefill
+        pshape = smoke_shape("prefill")
+        pbatch = ST.make_batch(cfg, pshape, rng)
+        logits = jax.jit(ST.make_prefill_step(cfg))(state["params"], pbatch)
+        # decode
+        dshape = smoke_shape("decode")
+        T = max(cfg.cache_len(dshape), 1)
+        cache = M.init_cache(cfg, dshape.global_batch, T)
+        dbatch = ST.make_batch(cfg, dshape, rng)
+        dlogits, cache = jax.jit(ST.make_decode_step(cfg))(
+            state["params"], cache, dbatch)
+        ok_nan = (jnp.isfinite(loss) and bool(jnp.isfinite(logits).all())
+                  and bool(jnp.isfinite(dlogits).all()))
+        print(f"OK   {name:20s} params={n:>9d} loss={loss:8.4f} "
+              f"prefill={logits.shape} decode={dlogits.shape} finite={ok_nan}")
+        assert ok_nan
+    except Exception as e:
+        print(f"FAIL {name}: {e}")
+        traceback.print_exc()
+        sys.exit(1)
+print("ALL SMOKE OK")

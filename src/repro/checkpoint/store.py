@@ -1,0 +1,157 @@
+"""Sharded, mesh-agnostic checkpointing with atomic commit + async save.
+
+Layout:  <root>/step_<N>/
+            metadata.json        tree paths, shapes, dtypes
+            <leafpath>.npy       one file per leaf (host-local shard on a
+                                 real fleet; full arrays single-process)
+            COMMITTED            atomic marker (written last, rename-safe)
+
+Restore is *elastic*: arrays are re-device_put with whatever shardings the
+new mesh prescribes — checkpoints carry only logical tensors, so a run
+saved on a (4,) mesh restores onto (2,2) or (2,16,16) unchanged (the
+standard checkpoint-reshard-restart path used after node failures).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy cannot round-trip ml_dtypes through .npy headers; store such arrays
+# as a same-width integer view and reconstruct from the recorded dtype.
+_VIEW_SAVE = {
+    "bfloat16": np.uint16,
+    "float8_e4m3fn": np.uint8,
+    "float8_e5m2": np.uint8,
+}
+_VIEW_LOAD = {
+    "bfloat16": ml_dtypes.bfloat16,
+    "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+    "float8_e5m2": ml_dtypes.float8_e5m2,
+}
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    out: List[Tuple[str, Any]] = []
+
+    def visit(node, prefix):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                visit(node[k], prefix + [str(k)])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                visit(v, prefix + [str(i)])
+        else:
+            out.append(("/".join(prefix), node))
+
+    visit(tree, [])
+    return out
+
+
+def _unflatten_like(like: Any, values: Dict[str, Any]) -> Any:
+    def visit(node, prefix):
+        if isinstance(node, dict):
+            return {k: visit(node[k], prefix + [str(k)]) for k in node}
+        if isinstance(node, (list, tuple)):
+            t = [visit(v, prefix + [str(i)]) for i, v in enumerate(node)]
+            return type(node)(t)
+        return values["/".join(prefix)]
+
+    return visit(like, [])
+
+
+def save_checkpoint(root: str, step: int, state: Any) -> str:
+    """Atomic synchronous save.  Returns the committed directory."""
+    root_p = Path(root)
+    root_p.mkdir(parents=True, exist_ok=True)
+    final = root_p / f"step_{step:08d}"
+    tmp = Path(tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=root))
+    try:
+        leaves = _flatten_with_paths(state)
+        meta = {"step": step, "leaves": {}}
+        for path, leaf in leaves:
+            arr = np.asarray(leaf)
+            fn = path.replace("/", "__") + ".npy"
+            logical = str(arr.dtype)
+            if logical in _VIEW_SAVE:
+                np.save(tmp / fn, arr.view(_VIEW_SAVE[logical]))
+            else:
+                np.save(tmp / fn, arr)
+            meta["leaves"][path] = {"file": fn, "shape": list(arr.shape),
+                                    "dtype": logical}
+        (tmp / "metadata.json").write_text(json.dumps(meta))
+        (tmp / "COMMITTED").write_text("ok")
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return str(final)
+
+
+def latest_step(root: str) -> Optional[int]:
+    p = Path(root)
+    if not p.exists():
+        return None
+    steps = []
+    for d in p.iterdir():
+        if d.name.startswith("step_") and (d / "COMMITTED").exists():
+            steps.append(int(d.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(root: str, like: Any, step: Optional[int] = None,
+                       shardings: Optional[Any] = None) -> Tuple[Any, int]:
+    """Load a committed checkpoint; reshard onto `shardings` if given."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {root}")
+    d = Path(root) / f"step_{step:08d}"
+    meta = json.loads((d / "metadata.json").read_text())
+    values: Dict[str, Any] = {}
+    shard_leaves = dict(_flatten_with_paths(shardings)) if shardings is not None \
+        else {}
+    for path, info in meta["leaves"].items():
+        arr = np.load(d / info["file"])
+        if info["dtype"] in _VIEW_LOAD:
+            arr = arr.view(_VIEW_LOAD[info["dtype"]])
+        sh = shard_leaves.get(path)
+        values[path] = jax.device_put(arr, sh) if sh is not None else \
+            jax.device_put(arr)
+    return _unflatten_like(like, values), step
+
+
+class AsyncCheckpointer:
+    """One-slot async save queue (next save waits for the previous)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        self._pool = cf.ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[cf.Future] = None
+
+    def save(self, step: int, state: Any) -> None:
+        # snapshot to host *synchronously* (cheap bytes, correctness first),
+        # write files in the background
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+        self.wait()
+        self._pending = self._pool.submit(save_checkpoint, self.root, step,
+                                          host_state)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def close(self) -> None:
+        self.wait()
+        self._pool.shutdown(wait=True)

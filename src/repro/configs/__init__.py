@@ -1,0 +1,7 @@
+from repro.configs.base import ArchConfig, ShapeSpec, SHAPES, smoke_shape
+from repro.configs.registry import get_config, get_shape, list_archs, all_cells
+
+__all__ = [
+    "ArchConfig", "ShapeSpec", "SHAPES", "smoke_shape",
+    "get_config", "get_shape", "list_archs", "all_cells",
+]

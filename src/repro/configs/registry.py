@@ -1,0 +1,45 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec
+
+_MODULES = {
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "yi-6b": "repro.configs.yi_6b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "hymba-1.5b": "repro.configs.hymba_1p5b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "whisper-medium": "repro.configs.whisper_medium",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list_archs()}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_shape(name: str) -> ShapeSpec:
+    return SHAPES[name]
+
+
+def all_cells():
+    """Every (arch, shape) cell with its applicability verdict."""
+    out = []
+    for a in list_archs():
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, why = cfg.shape_applicable(s)
+            out.append((cfg, s, ok, why))
+    return out

@@ -1,0 +1,130 @@
+"""Three-layer event analysis (HERO §2.3.1).
+
+Layer 1 (generic): binary event rows -> time-sorted ``Event`` records with
+platform metadata.
+Layer 2 (platform): event-type specific decoding (memory accesses per core,
+TLB protocol transitions, offload phases).
+Layer 3 (application): user-defined analyses + *definable assertions*
+(HERO §3.4b verifies hit-under-miss with exactly such assertions).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Callable, Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.core.tracing import EventType
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    ts: int
+    tracer: int
+    etype: EventType
+    a0: int
+    a1: int
+
+    @property
+    def core(self) -> int:       # platform decode: a0 is the requester/core
+        return self.a0
+
+    @property
+    def vpage(self) -> int:      # platform decode: a1 is the address/page
+        return self.a1
+
+
+def layer1_decode(rows: np.ndarray, platform: Optional[Dict] = None
+                  ) -> List[Event]:
+    """Generic: rows (N,5) -> time-sorted Events (per tracer domain)."""
+    events = [Event(int(r[0]), int(r[1]), EventType(int(r[2])),
+                    int(r[3]), int(r[4])) for r in rows]
+    return sorted(events, key=lambda e: (e.tracer, e.ts))
+
+
+def layer2_per_core(events: Iterable[Event]) -> Dict[int, List[Event]]:
+    """Platform: split protocol events by core (HERO Fig.6 view)."""
+    out: Dict[int, List[Event]] = defaultdict(list)
+    for e in events:
+        out[e.core].append(e)
+    return dict(out)
+
+
+def layer2_tlb_transactions(events: Iterable[Event]) -> List[Dict]:
+    """Platform: stitch TLB protocol transitions into transactions."""
+    open_miss: Dict[int, Dict] = {}
+    done: List[Dict] = []
+    for e in events:
+        if e.etype in (EventType.TLB_L1_HIT, EventType.TLB_L2_HIT):
+            done.append({"core": e.core, "vpage": e.vpage, "ts": e.ts,
+                         "kind": "hit_l1" if e.etype == EventType.TLB_L1_HIT
+                                 else "hit_l2", "latency": 0})
+        elif e.etype == EventType.TLB_MISS:
+            open_miss[e.core] = {"core": e.core, "vpage": e.vpage,
+                                 "ts": e.ts, "kind": "miss"}
+        elif e.etype == EventType.CORE_WAKE and e.core in open_miss:
+            tx = open_miss.pop(e.core)
+            tx["latency"] = e.ts - tx["ts"]
+            done.append(tx)
+    done.extend(open_miss.values())
+    return done
+
+
+@dataclasses.dataclass
+class Assertion:
+    """Layer-3 definable assertion over the event stream (HERO §3.4b)."""
+
+    name: str
+    predicate: Callable[[List[Event]], bool]
+    description: str = ""
+
+    def check(self, events: List[Event]) -> bool:
+        return bool(self.predicate(events))
+
+
+def assert_hit_under_miss(events: List[Event]) -> bool:
+    """While a miss is outstanding on core A, hits by other cores must
+    still complete (HERO §3.4b's exact property)."""
+    outstanding = set()
+    ok = True
+    for e in events:
+        if e.etype == EventType.TLB_MISS:
+            outstanding.add(e.core)
+        elif e.etype == EventType.CORE_WAKE:
+            outstanding.discard(e.core)
+        elif e.etype in (EventType.TLB_L1_HIT, EventType.TLB_L2_HIT):
+            if e.core in outstanding:
+                ok = False  # a sleeping core cannot issue translations
+    return ok
+
+
+def assert_wake_follows_handle(events: List[Event]) -> bool:
+    handled = set()
+    for e in events:
+        if e.etype == EventType.MISS_HANDLED:
+            handled.add((e.core, e.vpage))
+        elif e.etype == EventType.CORE_WAKE:
+            if (e.core, e.vpage) not in handled:
+                return False
+    return True
+
+
+def layer3_run(events: List[Event], assertions: Iterable[Assertion]
+               ) -> Dict[str, bool]:
+    return {a.name: a.check(events) for a in assertions}
+
+
+def render_timeline(events: List[Event], max_rows: int = 40) -> str:
+    """Fig.6-style compressed per-core textual timeline."""
+    lines = []
+    for core, evs in sorted(layer2_per_core(events).items()):
+        cells = []
+        last_ts = None
+        for e in evs[:max_rows]:
+            if last_ts is not None and e.ts - last_ts > 1:
+                cells.append("..")
+            cells.append(f"{e.etype.name}@{e.ts}(p{e.vpage})")
+            last_ts = e.ts
+        lines.append(f"core {core:3d}: " + " ".join(cells))
+    return "\n".join(lines)

@@ -1,0 +1,247 @@
+"""RAB — Remapping Address Block (HERO's software-managed accelerator MMU),
+adapted to TPU serving as the *paged KV-cache translation layer*.
+
+HERO's RAB translates PMCA virtual addresses to physical DRAM addresses via
+a tiny, software-managed two-level TLB: a single-cycle fully-associative L1
+and a multi-cycle set-associative, banked L2.  Misses are queued; the core
+that missed sleeps; a handler walks the page table, configures a replacement
+entry, and wakes the core (Vogel et al. [28-30]).
+
+The TPU adaptation: the "virtual address space" is the *logical token-page
+space* of a serving request (SVM between the host scheduler and the model),
+and "physical addresses" are slots in the paged KV pool consumed by
+``kernels/paged_attention``.  The translation table the kernel reads (the
+block table) is exactly HERO's RAB table; the miss path is on-demand page
+allocation during decode; hit-under-miss, replacement, and the wake protocol
+are preserved and observable through the event tracer (§3.4 reproduction).
+
+This is a host-side state machine (the RAB is managed *in software* in HERO
+too); the device-side consumer is the block-table array it maintains.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.tracing import EventType, TraceBuffer
+
+
+@dataclasses.dataclass(frozen=True)
+class RABConfig:
+    l1_entries: int = 32          # Tab.1: 4..64
+    l2_entries: int = 1024        # Tab.1: 0..2048
+    l2_assoc: int = 32            # Tab.1: 16/32/64
+    l2_banks: int = 4             # Tab.1: 1/2/4/8
+    l1_lookup_cycles: int = 1     # single-cycle hit (§3.4a)
+    l2_cycles_per_way: int = 1    # multi-cycle search (§3.4b)
+    miss_handler_cycles: int = 50  # page-table walk cost model
+
+    def __post_init__(self):
+        assert self.l2_entries % max(self.l2_banks, 1) == 0
+        sets = self.l2_entries // max(self.l2_assoc, 1)
+        assert sets >= 1
+
+
+class RABMiss(Exception):
+    """Raised on a translation miss when no handler runs inline."""
+
+    def __init__(self, vpage: int, requester: int):
+        super().__init__(f"RAB miss vpage={vpage} requester={requester}")
+        self.vpage = vpage
+        self.requester = requester
+
+
+class RAB:
+    """Two-level software TLB with miss queue + wake list."""
+
+    def __init__(self, cfg: RABConfig, tracer: Optional[TraceBuffer] = None):
+        self.cfg = cfg
+        self.l1: "OrderedDict[int, int]" = OrderedDict()   # vpage -> ppage, LRU
+        n_sets = max(1, cfg.l2_entries // max(cfg.l2_assoc, 1))
+        self.l2: List["OrderedDict[int, int]"] = [OrderedDict()
+                                                  for _ in range(n_sets)]
+        self.miss_queue: deque = deque()
+        self.sleeping: Dict[int, int] = {}                 # requester -> vpage
+        self.tracer = tracer
+        self.stats = {"l1_hits": 0, "l2_hits": 0, "misses": 0,
+                      "evictions_l1": 0, "evictions_l2": 0, "wakes": 0,
+                      "cycles": 0}
+
+    # ------------------------------------------------------------------ util
+    def _trace(self, etype: EventType, a: int = 0, b: int = 0):
+        if self.tracer is not None:
+            self.tracer.record_host(etype, a, b)
+
+    def _l2_set(self, vpage: int) -> "OrderedDict[int, int]":
+        return self.l2[vpage % len(self.l2)]
+
+    # ----------------------------------------------------------------- logic
+    def lookup(self, vpage: int, requester: int = 0) -> Tuple[Optional[int], int]:
+        """Translate vpage.  Returns (ppage | None, cycles).
+
+        None means miss: the request was queued and the requester 'sleeps'
+        (HERO: the core is clock-gated until the VMM handler wakes it).
+        """
+        cyc = self.cfg.l1_lookup_cycles
+        if vpage in self.l1:
+            self.l1.move_to_end(vpage)
+            self.stats["l1_hits"] += 1
+            self.stats["cycles"] += cyc
+            self._trace(EventType.TLB_L1_HIT, requester, vpage)
+            return self.l1[vpage], cyc
+
+        s = self._l2_set(vpage)
+        # multi-cycle associative search (§3.4b: L2 searched while L1 serves
+        # other cores — hit-under-miss is possible because state is per-set)
+        cyc += self.cfg.l2_cycles_per_way * max(1, min(len(s), self.cfg.l2_assoc))
+        if vpage in s:
+            ppage = s.pop(vpage)
+            self.stats["l2_hits"] += 1
+            self.stats["cycles"] += cyc
+            self._promote_l1(vpage, ppage)
+            self._trace(EventType.TLB_L2_HIT, requester, vpage)
+            return ppage, cyc
+
+        self.stats["misses"] += 1
+        self.stats["cycles"] += cyc
+        self.miss_queue.append((vpage, requester))
+        self.sleeping[requester] = vpage
+        self._trace(EventType.TLB_MISS, requester, vpage)
+        self._trace(EventType.CORE_SLEEP, requester, vpage)
+        return None, cyc
+
+    def _promote_l1(self, vpage: int, ppage: int):
+        if len(self.l1) >= self.cfg.l1_entries:
+            old_v, old_p = self.l1.popitem(last=False)     # LRU
+            self.stats["evictions_l1"] += 1
+            self._insert_l2(old_v, old_p)
+        self.l1[vpage] = ppage
+
+    def _insert_l2(self, vpage: int, ppage: int):
+        s = self._l2_set(vpage)
+        if len(s) >= self.cfg.l2_assoc:
+            s.popitem(last=False)
+            self.stats["evictions_l2"] += 1
+        s[vpage] = ppage
+
+    def handle_misses(self, page_table: Dict[int, int]) -> List[int]:
+        """VMM handler: walk `page_table`, configure entries, wake cores.
+
+        Returns the requesters woken.  (HERO §2.2.4: handler dequeues the
+        miss, walks the host page table, selects a replacement entry,
+        configures it, and wakes the sleeping core.)
+        """
+        woken = []
+        while self.miss_queue:
+            vpage, requester = self.miss_queue.popleft()
+            if vpage not in page_table:
+                raise KeyError(f"page fault: vpage {vpage} unmapped")
+            self.stats["cycles"] += self.cfg.miss_handler_cycles
+            self._trace(EventType.MISS_HANDLED, requester, vpage)
+            self._promote_l1(vpage, page_table[vpage])
+            if self.sleeping.get(requester) == vpage:
+                del self.sleeping[requester]
+                self.stats["wakes"] += 1
+                self._trace(EventType.CORE_WAKE, requester, vpage)
+                woken.append(requester)
+        return woken
+
+    def invalidate(self, vpage: Optional[int] = None):
+        if vpage is None:
+            self.l1.clear()
+            for s in self.l2:
+                s.clear()
+        else:
+            self.l1.pop(vpage, None)
+            self._l2_set(vpage).pop(vpage, None)
+
+    def resident(self) -> Dict[int, int]:
+        out = dict(self.l1)
+        for s in self.l2:
+            out.update(s)
+        return out
+
+
+# ===========================================================================
+# Paged KV pool (the "physical memory" behind the RAB)
+# ===========================================================================
+
+class PagedKVPool:
+    """Fixed pool of KV pages + per-sequence logical page tables.
+
+    The device-side consumable is ``block_table(seq_ids)``: an int32 array
+    (B, max_pages) of physical page indices (the RAB table image the
+    paged_attention kernel reads).  -1 marks unmapped logical pages.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, max_pages_per_seq: int,
+                 rab: Optional[RAB] = None):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_pages = max_pages_per_seq
+        self.free = list(range(num_pages - 1, -1, -1))
+        self.page_table: Dict[Tuple[int, int], int] = {}   # (seq, lpage) -> p
+        self.seq_len: Dict[int, int] = {}
+        self.rab = rab
+
+    def can_alloc(self, n: int = 1) -> bool:
+        return len(self.free) >= n
+
+    def alloc_page(self, seq: int, lpage: int) -> int:
+        if not self.free:
+            raise MemoryError("KV pool exhausted")
+        p = self.free.pop()
+        self.page_table[(seq, lpage)] = p
+        return p
+
+    def append_token(self, seq: int) -> Tuple[int, int]:
+        """Account one new token; allocates a page at page boundaries.
+
+        Returns (lpage, slot_in_page)."""
+        t = self.seq_len.get(seq, 0)
+        lpage, slot = divmod(t, self.page_size)
+        if slot == 0:
+            self.alloc_page(seq, lpage)
+        self.seq_len[seq] = t + 1
+        return lpage, slot
+
+    def release(self, seq: int):
+        for (s, lp), p in list(self.page_table.items()):
+            if s == seq:
+                self.free.append(p)
+                del self.page_table[(s, lp)]
+        self.seq_len.pop(seq, None)
+        if self.rab is not None:
+            self.rab.invalidate()
+
+    def translate(self, seq: int, lpage: int) -> int:
+        """RAB-mediated translation (miss -> handler walk -> retry)."""
+        if self.rab is None:
+            return self.page_table[(seq, lpage)]
+        key = self._vpage(seq, lpage)
+        ppage, _ = self.rab.lookup(key, requester=seq)
+        if ppage is None:
+            flat = {self._vpage(s, lp): p
+                    for (s, lp), p in self.page_table.items()}
+            self.rab.handle_misses(flat)
+            ppage, _ = self.rab.lookup(key, requester=seq)
+            assert ppage is not None
+        return ppage
+
+    def _vpage(self, seq: int, lpage: int) -> int:
+        return seq * self.max_pages + lpage
+
+    def block_table(self, seq_ids: List[int]) -> np.ndarray:
+        """(B, max_pages) int32 physical page indices; -1 = unmapped."""
+        bt = np.full((len(seq_ids), self.max_pages), -1, np.int32)
+        for i, s in enumerate(seq_ids):
+            n = self.seq_len.get(s, 0)
+            for lp in range(-(-n // self.page_size) if n else 0):
+                bt[i, lp] = self.translate(s, lp)
+        return bt
+
+    def lengths(self, seq_ids: List[int]) -> np.ndarray:
+        return np.array([self.seq_len.get(s, 0) for s in seq_ids], np.int32)

@@ -1,0 +1,126 @@
+"""Event tracing (HERO §2.3.1), adapted to the JAX execution model.
+
+HERO's tracers are hardware blocks that (1) never perturb execution, (2) are
+cycle-accurate, (3) use buffers economically, and (4) need no application
+changes.  The JAX adaptation keeps all four properties:
+
+  * device-side events are recorded as pure array writes into a fixed-size
+    ring buffer *carried through the jitted step* — no host callback in the
+    hot path (non-intrusive);
+  * the logical clock is a monotonically increasing counter carried with the
+    buffer (all tracers share it, like HERO's common gated clock);
+  * when the buffer fills, recording saturates; the host drains between steps
+    (the step boundary is the analogue of HERO's clock-freeze-and-drain);
+  * host-side events (offload begin/end, RAB activity) are recorded into the
+    same stream with the same schema, so the analyzer sees one timeline.
+
+Event schema (int64 x 5): (timestamp, tracer_id, event_type, arg0, arg1).
+"""
+from __future__ import annotations
+
+import enum
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class EventType(enum.IntEnum):
+    # device-side
+    STEP_BEGIN = 1
+    STEP_END = 2
+    MEM_READ = 3
+    MEM_WRITE = 4
+    SYNC = 5
+    # RAB / VMM protocol (§3.4)
+    TLB_L1_HIT = 10
+    TLB_L2_HIT = 11
+    TLB_MISS = 12
+    MISS_HANDLED = 13
+    CORE_SLEEP = 14
+    CORE_WAKE = 15
+    # offload runtime (§2.2)
+    OFFLOAD_BEGIN = 20
+    OFFLOAD_COPY_TO = 21
+    OFFLOAD_KERNEL_BEGIN = 22
+    OFFLOAD_KERNEL_END = 23
+    OFFLOAD_COPY_FROM = 24
+    OFFLOAD_END = 25
+    # scheduler / serving
+    PAGE_ALLOC = 30
+    PAGE_RELEASE = 31
+    REQUEST_ADMIT = 32
+    REQUEST_FINISH = 33
+
+
+HOST_TRACER_ID = 255
+
+
+class TraceBuffer:
+    """Fixed-capacity event buffer; device part is a pytree."""
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = capacity
+        self.host_events: List[Tuple[int, int, int, int, int]] = []
+        self._host_clock = 0
+        self.dropped = 0
+
+    # ------------------------------------------------------------- device --
+    def device_init(self) -> Dict[str, jax.Array]:
+        return {
+            "events": jnp.zeros((self.capacity, 5), jnp.int32),
+            "count": jnp.zeros((), jnp.int32),
+            "clock": jnp.zeros((), jnp.int32),
+        }
+
+    @staticmethod
+    def record(dev: Dict[str, jax.Array], tracer_id: int, etype: int,
+               a0=0, a1=0) -> Dict[str, jax.Array]:
+        """Pure-functional in-step event record (saturating)."""
+        cap = dev["events"].shape[0]
+        idx = jnp.minimum(dev["count"], cap - 1)
+        ev = jnp.stack([dev["clock"],
+                        jnp.asarray(tracer_id, jnp.int32),
+                        jnp.asarray(etype, jnp.int32),
+                        jnp.asarray(a0, jnp.int32),
+                        jnp.asarray(a1, jnp.int32)])
+        events = jax.lax.dynamic_update_slice(dev["events"], ev[None, :],
+                                              (idx, 0))
+        return {"events": events, "count": dev["count"] + 1,
+                "clock": dev["clock"] + 1}
+
+    @staticmethod
+    def tick(dev: Dict[str, jax.Array], n: int = 1) -> Dict[str, jax.Array]:
+        """Advance the logical clock without recording (models latency)."""
+        return dict(dev, clock=dev["clock"] + n)
+
+    # --------------------------------------------------------------- host --
+    def record_host(self, etype: EventType, a0: int = 0, a1: int = 0):
+        self._host_clock += 1
+        self.host_events.append(
+            (self._host_clock, HOST_TRACER_ID, int(etype), int(a0), int(a1)))
+
+    def drain(self, dev: Optional[Dict[str, jax.Array]] = None) -> np.ndarray:
+        """Freeze-and-drain: pull device events + host events, clear both.
+
+        Returns an (N,5) int64 array sorted by (source, timestamp); device
+        timestamps are kept in their own clock domain (tracer_id separates
+        domains, as HERO's per-logger streams do).
+        """
+        rows: List[np.ndarray] = []
+        if dev is not None:
+            n = int(dev["count"])
+            cap = dev["events"].shape[0]
+            if n > cap:
+                self.dropped += n - cap
+                n = cap
+            if n:
+                rows.append(np.asarray(dev["events"][:n], np.int64))
+        if self.host_events:
+            rows.append(np.asarray(self.host_events, np.int64))
+            self.host_events = []
+        if not rows:
+            return np.zeros((0, 5), np.int64)
+        out = np.concatenate(rows, axis=0)
+        return out[np.lexsort((out[:, 0], out[:, 1]))]

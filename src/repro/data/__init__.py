@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMData, MarkovChainData, Prefetcher
+
+__all__ = ["SyntheticLMData", "MarkovChainData", "Prefetcher"]

@@ -1,0 +1,4 @@
+from repro.kernels.cluster_matmul.ops import cluster_matmul
+from repro.kernels.cluster_matmul.ref import cluster_matmul_ref
+
+__all__ = ["cluster_matmul", "cluster_matmul_ref"]

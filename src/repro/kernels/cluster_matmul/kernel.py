@@ -1,0 +1,59 @@
+"""SPM-tiled matmul kernel (HERO §3.2's cluster program, on the MXU).
+
+HERO's cluster program: DMA a row tile of A and a column tile of B from DRAM
+into the L1 SPM, compute the C tile locally, DMA it back.  On TPU the SPM is
+VMEM and the DMA engine is the ``pallas_call`` grid pipeline: BlockSpecs
+declare the HBM->VMEM tiles, and the K-innermost grid revisits the output
+block while streaming A/B tiles through VMEM (double-buffered by the
+pipeline — the analogue of the cluster's multi-channel DMA).
+
+Tile sizes default to MXU-aligned 128 multiples; the fp32 accumulator lives
+in a VMEM scratch across the K grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128, interpret: bool = False) -> jax.Array:
+    """C = A @ B with explicit VMEM tiling.  Shapes must tile evenly."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"({m},{k})x({k},{n}) not tiled by ({bm},{bn},{bk})"
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

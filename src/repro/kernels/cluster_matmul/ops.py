@@ -1,0 +1,23 @@
+"""Jitted public wrapper for the cluster matmul kernel.
+
+On a real TPU, ``interpret=False`` runs the Pallas kernel; this container is
+CPU-only, so the default resolves to interpret mode (kernel body executed in
+Python, validated against ref.py by the test sweep).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.cluster_matmul import kernel as K
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def cluster_matmul(a: jax.Array, b: jax.Array, *, bm: int = 128,
+                   bn: int = 128, bk: int = 128,
+                   interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    return K.matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)

@@ -1,0 +1,109 @@
+"""Flash attention (forward) Pallas kernel: online softmax in VMEM.
+
+Grid (B*Kv*G..., S/bq, T/bk) streams K/V tiles through VMEM while a running
+(max, sum, acc) triple lives in scratch — the memory-hierarchy insight HERO
+applies to the SPM (compute on resident tiles, never materialize the S x T
+score matrix in HBM).  Supports causal masking, sliding windows, and logit
+softcaps (gemma2/hymba variants).
+
+The public op (ops.py) wraps this forward in a custom_vjp whose backward
+recomputes through the chunked XLA reference — exact gradients, kernel-fast
+forward.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, cap: float,
+            bq: int, bk: int, nk: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                       # (bq, d)
+    k = k_ref[0]                       # (bk, d)
+    v = v_ref[0]                       # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+
+    qpos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    kpos = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(s, axis=1)[:, None]             # (bq,1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                           # (bq,bk)
+    # fully-masked rows keep m == NEG_INF: exp(NEG_INF - NEG_INF) would be 1,
+    # silently attending to everything — zero those probabilities explicitly
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                  # (bq,1)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)[:, None]
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kk == nk - 1)
+    def _flush():
+        # rows fully masked (causal upper tiles) have l == 0
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, ...] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "cap", "bq", "bk", "interpret", "scale"))
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        cap: float = 0.0, scale: float | None = None,
+                        bq: int = 128, bk: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q: (BH, S, d); k/v: (BH, T, d) — heads pre-flattened/broadcast.
+
+    Returns (BH, S, d)."""
+    BH, S, d = q.shape
+    T = k.shape[1]
+    bq, bk = min(bq, S), min(bk, T)
+    assert S % bq == 0 and T % bk == 0
+    nk = T // bk
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=sc, causal=causal, window=window,
+                          cap=cap, bq=bq, bk=bk, nk=nk),
+        grid=(BH, S // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, kk: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, kk: (b, kk, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, kk: (b, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, kk: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

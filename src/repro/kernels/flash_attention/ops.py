@@ -1,0 +1,49 @@
+"""Public flash-attention op: Pallas forward + exact recompute backward."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal=True, window=0, cap=0.0,
+                    interpret=None):
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return K.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 cap=cap, interpret=itp)
+
+
+def _fwd(q, k, v, causal, window, cap, interpret):
+    return flash_attention(q, k, v, causal, window, cap, interpret), (q, k, v)
+
+
+def _bwd(causal, window, cap, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window, cap=cap), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def mha_flash(q, k, v, *, causal=True, window=0, cap=0.0, interpret=None):
+    """(B,S,H,hd) x (B,T,K,hd) GQA convenience wrapper -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, T, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, T, hd)
+    out = flash_attention(qf, kf, vf, causal, window, cap, interpret)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash attention (exact softmax attention)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        cap: float = 0.0, scale: float | None = None
+                        ) -> jax.Array:
+    """q: (BH,S,d); k/v: (BH,T,d)."""
+    BH, S, d = q.shape
+    T = k.shape[1]
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bsd,btd->bst", q, k,
+                   preferred_element_type=jnp.float32) * sc
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    # fully-masked rows -> zeros (match kernel's safe-divide)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask[None], axis=-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bst,btd->bsd", p.astype(v.dtype), v)

@@ -1,0 +1,112 @@
+"""Paged decode attention with in-kernel RAB translation.
+
+The RAB insight (HERO C2): a tiny software-managed table suffices to let an
+accelerator translate virtual addresses at run time.  Here the table is the
+block table maintained by ``core/rab.py``; the kernel *itself* performs the
+translation on its fast path — the block table is scalar-prefetched (SMEM)
+and indexes the physical KV page pulled into VMEM per grid step.  A -1 entry
+is an unmapped page (never touched: masked + clamped), the slow path
+(allocation) having been handled by the host-side RAB miss handler before
+launch.
+
+Grid (B, max_pages): online-softmax accumulation over one request's pages.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale: float, page_size: int,
+            n_pages: int, groups: int):
+    b, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid_page = bt_ref[b, j] >= 0
+
+    @pl.when(valid_page)
+    def _accumulate():
+        q = q_ref[0]                              # (H, hd)
+        k = k_ref[0]                              # (page, Kv, hd)
+        v = v_ref[0]
+        Kv = k.shape[1]
+        hd = q.shape[-1]
+        qg = q.reshape(Kv, groups, hd)
+        s = jnp.einsum("kgh,pkh->kgp", qg.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale  # (Kv,G,page)
+        tok = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 2)
+        mask = tok < len_ref[b]
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]   # (Kv,G,1)
+        m_cur = jnp.max(s, axis=2, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=2, keepdims=True)
+        ctx = jnp.einsum("kgp,pkh->kgh", p, v.astype(jnp.float32))
+        acc_ref[...] = acc_ref[...] * alpha + ctx
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _flush():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        out = (acc_ref[...] / safe)               # (Kv,G,hd)
+        o_ref[0] = out.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "scale"))
+def paged_attention_fwd(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        block_table: jax.Array, lengths: jax.Array, *,
+                        scale: float | None = None,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B,H,hd); k/v_pages: (P, page, Kv, hd); block_table: (B, max_pages)
+    int32 physical page ids (-1 unmapped); lengths: (B,) tokens per request.
+
+    Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    P, page, Kv, _ = k_pages.shape
+    n_pages = block_table.shape[1]
+    groups = H // Kv
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, j, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, page, Kv, hd),
+                         lambda b, j, bt, ln: (jnp.maximum(bt[b, j], 0), 0, 0, 0)),
+            pl.BlockSpec((1, page, Kv, hd),
+                         lambda b, j, bt, ln: (jnp.maximum(bt[b, j], 0), 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, j, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Kv, groups, 1), jnp.float32),
+            pltpu.VMEM((Kv, groups, 1), jnp.float32),
+            pltpu.VMEM((Kv, groups, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=sc, page_size=page,
+                          n_pages=n_pages, groups=groups),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, q, k_pages, v_pages)

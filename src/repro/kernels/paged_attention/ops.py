@@ -1,0 +1,18 @@
+"""Public paged-attention op (decode fast path of the serving engine)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention import kernel as K
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def paged_attention(q, k_pages, v_pages, block_table, lengths, *,
+                    interpret=None):
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return K.paged_attention_fwd(q, k_pages, v_pages, block_table, lengths,
+                                 interpret=itp)

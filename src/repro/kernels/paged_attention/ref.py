@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for paged decode attention: gather pages, dense attend."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        block_table: jax.Array, lengths: jax.Array, *,
+                        scale: float | None = None) -> jax.Array:
+    """Same contract as kernel.paged_attention_fwd."""
+    B, H, hd = q.shape
+    P, page, Kv, _ = k_pages.shape
+    n_pages = block_table.shape[1]
+    G = H // Kv
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    safe_bt = jnp.maximum(block_table, 0)                     # (B, n_pages)
+    k = k_pages[safe_bt]                                      # (B,n,page,Kv,hd)
+    v = v_pages[safe_bt]
+    T = n_pages * page
+    k = k.reshape(B, T, Kv, hd)
+    v = v.reshape(B, T, Kv, hd)
+
+    qg = q.reshape(B, Kv, G, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sc
+    tok = jnp.arange(T)[None, :]
+    mask = (tok < lengths[:, None])[:, None, None, :]
+    page_ok = jnp.repeat(block_table >= 0, page, axis=1)[:, None, None, :]
+    s = jnp.where(mask & page_ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask & page_ok, axis=-1, keepdims=True), p, 0.0)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions the step function),
+  * the per-device memory footprint fits (memory_analysis),
+  * and it yields the roofline inputs (cost_analysis + collective bytes).
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import all_cells, get_config, get_shape, SHAPES
+from repro.launch import mesh as mesh_lib
+from repro.launch.hlo_stats import (
+    collective_stats, collective_stats_corrected, dot_flops,
+    total_collective_bytes,
+)
+from repro.models import steps as ST
+from repro.parallel.sharding import mesh_context, sharding_profile
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             keep_hlo: bool = False, profile: str = "megatron") -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = cfg.shape_applicable(shape)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "seq_len": shape.seq_len,
+           "global_batch": shape.global_batch, "profile": profile}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with sharding_profile(profile), mesh_context(mesh):
+        fn, arg_specs = ST.lowerable(cfg, shape, mesh, profile=profile)
+        lowered = fn.lower(*arg_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        mem_rec = {}
+        for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+            mem_rec[field] = getattr(mem, field, None)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        cost_rec = {k: float(v) for k, v in cost.items()
+                    if isinstance(v, (int, float)) and k in
+                    ("flops", "bytes accessed", "transcendentals",
+                     "bytes accessed output", "optimal_seconds")}
+
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        coll_tpu = collective_stats_corrected(hlo)
+        rec.update(
+            status="ok",
+            devices=mesh.devices.size,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=mem_rec,
+            cost=cost_rec,
+            collectives=coll,
+            collective_bytes=total_collective_bytes(coll),
+            collective_bytes_tpu=total_collective_bytes(coll_tpu),
+            dot_flops=dot_flops(hlo),
+            hlo_ops=hlo.count("\n"),
+        )
+        if keep_hlo:
+            rec["hlo_path"] = str(ARTIFACTS / f"{arch}__{shape_name}__{mesh_name}.hlo")
+            Path(rec["hlo_path"]).write_text(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--profile", default="megatron",
+                    choices=["megatron", "fsdp", "serve"])
+    args = ap.parse_args()
+
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.all:
+        for cfg, shape, ok, why in all_cells():
+            cells.append((cfg.name, shape.name))
+    else:
+        archs = [args.arch] if args.arch else [c for c in SHAPES]
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        cells = [(args.arch, s) for s in shapes] if args.arch else \
+                [(a, args.shape) for a in archs]
+
+    n_fail = 0
+    suffix = "" if args.profile == "megatron" else f"__{args.profile}"
+    for arch, shape_name in cells:
+        for mp in meshes:
+            mesh_name = "multi" if mp else "single"
+            out = ARTIFACTS / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+            try:
+                rec = run_cell(arch, shape_name, mp, keep_hlo=args.keep_hlo,
+                               profile=args.profile)
+            except Exception as e:  # noqa: BLE001 - record and continue
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                n_fail += 1
+            out.write_text(json.dumps(rec, indent=2, default=str))
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                gib = (rec["memory"]["argument_size_in_bytes"] or 0) / 2**30
+                extra = (f"args={gib:.2f}GiB tmp="
+                         f"{(rec['memory']['temp_size_in_bytes'] or 0)/2**30:.2f}GiB "
+                         f"flops={rec['cost'].get('flops', 0):.3e} "
+                         f"coll={rec['collective_bytes']/2**30:.3f}GiB "
+                         f"compile={rec['compile_s']}s")
+            elif status == "error":
+                extra = rec["error"][:160]
+            elif status == "skipped":
+                extra = rec["reason"][:80]
+            print(f"[{status:7s}] {arch:18s} {shape_name:12s} {mesh_name:6s} {extra}",
+                  flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+    print("DRY-RUN COMPLETE")
+
+
+if __name__ == "__main__":
+    main()

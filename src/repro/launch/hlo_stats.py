@@ -1,0 +1,274 @@
+"""Trip-count-aware HLO cost extraction (collective bytes + dot FLOPs).
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, and has no
+collective-bytes entry at all.  Scanned-layer training graphs would therefore
+be undercounted ~L x.  This module parses the per-device, SPMD-partitioned
+HLO text into computations, builds the call graph, derives each while loop's
+trip count from its condition's comparison constant, and multiplies every
+computation's costs by its execution count.
+
+Extracted per module:
+  * collective stats: count/operand/result bytes per collective kind
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), trip-multiplied;
+  * dot FLOPs: 2 * prod(result_dims) * contract_size per dot, trip-multiplied
+    (an exact re-count of cost_analysis()'s flops that is loop-correct).
+
+CPU-backend caveat handled here: the CPU emitter upcasts bf16 dot operands to
+f32 *before* partitioning, so collectives that would be bf16 on the TPU
+target appear as f32.  ``corrected=True`` halves f32 collectives >= 1 MiB.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{")
+_CALLED_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _dims(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(",") if d]
+
+
+class HloModule:
+    """Light structural parse of HLO text: computations, calls, whiles."""
+
+    def __init__(self, text: str):
+        self.comp_lines: Dict[str, List[str]] = {}
+        self.is_entry: Optional[str] = None
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            stripped = line.rstrip()
+            if not stripped:
+                continue
+            # computation headers sit at column 0 and end with '{'
+            # (ops are indented; tuple-typed params make regexes unreliable)
+            if not line.startswith(" ") and stripped.endswith("{") \
+                    and "->" in stripped:
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", stripped)
+                if m:
+                    cur = m.group(1)
+                    self.comp_lines[cur] = []
+                    if stripped.startswith("ENTRY"):
+                        self.is_entry = cur
+                    continue
+            if stripped.strip() == "}":
+                continue
+            if cur is not None:
+                self.comp_lines[cur].append(stripped)
+        if getattr(self, "is_entry", None) is None:
+            # fall back: computation named main-ish or the last one
+            names = list(self.comp_lines)
+            entry = [n for n in names if "main" in n]
+            self.is_entry = entry[0] if entry else (names[-1] if names else "")
+        self._trip_cache: Dict[str, int] = {}
+        self._mult = self._execution_counts()
+
+    # -- call graph -------------------------------------------------------
+    def _body_cond_pairs(self, comp: str) -> List[Tuple[str, str]]:
+        out = []
+        for line in self.comp_lines.get(comp, ()):
+            if re.search(r"\bwhile\(", line):
+                c = re.search(r"condition=%?([\w.\-]+)", line)
+                b = re.search(r"body=%?([\w.\-]+)", line)
+                if c and b:
+                    out.append((b.group(1), c.group(1)))
+        return out
+
+    def _plain_calls(self, comp: str) -> List[str]:
+        out = []
+        for line in self.comp_lines.get(comp, ()):
+            if re.search(r"\bwhile\(", line):
+                continue
+            for m in _CALLED_RE.finditer(line):
+                for name in m.group(1).split(","):
+                    out.append(name.strip().lstrip("%"))
+        return out
+
+    def trip_count(self, cond_comp: str) -> int:
+        """Largest s32 comparison constant in the while condition."""
+        if cond_comp in self._trip_cache:
+            return self._trip_cache[cond_comp]
+        best = 1
+        for line in self.comp_lines.get(cond_comp, ()):
+            for m in re.finditer(r"constant\((\d+)\)", line):
+                best = max(best, int(m.group(1)))
+        self._trip_cache[cond_comp] = best
+        return best
+
+    def _execution_counts(self) -> Dict[str, float]:
+        mult: Dict[str, float] = defaultdict(float)
+        seen_stack = set()
+
+        def visit(comp: str, k: float):
+            if comp not in self.comp_lines or comp in seen_stack:
+                return
+            mult[comp] += k
+            seen_stack.add(comp)
+            for body, cond in self._body_cond_pairs(comp):
+                t = self.trip_count(cond)
+                visit(cond, k * (t + 1))
+                visit(body, k * t)
+            for callee in self._plain_calls(comp):
+                visit(callee, k)
+            seen_stack.discard(comp)
+
+        visit(self.is_entry, 1.0)
+        return dict(mult)
+
+    def multiplier(self, comp: str) -> float:
+        return self._mult.get(comp, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Collectives
+# ---------------------------------------------------------------------------
+
+def _first_shapes_bytes(text: str) -> int:
+    return sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(text))
+
+
+def collective_stats(hlo_text: str, corrected: bool = False
+                     ) -> Dict[str, Dict[str, float]]:
+    """Per-kind {count, operand_bytes, result_bytes}, trip-multiplied."""
+    mod = HloModule(hlo_text)
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0.0, "operand_bytes": 0.0, "result_bytes": 0.0})
+    for comp, lines in mod.comp_lines.items():
+        k = mod.multiplier(comp)
+        if k == 0.0:
+            continue
+        # name -> result bytes, for operand-by-name fallback
+        name_bytes: Dict[str, int] = {}
+        for line in lines:
+            m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)", line)
+            if m:
+                head = m.group(2).split("(", 1)[0]
+                name_bytes[m.group(1)] = _first_shapes_bytes(head)
+        for line in lines:
+            for kind in COLLECTIVES:
+                if not re.search(rf"\b{kind}(?:-start)?\(", line):
+                    continue
+                m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)", line)
+                if not m:
+                    continue
+                rhs = m.group(1)
+                head, _, args = rhs.partition("(")
+                args = args.rsplit(")", 1)[0]
+                rb = _first_shapes_bytes(head)
+                ob = _first_shapes_bytes(args)
+                if ob == 0:
+                    for nm in re.findall(r"%([\w.\-]+)", args):
+                        ob += name_bytes.get(nm, 0)
+                if corrected and _is_big_f32(head):
+                    rb, ob = rb * 0.5, ob * 0.5
+                d = out[kind]
+                d["count"] += k
+                d["operand_bytes"] += k * ob
+                d["result_bytes"] += k * rb
+                break
+    return dict(out)
+
+
+def _is_big_f32(head: str) -> bool:
+    m = _SHAPE_RE.search(head)
+    return bool(m and m.group(1) == "f32" and
+                _shape_bytes(m.group(1), m.group(2)) >= 2 ** 20)
+
+
+def collective_stats_corrected(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    return collective_stats(hlo_text, corrected=True)
+
+
+def total_collective_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    """Per-device bytes on the wire, with per-kind ring-cost weights.
+
+    all-reduce moves ~2x its operand (reduce-scatter + all-gather phases);
+    the others move ~1x their operand/result size.
+    """
+    total = 0.0
+    for kind, d in stats.items():
+        if kind == "all-reduce":
+            total += 2.0 * d["operand_bytes"]
+        elif kind == "all-gather":
+            total += max(d["result_bytes"], d["operand_bytes"])
+        else:
+            total += d["operand_bytes"]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Dot FLOPs (loop-corrected re-count of cost_analysis flops)
+# ---------------------------------------------------------------------------
+
+_DOT_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*\bdot\((.*?)\),\s*"
+    r"lhs_batch_dims={([0-9,]*)}[^l]*lhs_contracting_dims={([0-9,]*)}")
+_DOT_RE2 = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*\bdot\((.*?)\),\s*"
+    r"lhs_contracting_dims={([0-9,]*)}")
+
+
+_DOT_LINE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*\bdot\((.*?)\).*?"
+    r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def dot_flops(hlo_text: str) -> float:
+    mod = HloModule(hlo_text)
+    total = 0.0
+    for comp, lines in mod.comp_lines.items():
+        k = mod.multiplier(comp)
+        if k == 0.0:
+            continue
+        # name -> dims, for operands printed by name only
+        name_dims: Dict[str, List[int]] = {}
+        for line in lines:
+            m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+                         r"([a-z0-9]+)\[([0-9,]*)\]", line)
+            if m:
+                name_dims[m.group(1)] = _dims(m.group(3))
+        for line in lines:
+            if "dot(" not in line:
+                continue
+            m = _DOT_LINE.search(line)
+            if not m:
+                continue
+            res_dims = _dims(m.group(2))
+            args, contract = m.group(3), _dims(m.group(4))
+            shapes = _SHAPE_RE.findall(args)
+            if shapes:
+                lhs_dims = _dims(shapes[0][1])
+            else:
+                names = re.findall(r"%([\w.\-]+)", args)
+                lhs_dims = name_dims.get(names[0], []) if names else []
+            csize = 1
+            for c in contract:
+                if c < len(lhs_dims):
+                    csize *= lhs_dims[c]
+            total += k * 2.0 * math.prod(res_dims or [1]) * csize
+    return total

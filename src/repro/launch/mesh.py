@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module does not touch jax device state.  The dry-run process
+sets XLA_FLAGS --xla_force_host_platform_device_count=512 before any jax
+import; everything else (smoke tests, benches) sees the real single device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many (possibly virtual) devices exist."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (the roofline target)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_LINK_BW = 50e9             # bytes/s per link

@@ -1,0 +1,337 @@
+"""Attention: GQA (full-seq chunked + decode) and MLA (deepseek-v2).
+
+Full-sequence attention is computed as an exact scan over query chunks so
+that (q_chunk, T) score tiles — never (S, T) — are materialized.  This is the
+XLA-level analogue of the flash kernel (``repro/kernels/flash_attention``
+provides the Pallas version for the TPU target; both agree with the same
+oracle).
+
+Masks are never materialized globally: they are built inside each chunk from
+position iotas, so sliding-window / causal / bidirectional variants are pure
+elementwise fusions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import ParamFactory, shard, current_mesh
+from repro.models.layers import rope, rms_head_norm, softcap
+
+NEG_INF = -1e30
+
+
+def _tp_size() -> int:
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    return mesh.shape.get("model", 1)
+
+
+def kv_cache_axes(cfg: ArchConfig) -> Tuple[Optional[str], ...]:
+    """(B, T, kv, hd) cache sharding: heads-TP if divisible, else seq."""
+    tp = _tp_size()
+    if cfg.num_kv_heads % tp == 0:
+        return ("dp", None, "tp", None)
+    return ("dp", "sp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Parameter builders
+# ---------------------------------------------------------------------------
+
+def build_gqa(f: ParamFactory, cfg: ArchConfig, name: str = "attn"):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    with f.scope(name):
+        p = {
+            "wq": f("wq", (d, H, hd), ("fsdp", "tp", None)),
+            "wk": f("wk", (d, K, hd), ("fsdp", "tp", None)),
+            "wv": f("wv", (d, K, hd), ("fsdp", "tp", None)),
+            "wo": f("wo", (H, hd, d), ("tp", None, "fsdp"), fan_in=H * hd),
+        }
+        if cfg.use_qk_norm:
+            p["q_norm"] = f("q_norm", (hd,), (None,), init="ones", dtype=jnp.float32)
+            p["k_norm"] = f("k_norm", (hd,), (None,), init="ones", dtype=jnp.float32)
+        return p
+
+
+def build_cross_attn(f: ParamFactory, cfg: ArchConfig, name: str = "xattn"):
+    return build_gqa(f, cfg, name)
+
+
+def build_mla(f: ParamFactory, cfg: ArchConfig, name: str = "attn"):
+    d, H = cfg.d_model, cfg.num_heads
+    r_kv, r_q = cfg.mla_kv_lora_rank, cfg.mla_q_lora_rank
+    dn, dr, dv = cfg.mla_qk_nope_dim, cfg.mla_qk_rope_dim, cfg.mla_v_head_dim
+    with f.scope(name):
+        return {
+            "w_dq": f("w_dq", (d, r_q), ("fsdp", None)),
+            "q_norm": f("q_norm", (r_q,), (None,), init="ones", dtype=jnp.float32),
+            "w_uq": f("w_uq", (r_q, H, dn + dr), (None, "tp", None), fan_in=r_q),
+            "w_dkv": f("w_dkv", (d, r_kv + dr), ("fsdp", None)),
+            "kv_norm": f("kv_norm", (r_kv,), (None,), init="ones", dtype=jnp.float32),
+            "w_uk": f("w_uk", (r_kv, H, dn), (None, "tp", None), fan_in=r_kv),
+            "w_uv": f("w_uv", (r_kv, H, dv), (None, "tp", None), fan_in=r_kv),
+            "wo": f("wo", (H, dv, d), ("tp", None, "fsdp"), fan_in=H * dv),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def attend_fullseq(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   q_positions: jax.Array, k_positions: jax.Array,
+                   causal: bool, window: int = 0, cap: float = 0.0,
+                   chunk: int = 512, scale: Optional[float] = None) -> jax.Array:
+    """Exact chunked attention.
+
+    q: (B,S,H,hd), k/v: (B,T,K,hd), GQA via H = K*G.
+    q_positions: (S,), k_positions: (T,).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    # Unrolled query chunking (max 8 chunks): bounds the live (c, T) score
+    # tile without a lax.scan, whose stacked/transposed xs resist GSPMD
+    # partitioning (involuntary remat).  Static slices partition cleanly.
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    n = S // c
+    if n > 8:
+        n = max(i for i in range(1, 9) if S % i == 0)
+        c = S // n
+
+    def one_chunk(qc, qpos, kk, vv, kpos):
+        # qc: (B,c,K,G,hd); qpos: (c,); kk/vv: (B,t,K,hd); kpos: (t,)
+        s = jnp.einsum("bckgh,btkh->bckgt", qc, kk,
+                       preferred_element_type=jnp.float32) * sc
+        s = softcap(s, cap)
+        mask = jnp.ones((qc.shape[1], kk.shape[1]), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bckgt,btkh->bckgh", pr, vv)
+
+    qg = q.reshape(B, S, K, G, hd)
+    # sliding-window + causal (self-attention) layers only ever see keys in
+    # (qpos - window, qpos]: statically slice the K/V band per query chunk
+    # instead of masking the full T (perf iteration 4 — cuts local-layer
+    # attention FLOPs from S*T to ~S*(window+c))
+    banded = bool(window) and causal and q_positions.shape[0] == T and S == T
+    outs = []
+    for i in range(n):
+        lo, hi = 0, T
+        if banded:
+            lo = max(0, i * c - window + 1)
+            hi = min(T, i * c + c)
+        outs.append(one_chunk(qg[:, i * c:(i + 1) * c],
+                              q_positions[i * c:(i + 1) * c],
+                              k[:, lo:hi], v[:, lo:hi], k_positions[lo:hi]))
+    out = outs[0] if n == 1 else jnp.concatenate(outs, axis=1)
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+def attend_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  lengths: jax.Array, k_positions: jax.Array,
+                  window: int = 0, cap: float = 0.0,
+                  scale: Optional[float] = None) -> jax.Array:
+    """One-token decode attention against a (ring or linear) cache.
+
+    q: (B,1,H,hd); k/v: (B,T,K,hd); lengths: (B,) current position (the new
+    token's position); k_positions: (B,T) absolute position stored per slot
+    (rings make slot != position).
+    """
+    B, _, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k,
+                   preferred_element_type=jnp.float32) * sc
+    s = softcap(s, cap)
+    mask = k_positions <= lengths[:, None]                      # (B,T)
+    if window:
+        mask &= (lengths[:, None] - k_positions) < window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgt,btkh->bkgh", pr, v)
+    return out.reshape(B, 1, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA block-level forward
+# ---------------------------------------------------------------------------
+
+def gqa_fullseq(cfg: ArchConfig, p, x: jax.Array, positions: jax.Array, *,
+                window: int = 0, causal: bool = True,
+                kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                kv_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence GQA (train / prefill / encoder / cross-attention)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        kpos = positions
+    else:
+        k, v = kv_override
+        kpos = kv_positions
+    if cfg.use_qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps) if kv_override is None else k
+    if cfg.use_rope and kv_override is None:
+        q = rope(q, positions[None, :], cfg.rope_theta)
+        k = rope(k, kpos[None, :], cfg.rope_theta)
+    q = shard(q, "dp", None, "tp", None)
+    k = shard(k, "dp", None, "tp", None)
+    v = shard(v, "dp", None, "tp", None)
+    out = attend_fullseq(q, k, v, q_positions=positions, k_positions=kpos,
+                         causal=causal, window=window, cap=cfg.attn_softcap)
+    # pin the concat output to the head-TP layout so its backward split does
+    # not force GSPMD into involuntary full rematerialization
+    out = shard(out, "dp", None, "tp", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def gqa_make_kv(cfg: ArchConfig, p, x: jax.Array, positions: jax.Array,
+                apply_rope: bool = True):
+    """K/V for cross-attention caches (encoder side)."""
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.use_rope and apply_rope:
+        k = rope(k, positions[None, :], cfg.rope_theta)
+    return k, v
+
+
+def gqa_decode(cfg: ArchConfig, p, x: jax.Array, pos: jax.Array,
+               k_cache: jax.Array, v_cache: jax.Array, slot: jax.Array,
+               k_positions: jax.Array, *, window: int = 0,
+               update_cache: bool = True):
+    """One-token GQA decode.
+
+    x: (B,1,d); pos: (B,) absolute positions; slot: (B,) cache slot to write
+    (== pos for linear caches, pos % W for ring caches); k_positions: (B,T)
+    absolute position per slot, already updated for this token by the caller
+    (positions are shared across layers and updated once per step).
+    Returns (out, k_cache, v_cache).
+    """
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.use_qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.use_rope:
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k = rope(k, pos[:, None], cfg.rope_theta)
+
+    if update_cache:
+        def upd(cache_b, new_b, s):
+            return jax.lax.dynamic_update_slice(cache_b, new_b, (s, 0, 0))
+        k_cache = jax.vmap(upd)(k_cache, k, slot)
+        v_cache = jax.vmap(upd)(v_cache, v, slot)
+    k_cache = shard(k_cache, *kv_cache_axes(cfg))
+    v_cache = shard(v_cache, *kv_cache_axes(cfg))
+    out = attend_decode(q, k_cache, v_cache, lengths=pos,
+                        k_positions=k_positions, window=window,
+                        cap=cfg.attn_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+def _mla_q(cfg: ArchConfig, p, x, positions):
+    dn, dr = cfg.mla_qk_nope_dim, cfg.mla_qk_rope_dim
+    cq = jnp.einsum("bsd,dr->bsr", x, p["w_dq"])
+    cq = rms_head_norm(p["q_norm"], cq, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])       # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions if positions.ndim == 2 else positions[None, :],
+                  cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_compress_kv(cfg: ArchConfig, p, x, positions):
+    """(B,S,r_kv) normed compressed KV + (B,S,dr) roped shared key."""
+    r_kv, dr = cfg.mla_kv_lora_rank, cfg.mla_qk_rope_dim
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])       # (B,S,r_kv+dr)
+    c, k_rope = ckv[..., :r_kv], ckv[..., r_kv:]
+    c = rms_head_norm(p["kv_norm"], c, cfg.norm_eps)
+    k_rope = rope(k_rope[..., None, :],
+                  positions if positions.ndim == 2 else positions[None, :],
+                  cfg.rope_theta)[..., 0, :]
+    return c, k_rope
+
+
+def mla_fullseq(cfg: ArchConfig, p, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Training/prefill MLA: decompress per-head K/V (heads are TP-sharded)."""
+    B, S, _ = x.shape
+    dn, dv = cfg.mla_qk_nope_dim, cfg.mla_v_head_dim
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    c, k_rope = mla_compress_kv(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["w_uk"])    # (B,S,H,dn)
+    v = jnp.einsum("bsr,rhk->bshk", c, p["w_uv"])         # (B,S,H,dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          (B, S, cfg.num_heads, k_rope.shape[-1]))],
+                        axis=-1)
+    q = shard(q, "dp", None, "tp", None)
+    k = shard(k, "dp", None, "tp", None)
+    v = shard(v, "dp", None, "tp", None)
+    scale = 1.0 / math.sqrt(dn + cfg.mla_qk_rope_dim)
+    out = attend_fullseq(q, k, v, q_positions=positions, k_positions=positions,
+                         causal=True, chunk=512, scale=scale)
+    out = shard(out, "dp", None, "tp", None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_decode(cfg: ArchConfig, p, x: jax.Array, pos: jax.Array,
+               c_cache: jax.Array, rope_cache: jax.Array, slot: jax.Array,
+               k_positions: jax.Array):
+    """Absorbed-matrix MLA decode against the compressed cache.
+
+    c_cache: (B,T,r_kv); rope_cache: (B,T,dr).  Scores are computed directly
+    in compressed space: q_c = q_nope @ W_uk  (absorb), ctx_c = probs @ c,
+    v = ctx_c @ W_uv.  This is the deepseek-v2 serving formulation — the KV
+    cache is 576 B/token instead of 2*H*128.
+    """
+    B = x.shape[0]
+    dn = cfg.mla_qk_nope_dim
+    q_nope, q_rope = _mla_q(cfg, p, x, pos[:, None])      # (B,1,H,*)
+    c_new, kr_new = mla_compress_kv(cfg, p, x, pos[:, None])
+
+    def upd2(cache_b, new_b, s):
+        return jax.lax.dynamic_update_slice(cache_b, new_b, (s, 0))
+    c_cache = jax.vmap(upd2)(c_cache, c_new, slot)
+    rope_cache = jax.vmap(upd2)(rope_cache, kr_new, slot)
+    c_cache = shard(c_cache, "dp", "sp", None)
+    rope_cache = shard(rope_cache, "dp", "sp", None)
+
+    q_c = jnp.einsum("bshn,rhn->bshr", q_nope, p["w_uk"])  # absorbed (B,1,H,r_kv)
+    s_c = jnp.einsum("bshr,btr->bhst", q_c, c_cache,
+                     preferred_element_type=jnp.float32)
+    s_r = jnp.einsum("bshr,btr->bhst", q_rope, rope_cache,
+                     preferred_element_type=jnp.float32)
+    scale = 1.0 / math.sqrt(dn + cfg.mla_qk_rope_dim)
+    s = (s_c + s_r) * scale
+    mask = (k_positions <= pos[:, None])[:, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(c_cache.dtype)
+    ctx_c = jnp.einsum("bhst,btr->bshr", pr, c_cache)      # (B,1,H,r_kv)
+    out = jnp.einsum("bshr,rhv->bshv", ctx_c, p["w_uv"])   # (B,1,H,dv)
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return out, c_cache, rope_cache

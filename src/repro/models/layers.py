@@ -1,0 +1,167 @@
+"""Shared model primitives: norms, RoPE, MLPs, embeddings, chunked loss."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import ParamFactory, shard
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def build_norm(f: ParamFactory, cfg: ArchConfig, name: str, dim: int):
+    with f.scope(name):
+        p = {"scale": f("scale", (dim,), (None,), init="ones", dtype=jnp.float32)}
+        if cfg.norm_eps and cfg.mlp_kind == "gelu" and cfg.block_kind == "encdec":
+            # whisper uses LayerNorm (with bias)
+            p["bias"] = f("bias", (dim,), (None,), init="zeros", dtype=jnp.float32)
+        return p
+
+
+def norm_forward(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # LayerNorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"] + p["bias"]
+    else:  # RMSNorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
+    """Per-head RMSNorm over the trailing head_dim (qwen3/olmoe qk-norm)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, rotate-half convention.
+
+    x: (..., S, H, hd) with matching positions (..., S) broadcastable.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def build_mlp(f: ParamFactory, cfg: ArchConfig, name: str, d: int, ff: int):
+    with f.scope(name):
+        p = {}
+        if cfg.mlp_kind in ("swiglu", "geglu"):
+            p["w_gate"] = f("w_gate", (d, ff), ("fsdp", "tp"))
+            p["w_up"] = f("w_up", (d, ff), ("fsdp", "tp"))
+        else:  # gelu (ungated)
+            p["w_up"] = f("w_up", (d, ff), ("fsdp", "tp"))
+        p["w_down"] = f("w_down", (ff, d), ("tp", "fsdp"), fan_in=ff)
+        return p
+
+
+def mlp_forward(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        gate = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        act = jax.nn.silu(gate) if cfg.mlp_kind == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up)
+    h = shard(h, "dp", None, "tp")
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding + chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+def build_embedding(f: ParamFactory, cfg: ArchConfig):
+    p = {"table": f("table", (cfg.vocab_size, cfg.d_model), ("tp", "fsdp"),
+                    fan_in=cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["head"] = f("head", (cfg.vocab_size, cfg.d_model), ("tp", "fsdp"),
+                      fan_in=cfg.d_model)
+    return p
+
+
+def embed_tokens(cfg: ArchConfig, p, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(p["table"], tokens, axis=0)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    # residual stream is sequence-parallel between blocks (Megatron-SP style)
+    return shard(x, "dp", "sp", None)
+
+
+def head_matrix(cfg: ArchConfig, p) -> jax.Array:
+    return p["table"] if cfg.tie_embeddings else p["head"]
+
+
+def logits_from_hidden(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    w = head_matrix(cfg, p)
+    logits = jnp.einsum("...d,vd->...v", x, w,
+                        preferred_element_type=jnp.float32)
+    return softcap(logits, cfg.final_softcap)
+
+
+def chunked_xent(cfg: ArchConfig, p, hidden: jax.Array, labels: jax.Array,
+                 chunk: Optional[int] = None) -> jax.Array:
+    """Cross-entropy without materializing full (B,S,V) logits.
+
+    Scans over sequence chunks; with remat-of-dots the backward recomputes
+    each chunk's logits, keeping peak memory at O(B*chunk*V / shards).
+    """
+    B, S, D = hidden.shape
+    c = min(chunk or cfg.loss_chunk, S)
+    while S % c:
+        c -= 1
+    n = S // c
+    if n > 16:  # cap unroll; larger chunks are fine, V/tp is the live dim
+        n = max(i for i in range(1, 17) if S % i == 0)
+        c = S // n
+    w = head_matrix(cfg, p)
+
+    @jax.checkpoint
+    def body(h, lab):
+        logits = jnp.einsum("bcd,vd->bcv", h, w,
+                            preferred_element_type=jnp.float32)
+        logits = softcap(logits, cfg.final_softcap)
+        logits = shard(logits, "dp", None, "tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)              # (B,c)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        correct = jnp.sum(jnp.where(iota == lab[..., None], logits, 0.0),
+                          axis=-1)                            # (B,c)
+        return jnp.sum(lse - correct)
+
+    total = jnp.zeros((), jnp.float32)
+    for i in range(n):
+        total = total + body(hidden[:, i * c:(i + 1) * c],
+                             labels[:, i * c:(i + 1) * c])
+    return total / (B * S)

@@ -1,0 +1,348 @@
+"""Recurrent blocks: mLSTM / sLSTM (xLSTM) and Mamba selective SSM (hymba).
+
+Training-time mLSTM uses the *chunkwise-parallel* formulation (intra-chunk
+quadratic form + inter-chunk recurrent state), the standard way to make
+matrix-memory RNNs MXU-friendly: within a chunk it is an attention-like
+einsum with a decay mask; across chunks a (B,H,hd,hd) state is carried.
+Correctness is pinned against the per-token recurrence in tests.
+
+All state math runs in fp32 (exp-gating is numerically fragile in bf16).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import ParamFactory, shard
+from repro.models.layers import rms_head_norm
+
+NEG_INF = -1e30
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def build_mlstm(f: ParamFactory, cfg: ArchConfig, name: str = "mlstm"):
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    with f.scope(name):
+        return {
+            "wq": f("wq", (d, H, hd), ("fsdp", "tp", None)),
+            "wk": f("wk", (d, H, hd), ("fsdp", "tp", None)),
+            "wv": f("wv", (d, H, hd), ("fsdp", "tp", None)),
+            "w_if": f("w_if", (d, 2 * H), ("fsdp", None), dtype=jnp.float32),
+            "b_if": f("b_if", (2 * H,), (None,), init="zeros", dtype=jnp.float32),
+            "w_og": f("w_og", (d, d), ("fsdp", "tp")),
+            "head_norm": f("head_norm", (H, hd), ("tp", None), init="ones",
+                           dtype=jnp.float32),
+            "w_out": f("w_out", (d, d), ("tp", "fsdp")),
+        }
+
+
+def mlstm_state_specs(cfg: ArchConfig, B: int):
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    return {
+        "C": ((B, H, hd, hd), jnp.float32, ("dp", "tp", None, None)),
+        "n": ((B, H, hd), jnp.float32, ("dp", "tp", None)),
+        "m": ((B, H), jnp.float32, ("dp", "tp")),
+    }
+
+
+def _mlstm_gates(p, x):
+    """(B,S,H) log input gate, log forget gate (sigmoid-gated, stable)."""
+    raw = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    H = raw.shape[-1] // 2
+    log_i = raw[..., :H]                         # exp input gate: log i = raw
+    log_f = -jax.nn.softplus(-raw[..., H:])      # log sigmoid(f_raw)
+    return log_i, log_f
+
+
+def mlstm_fullseq(cfg: ArchConfig, p, x: jax.Array, chunk: int = 256) -> jax.Array:
+    """Chunkwise-parallel mLSTM over the full sequence.  x: (B,S,d)."""
+    B, S, d = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"]).astype(jnp.float32) / math.sqrt(hd)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"]).astype(jnp.float32)
+    log_i, log_f = _mlstm_gates(p, x)
+
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    n_chunks = S // c
+
+    def to_chunks(t):  # (B,S,...) -> (n,B,c,...)
+        return t.reshape((B, n_chunks, c) + t.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = to_chunks(q), to_chunks(k), to_chunks(v)
+    lis, lfs = to_chunks(log_i), to_chunks(log_f)
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), 0.0, jnp.float32)
+
+    def body(carry, xs):
+        C_prev, n_prev, m_prev = carry
+        qc, kc, vc, li, lf = xs                 # (B,c,H,*) / (B,c,H)
+        F = jnp.cumsum(lf, axis=1)              # inclusive log-decay  (B,c,H)
+        b = F + m_prev[:, None, :]              # inter-chunk decay    (B,c,H)
+        # intra-chunk decay matrix D[t,s] = F_t - F_s + li_s  (s <= t)
+        D = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        D = jnp.where(tri[None, :, :, None], D, NEG_INF)
+        m_t = jnp.maximum(jnp.max(D, axis=2), b)        # (B,c,H)
+        m_t = jax.lax.stop_gradient(m_t)
+        dec = jnp.exp(D - m_t[:, :, None, :])           # (B,c,c,H)
+        scores = jnp.einsum("bthk,bshk->btsh", qc, kc) * dec
+        intra = jnp.einsum("btsh,bshk->bthk", scores, vc)
+        inter_w = jnp.exp(b - m_t)                      # (B,c,H)
+        inter = jnp.einsum("bthk,bhkj->bthj", qc, C_prev) * inter_w[..., None]
+        num = intra + inter
+        nvec = jnp.einsum("btsh,bshk->bthk", dec, kc)
+        nvec = nvec + n_prev[:, None, :, :] * inter_w[..., None]
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bthk,bthk->bth", qc, nvec)),
+                            jnp.exp(-m_t))
+        h = num / denom[..., None]                      # (B,c,H,hd)
+
+        # chunk-final state
+        F_tot = F[:, -1, :]                             # (B,H)
+        m_new = jnp.maximum(F_tot + m_prev,
+                            jnp.max(F_tot[:, None, :] - F + li, axis=1))
+        m_new = jax.lax.stop_gradient(m_new)
+        w_old = jnp.exp(F_tot + m_prev - m_new)         # (B,H)
+        w_s = jnp.exp(F_tot[:, None, :] - F + li - m_new[:, None, :])  # (B,c,H)
+        C_new = C_prev * w_old[..., None, None] + \
+            jnp.einsum("bsh,bshk,bshj->bhkj", w_s, kc, vc)
+        n_new = n_prev * w_old[..., None] + jnp.einsum("bsh,bshk->bhk", w_s, kc)
+        return (C_new, n_new, m_new), h
+
+    (_, _, _), hs = jax.lax.scan(body, (C0, n0, m0), (qs, ks, vs, lis, lfs))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, hd)          # (B,S,H,hd)
+    h = rms_head_norm(p["head_norm"], h, cfg.norm_eps)
+    h = h.reshape(B, S, d).astype(x.dtype)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_og"]))
+    return jnp.einsum("bsd,de->bse", h * og, p["w_out"])
+
+
+def mlstm_decode(cfg: ArchConfig, p, x: jax.Array, state: dict) -> Tuple[jax.Array, dict]:
+    """Single-token recurrent mLSTM.  x: (B,1,d)."""
+    B, _, d = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])[:, 0].astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])[:, 0].astype(jnp.float32) / math.sqrt(hd)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])[:, 0].astype(jnp.float32)
+    log_i, log_f = _mlstm_gates(p, x)
+    li, lf = log_i[:, 0], log_f[:, 0]                   # (B,H)
+
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    w_old = jnp.exp(lf + m - m_new)
+    w_in = jnp.exp(li - m_new)
+    C = C * w_old[..., None, None] + \
+        jnp.einsum("bhk,bhj->bhkj", k * w_in[..., None], v)
+    n = n * w_old[..., None] + k * w_in[..., None]
+    num = jnp.einsum("bhk,bhkj->bhj", q, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)),
+                        jnp.exp(-m_new))
+    h = num / denom[..., None]                          # (B,H,hd)
+    h = rms_head_norm(p["head_norm"], h, cfg.norm_eps)
+    h = h.reshape(B, 1, d).astype(x.dtype)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["w_og"]))
+    out = jnp.einsum("bsd,de->bse", h * og, p["w_out"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_reference(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    """Per-token oracle for tests (slow lax.scan over S)."""
+    B, S, d = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    state = {
+        "C": jnp.zeros((B, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((B, H, hd), jnp.float32),
+        "m": jnp.zeros((B, H), jnp.float32),
+    }
+
+    def body(st, xt):
+        out, st = mlstm_decode(cfg, p, xt[:, None, :], st)
+        return st, out[:, 0]
+
+    _, ys = jax.lax.scan(body, state, x.swapaxes(0, 1))
+    return ys.swapaxes(0, 1)
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def build_slstm(f: ParamFactory, cfg: ArchConfig, name: str = "slstm"):
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    with f.scope(name):
+        return {
+            "w_in": f("w_in", (d, 4, H, hd), ("fsdp", None, "tp", None)),
+            "r": f("r", (4, H, hd, hd), (None, "tp", None, None), fan_in=hd),
+            "b": f("b", (4, H, hd), (None, "tp", None), init="zeros",
+                   dtype=jnp.float32),
+            "head_norm": f("head_norm", (H, hd), ("tp", None), init="ones",
+                           dtype=jnp.float32),
+            "w_out": f("w_out", (d, d), ("tp", "fsdp")),
+        }
+
+
+def slstm_state_specs(cfg: ArchConfig, B: int):
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    return {
+        "c": ((B, H, hd), jnp.float32, ("dp", "tp", None)),
+        "n": ((B, H, hd), jnp.float32, ("dp", "tp", None)),
+        "m": ((B, H, hd), jnp.float32, ("dp", "tp", None)),
+        "h": ((B, H, hd), jnp.float32, ("dp", "tp", None)),
+    }
+
+
+def _slstm_step(cfg, p, xt_proj, state):
+    """xt_proj: (B,4,H,hd) pre-computed x W_in.  Recurrent R on h."""
+    c, n, m, h = state["c"], state["n"], state["m"], state["h"]
+    rec = jnp.einsum("bhk,ghkj->bghj", h, p["r"].astype(jnp.float32))
+    g = xt_proj.astype(jnp.float32) + rec + p["b"]       # (B,4,H,hd)
+    z = jnp.tanh(g[:, 0])
+    i_raw, f_raw = g[:, 1], g[:, 2]
+    o = jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(f_raw + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(f_raw + m - m_new)
+    c_new = f_g * c + i_g * z
+    n_new = jnp.maximum(f_g * n + i_g, 1e-6)
+    h_new = o * (c_new / n_new)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_fullseq(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    xp = jnp.einsum("bsd,dghk->bsghk", x, p["w_in"])     # (B,S,4,H,hd)
+    state = {k: jnp.zeros(s, dt) for k, (s, dt, _) in
+             slstm_state_specs(cfg, B).items()}
+
+    def body(st, xt):
+        st = _slstm_step(cfg, p, xt, st)
+        return st, st["h"]
+
+    _, hs = jax.lax.scan(body, state, xp.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1)                                # (B,S,H,hd)
+    h = rms_head_norm(p["head_norm"], h, cfg.norm_eps)
+    return jnp.einsum("bsd,de->bse", h.reshape(B, S, d).astype(x.dtype),
+                      p["w_out"])
+
+
+def slstm_decode(cfg: ArchConfig, p, x: jax.Array, state: dict):
+    B, _, d = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    xp = jnp.einsum("bsd,dghk->bsghk", x, p["w_in"])[:, 0]
+    state = _slstm_step(cfg, p, xp, state)
+    h = rms_head_norm(p["head_norm"], state["h"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", h.reshape(B, 1, d).astype(x.dtype),
+                     p["w_out"])
+    return out, state
+
+
+# ===========================================================================
+# Mamba selective SSM (hymba branch)
+# ===========================================================================
+
+def mamba_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(1, -(-cfg.d_model // 16))
+    return d_inner, dt_rank, cfg.ssm_state
+
+
+def build_mamba(f: ParamFactory, cfg: ArchConfig, name: str = "mamba"):
+    d = cfg.d_model
+    di, dtr, N = mamba_dims(cfg)
+    with f.scope(name):
+        return {
+            "w_in": f("w_in", (d, 2 * di), ("fsdp", "tp")),
+            "conv_w": f("conv_w", (cfg.ssm_conv_width, di), (None, "tp")),
+            "conv_b": f("conv_b", (di,), ("tp",), init="zeros"),
+            "w_dt_down": f("w_dt_down", (di, dtr), ("tp", None)),
+            "w_dt_up": f("w_dt_up", (dtr, di), (None, "tp"), fan_in=dtr),
+            "b_dt": f("b_dt", (di,), ("tp",), init="ones", dtype=jnp.float32),
+            "w_B": f("w_B", (di, N), ("tp", None)),
+            "w_C": f("w_C", (di, N), ("tp", None)),
+            "log_A": f("log_A", (di, N), ("tp", None), init="zeros",
+                       dtype=jnp.float32),
+            "D": f("D", (di,), ("tp",), init="ones", dtype=jnp.float32),
+            "w_out": f("w_out", (di, d), ("tp", "fsdp"), fan_in=di),
+        }
+
+
+def mamba_state_specs(cfg: ArchConfig, B: int):
+    di, _, N = mamba_dims(cfg)
+    return {
+        "conv": ((B, cfg.ssm_conv_width - 1, di), jnp.float32, ("dp", None, "tp")),
+        "ssm": ((B, di, N), jnp.float32, ("dp", "tp", None)),
+    }
+
+
+def _mamba_inner(cfg, p, xz, conv_in):
+    """Shared projections. xz: (B,S,2*di); conv_in: (B, S+w-1, di) padded."""
+    di, _, N = mamba_dims(cfg)
+    xpart, z = xz[..., :di], xz[..., di:]
+    w = p["conv_w"].astype(jnp.float32)                  # (w, di)
+    width = cfg.ssm_conv_width
+    conv = sum(conv_in[:, j:j + xpart.shape[1], :].astype(jnp.float32) * w[j]
+               for j in range(width))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dr->bsr", conv, p["w_dt_down"].astype(jnp.float32))
+        @ p["w_dt_up"].astype(jnp.float32) + p["b_dt"])   # (B,S,di)
+    Bp = jnp.einsum("bsd,dn->bsn", conv, p["w_B"].astype(jnp.float32))
+    Cp = jnp.einsum("bsd,dn->bsn", conv, p["w_C"].astype(jnp.float32))
+    return xpart, z, conv, dt, Bp, Cp
+
+
+def mamba_fullseq(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    di, _, N = mamba_dims(cfg)
+    A = -jnp.exp(p["log_A"])                             # (di,N), negative
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xpart = xz[..., :di]
+    pad = jnp.zeros((B, cfg.ssm_conv_width - 1, di), xpart.dtype)
+    conv_in = jnp.concatenate([pad, xpart], axis=1)
+    xpart, z, conv, dt, Bp, Cp = _mamba_inner(cfg, p, xz, conv_in)
+
+    def body(h, xs):
+        dt_t, u_t, B_t, C_t = xs                          # (B,di),(B,di),(B,N),(B,N)
+        a = jnp.exp(dt_t[..., None] * A[None])            # (B,di,N)
+        h = a * h + (dt_t * u_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        body, h0, (dt.swapaxes(0, 1), conv.swapaxes(0, 1),
+                   Bp.swapaxes(0, 1), Cp.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + conv * p["D"]                 # (B,S,di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("bsd,de->bse", y.astype(x.dtype), p["w_out"])
+
+
+def mamba_decode(cfg: ArchConfig, p, x: jax.Array, state: dict):
+    B, _, d = x.shape
+    di, _, N = mamba_dims(cfg)
+    A = -jnp.exp(p["log_A"])
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])          # (B,1,2di)
+    xpart = xz[..., :di]
+    conv_in = jnp.concatenate([state["conv"].astype(xpart.dtype), xpart], axis=1)
+    xpart, z, conv, dt, Bp, Cp = _mamba_inner(cfg, p, xz, conv_in)
+    new_conv = conv_in[:, 1:, :].astype(jnp.float32)
+
+    dt_t, u_t, B_t, C_t = dt[:, 0], conv[:, 0], Bp[:, 0], Cp[:, 0]
+    a = jnp.exp(dt_t[..., None] * A[None])
+    h = a * state["ssm"] + (dt_t * u_t)[..., None] * B_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, C_t) + u_t * p["D"]
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = jnp.einsum("bd,de->be", y.astype(x.dtype), p["w_out"])[:, None, :]
+    return out, {"conv": new_conv, "ssm": h}

@@ -1,0 +1,237 @@
+"""Step builders: train / prefill / decode, with input specs + shardings.
+
+These are the units the launcher jits and the dry-run AOT-compiles:
+
+    train_step(state, batch)        -> (state, metrics)
+    prefill_step(params, batch)     -> logits (B,1,V)
+    decode_step(params, cache, batch) -> (logits, cache)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation), per the dry-run
+contract.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.compress import ef_compress_grads, init_residual
+from repro.parallel.sharding import (
+    Axes, ParamFactory, logical_pspec, mesh_context, sharding_profile,
+    tree_pspecs,
+)
+
+
+def default_opt_cfg(cfg: ArchConfig) -> AdamWConfig:
+    # huge models skip the fp32 master copy to fit HBM (see optim/adamw.py)
+    big = cfg.name in ("deepseek-v2-236b", "qwen3-32b", "pixtral-12b",
+                       "minitron-8b")
+    return AdamWConfig(use_master=not big)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs; the dry-run contract)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    d = jnp.dtype(cfg.param_dtype)
+    if shape.kind == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if cfg.frontend:
+            out["frontend"] = jax.ShapeDtypeStruct((B, cfg.frontend_seq, cfg.d_model), d)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.frontend:
+            out["frontend"] = jax.ShapeDtypeStruct((B, cfg.frontend_seq, cfg.d_model), d)
+        return out
+    # decode: one new token against a cache of S
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def input_axes(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Axes]:
+    if shape.kind == "train":
+        out = {"tokens": Axes(("dp", None)), "labels": Axes(("dp", None))}
+        if cfg.frontend:
+            out["frontend"] = Axes(("dp", None, None))
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": Axes(("dp", None))}
+        if cfg.frontend:
+            out["frontend"] = Axes(("dp", None, None))
+        return out
+    return {"tokens": Axes(("dp", None)), "pos": Axes(("dp",))}
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeSpec, rng: jax.Array):
+    """Concrete synthetic batch matching input_specs (smoke/examples)."""
+    specs = input_specs(cfg, shape)
+    out: Dict[str, jax.Array] = {}
+    for k, sds in specs.items():
+        key = jax.random.fold_in(rng, hash(k) % (2 ** 31))
+        if sds.dtype == jnp.int32:
+            hi = cfg.vocab_size if k in ("tokens", "labels") else max(shape.seq_len, 2)
+            out[k] = jax.random.randint(key, sds.shape, 0, min(hi, 2 ** 30),
+                                        dtype=jnp.int32)
+            if k == "pos":
+                out[k] = jnp.full(sds.shape, shape.seq_len - 1, jnp.int32)
+        else:
+            out[k] = (jax.random.normal(key, sds.shape, jnp.float32) * 0.02
+                      ).astype(sds.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train state
+# ---------------------------------------------------------------------------
+
+def init_train_state(cfg: ArchConfig, opt_cfg: AdamWConfig, rng: jax.Array,
+                     compress: bool = False) -> Dict[str, Any]:
+    params = M.init_params(cfg, rng)
+    st = {"params": params, "opt": init_opt_state(params, opt_cfg)}
+    if compress:
+        st["resid"] = init_residual(params)
+    return st
+
+
+def train_state_specs(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                      compress: bool = False) -> Dict[str, Any]:
+    p = M.param_specs(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    opt = {"m": jax.tree.map(f32, p), "v": jax.tree.map(f32, p),
+           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if opt_cfg.use_master:
+        opt["master"] = jax.tree.map(f32, p)
+    st = {"params": p, "opt": opt}
+    if compress:
+        st["resid"] = jax.tree.map(f32, p)
+    return st
+
+
+def train_state_axes(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                     compress: bool = False) -> Dict[str, Any]:
+    ax = M.param_axes(cfg)
+    opt = {"m": ax, "v": ax, "step": Axes(())}
+    if opt_cfg.use_master:
+        opt["master"] = ax
+    st = {"params": ax, "opt": opt}
+    if compress:
+        st["resid"] = ax
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, opt_cfg: Optional[AdamWConfig] = None,
+                    compress: bool = False):
+    opt_cfg = opt_cfg or default_opt_cfg(cfg)
+
+    def train_step(state: Dict[str, Any], batch: Dict[str, jax.Array]):
+        params = state["params"]
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch))(params)
+        if compress:
+            grads, new_resid = ef_compress_grads(grads, state["resid"])
+        new_params, new_opt, metrics = adamw_update(params, grads,
+                                                    state["opt"], opt_cfg)
+        new_state = {"params": new_params, "opt": new_opt}
+        if compress:
+            new_state["resid"] = new_resid
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return M.prefill_logits(cfg, params, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, cache, batch):
+        return M.decode_forward(cfg, params, cache, batch["tokens"],
+                                batch["pos"])
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly for AOT lowering
+# ---------------------------------------------------------------------------
+
+def _shardings(spec_tree, axes_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, a: NamedSharding(mesh, logical_pspec(s.shape, a.axes, mesh)),
+        spec_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def lowerable(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+              opt_cfg: Optional[AdamWConfig] = None,
+              compress: bool = False, profile: str = "megatron"):
+    """(jitted_fn, arg_specs) ready for .lower(*arg_specs) under `mesh`.
+
+    The returned callable must be lowered inside
+    ``mesh_context(mesh)`` + ``sharding_profile(profile)`` so model-internal
+    sharding constraints resolve against the same mesh/profile.
+    """
+    opt_cfg = opt_cfg or default_opt_cfg(cfg)
+    if shape.kind != "train":
+        # prefill/decode have no backward: unrolled compiles are cheap and
+        # give exact (no trip-count-corrected) HLO cost accounting
+        import dataclasses
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    with sharding_profile(profile), mesh_context(mesh):
+        return _lowerable_inner(cfg, shape, mesh, opt_cfg, compress)
+
+
+def _lowerable_inner(cfg, shape, mesh, opt_cfg, compress):
+    repl = NamedSharding(mesh, P())
+    b_specs = input_specs(cfg, shape)
+    b_shard = _shardings(b_specs, input_axes(cfg, shape), mesh)
+
+    if shape.kind == "train":
+        st_specs = train_state_specs(cfg, opt_cfg, compress)
+        st_shard = _shardings(st_specs, train_state_axes(cfg, opt_cfg, compress),
+                              mesh)
+        metric_shard = {"loss": repl, "grad_norm": repl, "lr": repl}
+        fn = jax.jit(make_train_step(cfg, opt_cfg, compress),
+                     in_shardings=(st_shard, b_shard),
+                     out_shardings=(st_shard, metric_shard),
+                     donate_argnums=(0,))
+        return fn, (st_specs, b_specs)
+
+    p_specs = M.param_specs(cfg)
+    p_shard = _shardings(p_specs, M.param_axes(cfg), mesh)
+
+    if shape.kind == "prefill":
+        fn = jax.jit(make_prefill_step(cfg),
+                     in_shardings=(p_shard, b_shard),
+                     out_shardings=None)
+        return fn, (p_specs, b_specs)
+
+    T = max(cfg.cache_len(shape), 1)
+    B = shape.global_batch
+    c_specs = M.cache_specs(cfg, B, T)
+    c_shard = _shardings(c_specs, M.cache_axes(cfg, B, T), mesh)
+    fn = jax.jit(make_decode_step(cfg),
+                 in_shardings=(p_shard, c_shard, b_shard),
+                 out_shardings=(None, c_shard),
+                 donate_argnums=(1,))
+    return fn, (p_specs, c_specs, b_specs)

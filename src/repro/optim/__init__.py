@@ -1,0 +1,12 @@
+from repro.optim.adamw import (
+    AdamWConfig, init_opt_state, adamw_update, cosine_lr, clip_by_global_norm,
+)
+from repro.optim.compress import (
+    compress_int8, decompress_int8, ef_compress_grads, init_residual,
+)
+
+__all__ = [
+    "AdamWConfig", "init_opt_state", "adamw_update", "cosine_lr",
+    "clip_by_global_norm", "compress_int8", "decompress_int8",
+    "ef_compress_grads", "init_residual",
+]

@@ -1,0 +1,9 @@
+from repro.parallel.sharding import (
+    mesh_context, current_mesh, logical_pspec, shard, named_sharding,
+    ParamFactory, LOGICAL_TO_PHYSICAL,
+)
+
+__all__ = [
+    "mesh_context", "current_mesh", "logical_pspec", "shard",
+    "named_sharding", "ParamFactory", "LOGICAL_TO_PHYSICAL",
+]

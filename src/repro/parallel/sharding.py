@@ -1,0 +1,255 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP) + param factory.
+
+Model code never names physical mesh axes.  It uses *logical* axes:
+
+  ``dp``    batch dim                -> ("pod", "data")
+  ``fsdp``  ZeRO-3 param shard dim   -> ("pod", "data")
+  ``tp``    tensor-parallel dim      -> ("model",)   (heads / d_ff / vocab / experts)
+  ``sp``    sequence-parallel dim    -> ("model",)   (long KV / scores seq dim)
+  ``None``  replicated
+
+The translation is *divisibility-safe*: a logical axis is dropped for a
+tensor dim that the mesh axis product does not divide (e.g. hymba's 25 heads
+on a 16-way model axis).  This keeps every arch compilable on the fixed
+production meshes without per-arch special-casing, at the cost of
+replication where the math demands it — exactly what a production framework
+must do.
+
+``ParamFactory`` builds a parameter tree once and interprets it twice:
+``mode="init"`` materializes jax arrays; ``mode="spec"`` yields
+ShapeDtypeStructs and records the PartitionSpec for every leaf (used for the
+AOT dry-run and for checkpoint metadata).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import hashlib
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: Sharding profiles (perf hillclimb lever — see EXPERIMENTS.md §Perf).
+#:   megatron: TP over `model` for heads/ff/vocab + ZeRO-3 over `pod,data`
+#:             (per-layer activation gathers; the paper-faithful baseline
+#:             maps HERO clusters onto the model axis)
+#:   fsdp:     pure ZeRO-3 over the whole mesh (no TP): weights gathered
+#:             per layer instead of activations — wins when the per-device
+#:             batch is large (train_4k)
+#:   serve:    TP only, no weight sharding over data: weights resident
+#:             per model-shard, zero weight gathers per token — the decode
+#:             profile (weights must fit HBM/tp)
+PROFILES = {
+    "megatron": {
+        "dp": ("pod", "data"),
+        "fsdp": ("pod", "data"),
+        "tp": ("model",),
+        "sp": ("model",),
+        "ep": ("model",),
+    },
+    "fsdp": {
+        "dp": ("pod", "data", "model"),
+        "fsdp": ("pod", "data", "model"),
+        "tp": (),
+        "sp": (),
+        "ep": ("model",),
+    },
+    "serve": {
+        "dp": ("pod", "data"),
+        "fsdp": (),
+        "tp": ("model",),
+        "sp": ("model",),
+        "ep": ("model",),
+    },
+}
+
+LOGICAL_TO_PHYSICAL = PROFILES["megatron"]
+
+_PROFILE: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "repro_profile", default="megatron")
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def sharding_profile(name: str):
+    assert name in PROFILES, (name, list(PROFILES))
+    tok = _PROFILE.set(name)
+    try:
+        yield
+    finally:
+        _PROFILE.reset(tok)
+
+
+def current_profile() -> str:
+    return _PROFILE.get()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh]):
+    tok = _MESH.set(mesh)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def _physical_axes(logical: Optional[str], mesh: Mesh) -> Tuple[str, ...]:
+    if logical is None:
+        return ()
+    phys = PROFILES[_PROFILE.get()].get(logical, ())
+    return tuple(a for a in phys if a in mesh.shape)
+
+
+def logical_pspec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                  mesh: Mesh) -> P:
+    """Divisibility-safe PartitionSpec for `shape` annotated with logical axes."""
+    assert len(shape) == len(axes), (shape, axes)
+    used: set = set()
+    out: List[Any] = []
+    for dim, name in zip(shape, axes):
+        phys = tuple(a for a in _physical_axes(name, mesh)
+                     if a not in used and mesh.shape[a] > 1)
+        # keep only a prefix of the physical axes whose product divides dim
+        kept: List[str] = []
+        prod = 1
+        for a in phys:
+            if dim % (prod * mesh.shape[a]) == 0:
+                kept.append(a)
+                prod *= mesh.shape[a]
+        if kept:
+            used.update(kept)
+            out.append(tuple(kept) if len(kept) > 1 else kept[0])
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(shape: Sequence[int], axes: Sequence[Optional[str]],
+                   mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, logical_pspec(shape, axes, mesh))
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint against the context mesh (no-op without one)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_pspec(x.shape, axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter factory
+# ---------------------------------------------------------------------------
+
+def _stable_seed(path: str) -> int:
+    return int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "little")
+
+
+class Axes:
+    """Opaque pytree leaf carrying a logical-axes annotation."""
+
+    __slots__ = ("axes",)
+
+    def __init__(self, axes: Tuple[Optional[str], ...]):
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"Axes{self.axes}"
+
+
+class ParamFactory:
+    """Single-definition parameter builder with three interpretations.
+
+    mode="init": returns concrete arrays (normal / zeros / ones).
+    mode="spec": returns ShapeDtypeStruct leaves.
+    mode="axes": returns `Axes` leaves (tree mirrors the params tree, so no
+                 fragile path matching is needed to pair specs with axes).
+    """
+
+    def __init__(self, mode: str, dtype: jnp.dtype, rng: Optional[jax.Array] = None):
+        assert mode in ("init", "spec", "axes")
+        self.mode = mode
+        self.dtype = dtype
+        self.rng = rng
+        self._scope: List[str] = []
+        self._stack: List[int] = []   # stacked-layer prefixes
+        self.axes_by_path: Dict[str, Tuple[Optional[str], ...]] = {}
+
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        self._scope.append(name)
+        try:
+            yield
+        finally:
+            self._scope.pop()
+
+    @contextlib.contextmanager
+    def stacked(self, n: int):
+        """Within this context every param gets a leading (n,) stack dim."""
+        self._stack.append(n)
+        try:
+            yield
+        finally:
+            self._stack.pop()
+
+    def _path(self, name: str) -> str:
+        return "/".join(self._scope + [name])
+
+    def __call__(self, name: str, shape: Sequence[int],
+                 axes: Sequence[Optional[str]], init: str = "normal",
+                 fan_in: Optional[int] = None, dtype=None,
+                 fill: float = 0.0) -> Any:
+        dtype = dtype or self.dtype
+        full_shape = tuple(self._stack) + tuple(shape)
+        full_axes = (None,) * len(self._stack) + tuple(axes)
+        path = self._path(name)
+        self.axes_by_path[path] = full_axes
+        if self.mode == "axes":
+            return Axes(full_axes)
+        if self.mode == "spec":
+            return jax.ShapeDtypeStruct(full_shape, dtype)
+        # constant inits go through numpy fp32 + on-device cast so every leaf
+        # owns a distinct buffer — jnp constants may alias, which breaks
+        # donated train state ("attempt to donate the same buffer twice")
+        import numpy as _np
+        if init in ("zeros", "ones", "fill"):
+            val = {"zeros": 0.0, "ones": 1.0, "fill": fill}[init]
+            base = jax.device_put(_np.full(full_shape, val, _np.float32))
+            return base.astype(dtype)
+        key = jax.random.fold_in(self.rng, _stable_seed(path))
+        fi = fan_in if fan_in is not None else (shape[0] if shape else 1)
+        std = 1.0 / math.sqrt(max(fi, 1))
+        return (jax.random.normal(key, full_shape, jnp.float32) * std).astype(dtype)
+
+
+def is_axes_leaf(x: Any) -> bool:
+    return isinstance(x, Axes)
+
+
+def tree_pspecs(spec_tree: Any, axes_tree: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree from a (ShapeDtypeStruct tree, Axes tree) pair."""
+    return jax.tree.map(
+        lambda sds, ax: logical_pspec(sds.shape, ax.axes, mesh),
+        spec_tree, axes_tree, is_leaf=lambda x: is_axes_leaf(x))
+
+
+def tree_shardings(spec_tree: Any, axes_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda sds, ax: NamedSharding(mesh, logical_pspec(sds.shape, ax.axes, mesh)),
+        spec_tree, axes_tree, is_leaf=lambda x: is_axes_leaf(x))

@@ -1,0 +1,5 @@
+from repro.runtime.trainer import Trainer, TrainerConfig, FailureInjector
+from repro.runtime.server import PagedServer, Request
+
+__all__ = ["Trainer", "TrainerConfig", "FailureInjector", "PagedServer",
+           "Request"]

@@ -1,0 +1,200 @@
+"""Paged continuous-batching serving engine on the RAB + paged KV pool.
+
+This is the serving-side integration of HERO's C1/C2: the host scheduler and
+the accelerator share the *logical token address space* (SVM); the RAB
+translates logical pages to physical KV pool slots; the decode kernel
+(`kernels/paged_attention`) performs the translation on-device through the
+scalar-prefetched block table; page allocation happens on the RAB miss path;
+admit/finish/alloc/release are all traced (C4) so Fig.6-style timelines can
+be reconstructed from a run.
+
+Demo-scale engine for plain-GQA transformer archs (yi/minitron/qwen3/olmoe
+smoke configs); prompts are prefilled through the decode path token-by-token
+(a production engine would batch-prefill — noted simplification).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.rab import RAB, RABConfig, PagedKVPool
+from repro.core.tracing import EventType, TraceBuffer
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models.layers import rope, rms_head_norm
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 8
+    out: List[int] = dataclasses.field(default_factory=list)
+    fed: int = 0                      # prompt tokens already consumed
+    lane: int = -1
+    done: bool = False
+
+
+class PagedServer:
+    def __init__(self, cfg: ArchConfig, params, *, num_pages: int = 64,
+                 page_size: int = 8, max_lanes: int = 4,
+                 max_pages_per_seq: int = 16,
+                 rab_cfg: RABConfig = RABConfig(l1_entries=8, l2_entries=32,
+                                                l2_assoc=4, l2_banks=2),
+                 tracer: Optional[TraceBuffer] = None,
+                 use_kernel: bool = True):
+        assert cfg.block_kind == "transformer" and cfg.attention_kind == "gqa" \
+            and not cfg.local_global_period, \
+            "paged engine supports plain-GQA transformer archs"
+        self.cfg, self.params = cfg, params
+        self.page_size, self.max_lanes = page_size, max_lanes
+        self.max_pages = max_pages_per_seq
+        self.tracer = tracer or TraceBuffer()
+        self.rab = RAB(rab_cfg, self.tracer)
+        self.pool = PagedKVPool(num_pages, page_size, max_pages_per_seq,
+                                self.rab)
+        L_, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.param_dtype)
+        self.k_pages = jnp.zeros((L_, num_pages, page_size, kv, hd), dt)
+        self.v_pages = jnp.zeros((L_, num_pages, page_size, kv, hd), dt)
+        self.use_kernel = use_kernel
+        self._step = jax.jit(functools.partial(
+            _paged_decode_step, cfg, use_kernel))
+        self.lanes: List[Optional[Request]] = [None] * max_lanes
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._rid_seq: Dict[int, int] = {}
+
+    # ------------------------------------------------------------- admin --
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.max_lanes):
+            if self.lanes[i] is None and self.queue:
+                need = -(-len(self.queue[0].prompt) // self.page_size) + 1
+                if not self.pool.can_alloc(need):
+                    break
+                req = self.queue.pop(0)
+                req.lane = i
+                self.lanes[i] = req
+                self._rid_seq[req.rid] = req.rid
+                self.tracer.record_host(EventType.REQUEST_ADMIT, req.rid, i)
+
+    def _finish(self, req: Request):
+        req.done = True
+        self.tracer.record_host(EventType.REQUEST_FINISH, req.rid,
+                                len(req.out))
+        self.pool.release(req.rid)
+        self.tracer.record_host(EventType.PAGE_RELEASE, req.rid, 0)
+        self.lanes[req.lane] = None
+        self.finished.append(req)
+
+    # --------------------------------------------------------------- step --
+    def step(self) -> bool:
+        """One engine iteration.  Returns False when fully idle."""
+        self._admit()
+        active = [r for r in self.lanes if r is not None]
+        if not active:
+            return bool(self.queue)
+
+        B = len(active)
+        tokens = np.zeros((B, 1), np.int32)
+        write_page = np.zeros((B,), np.int32)
+        write_slot = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        for j, r in enumerate(active):
+            nxt = r.prompt[r.fed] if r.fed < len(r.prompt) else r.out[-1]
+            tokens[j, 0] = nxt
+            t = self.pool.seq_len.get(r.rid, 0)
+            pos[j] = t
+            lpage, slot = self.pool.append_token(r.rid)
+            if slot == 0:
+                self.tracer.record_host(EventType.PAGE_ALLOC, r.rid, lpage)
+            # RAB translation for the *write* path (miss -> handler -> retry)
+            write_page[j] = self.pool.translate(r.rid, lpage)
+            write_slot[j] = slot
+
+        bt = self.pool.block_table([r.rid for r in active])
+        lengths = self.pool.lengths([r.rid for r in active])
+
+        logits, self.k_pages, self.v_pages = self._step(
+            self.params, self.k_pages, self.v_pages,
+            jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(bt),
+            jnp.asarray(lengths), jnp.asarray(write_page),
+            jnp.asarray(write_slot))
+        nxt_tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+
+        for j, r in enumerate(active):
+            if r.fed < len(r.prompt):
+                r.fed += 1
+                if r.fed == len(r.prompt):
+                    r.out.append(int(nxt_tok[j]))
+            else:
+                r.out.append(int(nxt_tok[j]))
+            if len(r.out) >= r.max_new:
+                self._finish(r)
+        return True
+
+    def run(self, max_iters: int = 10_000):
+        it = 0
+        while self.step():
+            it += 1
+            if it >= max_iters:
+                break
+        return self.finished
+
+
+# ===========================================================================
+# jitted paged decode step
+# ===========================================================================
+
+def _paged_decode_step(cfg: ArchConfig, use_kernel: bool, params,
+                       k_pages, v_pages, tokens, pos, block_table, lengths,
+                       write_page, write_slot):
+    """One token for B lanes against the paged pool.
+
+    k/v_pages: (L, P, page, kv, hd); block_table: (B, n_pages);
+    write_page/slot: physical coordinates for this token's K/V.
+    """
+    B = tokens.shape[0]
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    lanes = jnp.arange(B)
+    attend = paged_attention if use_kernel else paged_attention_ref
+
+    for i in range(cfg.num_layers):
+        lp = M._sub(params["layers"], i)
+        h = L.norm_forward(cfg, lp["ln1"], x)
+        ap = lp["attn"]
+        q = jnp.einsum("bsd,dhk->bshk", h, ap["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, ap["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, ap["wv"])
+        if cfg.use_qk_norm:
+            q = rms_head_norm(ap["q_norm"], q, cfg.norm_eps)
+            k = rms_head_norm(ap["k_norm"], k, cfg.norm_eps)
+        if cfg.use_rope:
+            q = rope(q, pos[:, None], cfg.rope_theta)
+            k = rope(k, pos[:, None], cfg.rope_theta)
+        # write this token's K/V into its physical page slot
+        k_pages = k_pages.at[i, write_page, write_slot].set(k[:, 0])
+        v_pages = v_pages.at[i, write_page, write_slot].set(v[:, 0])
+        a = attend(q[:, 0], k_pages[i], v_pages[i], block_table, lengths)
+        x = x + jnp.einsum("bhk,hkd->bd", a, ap["wo"])[:, None, :]
+        h = L.norm_forward(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            from repro.models import moe as MOE
+            x = x + MOE.moe_forward(cfg, lp["moe"], h)
+        else:
+            x = x + L.mlp_forward(cfg, lp["mlp"], h)
+
+    x = L.norm_forward(cfg, params["final_norm"], x)
+    logits = L.logits_from_hidden(cfg, params["embed"], x)
+    return logits, k_pages, v_pages

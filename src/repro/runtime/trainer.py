@@ -1,0 +1,142 @@
+"""Trainer: checkpoint/restart fault tolerance + straggler watchdog.
+
+Large-fleet posture:
+  * async checkpoint every N steps with atomic commit;
+  * ``run_with_recovery`` restarts from the last commit on (injected or
+    real) step failures — the checkpoint-reshard-restart loop used at
+    1000+-node scale;
+  * a straggler watchdog tracks a step-time EMA; steps slower than
+    ``straggler_factor x EMA`` are flagged (and counted) — on a real fleet
+    the flag triggers hot-spare swap / data re-sharding, simulated here;
+  * deterministic data (pure function of step) makes recovery replayable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import AsyncCheckpointer, latest_step, \
+    restore_checkpoint
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.tracing import EventType, TraceBuffer
+from repro.models import steps as ST
+from repro.optim.adamw import AdamWConfig
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    ema_alpha: float = 0.2
+    max_restarts: int = 3
+
+
+class FailureInjector:
+    """Deterministic failure schedule: raise at given steps (once each)."""
+
+    def __init__(self, fail_at: List[int]):
+        self.fail_at = set(fail_at)
+        self.fired: set = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, shape: ShapeSpec, data,
+                 tcfg: TrainerConfig = TrainerConfig(),
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 tracer: Optional[TraceBuffer] = None,
+                 compress: bool = False):
+        self.cfg, self.shape, self.data, self.tcfg = cfg, shape, data, tcfg
+        self.opt_cfg = opt_cfg or ST.default_opt_cfg(cfg)
+        self.tracer = tracer
+        self.compress = compress
+        self.step_fn = jax.jit(ST.make_train_step(cfg, self.opt_cfg, compress),
+                               donate_argnums=(0,))
+        self.ckpt = AsyncCheckpointer(tcfg.ckpt_dir)
+        self.metrics_log: List[Dict[str, float]] = []
+        self.straggler_steps: List[int] = []
+        self.restarts = 0
+
+    # ------------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        return ST.init_train_state(self.cfg, self.opt_cfg,
+                                   jax.random.PRNGKey(seed), self.compress)
+
+    def _resume_or_init(self, seed: int = 0):
+        last = latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return self.init_state(seed), 0
+        like = ST.init_train_state(self.cfg, self.opt_cfg,
+                                   jax.random.PRNGKey(seed), self.compress)
+        state, step = restore_checkpoint(self.tcfg.ckpt_dir, like, last)
+        return state, step
+
+    # ------------------------------------------------------------------
+    def run(self, state=None, start_step: int = 0,
+            failure: Optional[FailureInjector] = None) -> Dict[str, Any]:
+        if state is None:
+            state, start_step = self._resume_or_init()
+        ema = None
+        step = start_step
+        while step < self.tcfg.total_steps:
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.data.batch(step).items()}
+            t0 = time.perf_counter()
+            if failure is not None:
+                failure.maybe_fail(step)
+            state, metrics = self.step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+
+            # straggler watchdog
+            if ema is None:
+                ema = dt
+            if dt > self.tcfg.straggler_factor * ema and step > start_step + 2:
+                self.straggler_steps.append(step)
+                if self.tracer:
+                    self.tracer.record_host(EventType.SYNC, step, 1)
+            ema = self.tcfg.ema_alpha * dt + (1 - self.tcfg.ema_alpha) * ema
+
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.total_steps - 1:
+                self.metrics_log.append({
+                    "step": step, "loss": float(metrics["loss"]),
+                    "grad_norm": float(metrics["grad_norm"]),
+                    "lr": float(metrics["lr"]), "step_s": dt,
+                })
+            step += 1
+            if step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step, state)
+        self.ckpt.save(step, state)
+        self.ckpt.wait()
+        return {"state": state, "final_step": step,
+                "metrics": self.metrics_log,
+                "stragglers": self.straggler_steps,
+                "restarts": self.restarts}
+
+    # ------------------------------------------------------------------
+    def run_with_recovery(self, failure: Optional[FailureInjector] = None,
+                          seed: int = 0) -> Dict[str, Any]:
+        """Full fault-tolerant loop: restart from last commit on failure."""
+        attempts = 0
+        while True:
+            try:
+                state, start = self._resume_or_init(seed)
+                return self.run(state, start, failure)
+            except RuntimeError as e:
+                attempts += 1
+                self.restarts = attempts
+                self.ckpt.wait()
+                if attempts > self.tcfg.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={self.tcfg.max_restarts}") from e

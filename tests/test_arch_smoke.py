@@ -1,0 +1,74 @@
+"""Per-architecture smoke tests: reduced config, one fwd/train/decode step
+on CPU, asserting output shapes + finiteness (the assignment's contract)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs, smoke_shape
+from repro.models import model as M
+from repro.models import steps as ST
+
+ARCHS = list_archs()
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_config(name).smoke()
+            params = M.init_params(cfg, jax.random.PRNGKey(0))
+            cache[name] = (cfg, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch, arch_state):
+    cfg, _ = arch_state(arch)
+    shape = smoke_shape("train")
+    batch = ST.make_batch(cfg, shape, jax.random.PRNGKey(1))
+    state = ST.init_train_state(cfg, ST.default_opt_cfg(cfg),
+                                jax.random.PRNGKey(0))
+    step = jax.jit(ST.make_train_step(cfg))
+    state, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"]), metrics
+    assert metrics["loss"] > 0
+    assert int(state["opt"]["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_shapes(arch, arch_state):
+    cfg, params = arch_state(arch)
+    shape = smoke_shape("prefill")
+    batch = ST.make_batch(cfg, shape, jax.random.PRNGKey(2))
+    logits = jax.jit(ST.make_prefill_step(cfg))(params, batch)
+    assert logits.shape == (shape.global_batch, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch, arch_state):
+    cfg, params = arch_state(arch)
+    shape = smoke_shape("decode")
+    T = max(cfg.cache_len(shape), 1)
+    cache = M.init_cache(cfg, shape.global_batch, T)
+    batch = ST.make_batch(cfg, shape, jax.random.PRNGKey(3))
+    logits, new_cache = jax.jit(ST.make_decode_step(cfg))(params, cache, batch)
+    assert logits.shape == (shape.global_batch, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_specs_match_init(arch, arch_state):
+    cfg, params = arch_state(arch)
+    specs = M.param_specs(cfg)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs)
+    assert len(flat_p) == len(flat_s)
+    for p, s in zip(flat_p, flat_s):
+        assert p.shape == s.shape, (p.shape, s.shape)
+        assert p.dtype == s.dtype

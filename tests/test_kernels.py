@@ -1,0 +1,104 @@
+"""Kernel sweeps: shapes x dtypes, interpret-mode vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cluster_matmul import cluster_matmul, cluster_matmul_ref
+from repro.kernels.flash_attention import (
+    flash_attention, flash_attention_ref, mha_flash,
+)
+from repro.kernels.paged_attention import paged_attention, paged_attention_ref
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 512),
+                                   (384, 256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cluster_matmul(m, k, n, dtype, rng):
+    a = jax.random.normal(rng, (m, k), jnp.float32).astype(dtype)
+    b = jax.random.normal(jax.random.fold_in(rng, 1), (k, n),
+                          jnp.float32).astype(dtype)
+    out = cluster_matmul(a, b, interpret=True)
+    ref = cluster_matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("bhsd", [(2, 128, 128, 64), (4, 256, 128, 32),
+                                  (1, 128, 384, 128)])
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, 0, 0.0), (False, 0, 0.0), (True, 64, 0.0), (True, 0, 50.0),
+    (True, 32, 30.0),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(bhsd, causal, window, cap, dtype, rng):
+    BH, S, T, d = bhsd
+    q = (jax.random.normal(rng, (BH, S, d), jnp.float32) * 0.3).astype(dtype)
+    k = (jax.random.normal(jax.random.fold_in(rng, 1), (BH, T, d),
+                           jnp.float32) * 0.3).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (BH, T, d),
+                          jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal, window, cap, True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+def test_flash_attention_grad(rng):
+    q = jax.random.normal(rng, (2, 128, 32), jnp.float32) * 0.3
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (2, 128, 32),
+                          jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (2, 128, 32),
+                          jnp.float32)
+    g = jax.grad(lambda q_: flash_attention(q_, k, v, True, 0, 0.0,
+                                            True).sum())(q)
+    gr = jax.grad(lambda q_: flash_attention_ref(q_, k, v,
+                                                 causal=True).sum())(q)
+    np.testing.assert_allclose(g, gr, rtol=2e-3, atol=2e-3)
+
+
+def test_mha_flash_gqa(rng):
+    B, S, H, Kv, hd = 2, 128, 8, 2, 32
+    q = jax.random.normal(rng, (B, S, H, hd), jnp.float32) * 0.3
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, Kv, hd),
+                          jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, Kv, hd),
+                          jnp.float32)
+    out = mha_flash(q, k, v, interpret=True)
+    from repro.models.attention import attend_fullseq
+    pos = jnp.arange(S, dtype=jnp.int32)
+    ref = attend_fullseq(q, k, v, q_positions=pos, k_positions=pos,
+                         causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("B,H,Kv,hd,page,npg,P", [
+    (3, 8, 4, 32, 8, 6, 16),
+    (2, 4, 4, 64, 16, 4, 8),
+    (1, 16, 2, 128, 8, 8, 12),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention(B, H, Kv, hd, page, npg, P, dtype, rng):
+    q = (jax.random.normal(rng, (B, H, hd), jnp.float32) * 0.3).astype(dtype)
+    kp = (jax.random.normal(jax.random.fold_in(rng, 1), (P, page, Kv, hd),
+                            jnp.float32) * 0.3).astype(dtype)
+    vp = jax.random.normal(jax.random.fold_in(rng, 2), (P, page, Kv, hd),
+                           jnp.float32).astype(dtype)
+    lengths = np.minimum(
+        np.asarray(jax.random.randint(jax.random.fold_in(rng, 3), (B,), 1,
+                                      npg * page)), npg * page).astype(np.int32)
+    bt = np.full((B, npg), -1, np.int32)
+    nxt = 0
+    for i, ln in enumerate(lengths):
+        for j in range(-(-int(ln) // page)):
+            bt[i, j] = nxt % P
+            nxt += 1
+    out = paged_attention(q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths),
+                          interpret=True)
+    ref = paged_attention_ref(q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])

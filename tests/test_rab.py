@@ -1,0 +1,141 @@
+"""RAB unit + property tests (hypothesis): translation correctness, LRU,
+miss protocol, paged pool invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rab import RAB, RABConfig, PagedKVPool
+from repro.core.tracing import TraceBuffer, EventType
+from repro.core.analysis import (
+    layer1_decode, assert_hit_under_miss, assert_wake_follows_handle,
+)
+
+CFG = RABConfig(l1_entries=4, l2_entries=16, l2_assoc=4, l2_banks=2)
+
+
+def test_miss_then_hit():
+    rab = RAB(CFG)
+    pt = {5: 50, 7: 70}
+    p, _ = rab.lookup(5, requester=1)
+    assert p is None and 1 in rab.sleeping
+    woken = rab.handle_misses(pt)
+    assert woken == [1] and 1 not in rab.sleeping
+    p, cyc = rab.lookup(5, requester=1)
+    assert p == 50 and cyc == CFG.l1_lookup_cycles
+
+
+def test_l1_eviction_to_l2():
+    rab = RAB(CFG)
+    pt = {v: v * 10 for v in range(20)}
+    for v in range(CFG.l1_entries + 1):
+        rab.lookup(v, requester=v)
+    rab.handle_misses(pt)
+    # the oldest promoted entry was evicted into L2; next lookup is an L2 hit
+    rab.stats["l2_hits"] = 0
+    for v in range(CFG.l1_entries + 1):
+        p, _ = rab.lookup(v, requester=v)
+        assert p == v * 10
+    assert rab.stats["l2_hits"] >= 1
+
+
+def test_page_fault_raises():
+    rab = RAB(CFG)
+    rab.lookup(99, requester=0)
+    with pytest.raises(KeyError):
+        rab.handle_misses({1: 2})
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=120))
+def test_translation_always_correct(vpages):
+    """Property: whatever the access pattern, a translation that completes
+    always returns the page-table value (TLB never returns stale garbage)."""
+    rab = RAB(CFG)
+    pt = {v: v * 7 + 1 for v in range(31)}
+    for i, v in enumerate(vpages):
+        p, _ = rab.lookup(v, requester=i % 8)
+        if p is None:
+            rab.handle_misses(pt)
+            p, _ = rab.lookup(v, requester=i % 8)
+        assert p == pt[v]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 40), min_size=1, max_size=100))
+def test_resident_subset_of_page_table(vpages):
+    rab = RAB(CFG)
+    pt = {v: v + 100 for v in range(41)}
+    for i, v in enumerate(vpages):
+        if rab.lookup(v, requester=0)[0] is None:
+            rab.handle_misses(pt)
+    for v, p in rab.resident().items():
+        assert pt[v] == p
+
+
+def test_protocol_events_satisfy_assertions():
+    tracer = TraceBuffer()
+    rab = RAB(CFG, tracer)
+    pt = {v: v for v in range(10)}
+    for v in [0, 1, 2, 0, 5, 6, 7, 8, 9, 1]:
+        if rab.lookup(v, requester=v % 3)[0] is None:
+            rab.handle_misses(pt)
+    events = layer1_decode(tracer.drain())
+    assert assert_hit_under_miss(events)
+    assert assert_wake_follows_handle(events)
+
+
+# ---------------------------------------------------------------------------
+# Paged pool
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_release_cycle():
+    pool = PagedKVPool(num_pages=8, page_size=4, max_pages_per_seq=4)
+    for t in range(10):
+        pool.append_token(1)
+    assert pool.seq_len[1] == 10
+    bt = pool.block_table([1])
+    assert (bt[0, :3] >= 0).all() and bt[0, 3] == -1
+    pool.release(1)
+    assert len(pool.free) == 8
+
+
+def test_pool_exhaustion():
+    pool = PagedKVPool(num_pages=2, page_size=2, max_pages_per_seq=4)
+    pool.append_token(1)
+    pool.append_token(1)
+    pool.append_token(1)  # second page
+    with pytest.raises(MemoryError):
+        pool.append_token(2)
+    assert pool.can_alloc(0) and not pool.can_alloc(1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.sampled_from([("tok", 1), ("tok", 2), ("rel", 1),
+                                 ("rel", 2)]), max_size=60))
+def test_pool_never_double_maps(ops):
+    """Property: no physical page is mapped by two (seq, lpage) keys, and
+    free + mapped always partitions the pool."""
+    pool = PagedKVPool(num_pages=6, page_size=2, max_pages_per_seq=8)
+    for op, seq in ops:
+        try:
+            if op == "tok":
+                pool.append_token(seq)
+            else:
+                pool.release(seq)
+        except MemoryError:
+            pool.release(seq)
+        mapped = list(pool.page_table.values())
+        assert len(mapped) == len(set(mapped))
+        assert sorted(mapped + pool.free) == list(range(6))
+
+
+def test_rab_backed_pool_translation():
+    rab = RAB(RABConfig(l1_entries=2, l2_entries=4, l2_assoc=2, l2_banks=1))
+    pool = PagedKVPool(num_pages=16, page_size=2, max_pages_per_seq=8,
+                       rab=rab)
+    for t in range(9):
+        pool.append_token(3)
+    bt = pool.block_table([3])
+    for lp in range(5):
+        assert bt[0, lp] == pool.page_table[(3, lp)]
+    assert rab.stats["misses"] > 0  # tiny TLB forced the slow path

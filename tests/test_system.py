@@ -1,0 +1,309 @@
+"""End-to-end system behaviour: offload semantics, fault-tolerant training,
+checkpoint round-trip + elastic resharding, paged serving engine, config
+matrix, sharding rules."""
+import dataclasses
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_shape, SHAPES
+from repro.core import (
+    OffloadTarget, SVMSpace, AddressCollision, ConfigGraph, hero_test_matrix,
+    TraceBuffer, EventType,
+)
+from repro.core.analysis import layer1_decode
+from repro.checkpoint import (
+    save_checkpoint, restore_checkpoint, latest_step, AsyncCheckpointer,
+)
+from repro.data import MarkovChainData, SyntheticLMData, Prefetcher
+from repro.models import model as M
+from repro.models import steps as ST
+from repro.runtime import Trainer, TrainerConfig, FailureInjector, \
+    PagedServer, Request
+
+
+# ---------------------------------------------------------------------------
+# C1: offload semantics
+# ---------------------------------------------------------------------------
+
+def test_offload_copy_vs_zero_copy_equivalent():
+    tgt = OffloadTarget(tracer=TraceBuffer())
+    a = np.random.default_rng(0).standard_normal((64, 64)).astype(np.float32)
+    b = np.random.default_rng(1).standard_normal((64, 64)).astype(np.float32)
+
+    def kern(a, b):
+        return a @ b
+
+    out_copy, rep_copy = tgt.run_copy_based(kern, a, b)
+    ha = tgt.svm.share(jax.device_put(a))
+    hb = tgt.svm.share(jax.device_put(b))
+    out_h, rep_zc = tgt.run_zero_copy(kern, ha, hb)
+    out_zc = np.asarray(tgt.svm.deref(out_h))
+    np.testing.assert_allclose(out_copy, out_zc, rtol=1e-6)
+    assert rep_copy.mode == "copy" and rep_zc.mode == "zero_copy"
+    assert rep_copy.bytes_to > 0 and rep_zc.writeback_s == 0.0
+    # the offload event protocol was traced
+    events = layer1_decode(tgt.tracer.drain())
+    kinds = {e.etype for e in events}
+    assert EventType.OFFLOAD_COPY_TO in kinds
+    assert EventType.OFFLOAD_KERNEL_BEGIN in kinds
+
+
+def test_svm_reserved_aperture():
+    svm = SVMSpace(reserved=((0, 100),))
+    with pytest.raises(AddressCollision):
+        svm.share(jnp.ones(3), handle=5)
+    h = svm.share(jnp.ones(3))
+    assert h >= 100 and h in svm
+
+
+# ---------------------------------------------------------------------------
+# training: fault tolerance + determinism
+# ---------------------------------------------------------------------------
+
+def _mk_trainer(tmp, total=8):
+    from repro.optim import AdamWConfig
+    cfg = get_config("yi-6b").smoke()
+    shape = smoke_shape("train")
+    data = MarkovChainData(cfg, shape, seed=0)
+    # short warmup so loss moves within the test's step budget
+    opt = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=total)
+    return Trainer(cfg, shape, data,
+                   TrainerConfig(total_steps=total, ckpt_every=4,
+                                 ckpt_dir=tmp, log_every=2), opt_cfg=opt)
+
+
+def test_trainer_recovers_from_injected_failure():
+    tmp = tempfile.mkdtemp()
+    try:
+        tr = _mk_trainer(tmp)
+        res = tr.run_with_recovery(FailureInjector([5]))
+        assert res["final_step"] == 8
+        assert tr.restarts == 1
+        assert latest_step(tmp) == 8
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def test_trainer_loss_decreases_on_markov_data():
+    tmp = tempfile.mkdtemp()
+    try:
+        tr = _mk_trainer(tmp, total=30)
+        res = tr.run()
+        losses = [m["loss"] for m in res["metrics"]]
+        assert losses[-1] < losses[0] - 0.3, losses
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def test_data_determinism_and_host_sharding():
+    cfg = get_config("yi-6b").smoke()
+    shape = smoke_shape("train")
+    a = SyntheticLMData(cfg, shape, seed=3).batch(7)
+    b = SyntheticLMData(cfg, shape, seed=3).batch(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    h0 = SyntheticLMData(cfg, shape, seed=3, num_hosts=2, host_id=0).batch(7)
+    h1 = SyntheticLMData(cfg, shape, seed=3, num_hosts=2, host_id=1).batch(7)
+    assert h0["tokens"].shape[0] == shape.global_batch // 2
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_prefetcher_delivers_in_order():
+    cfg = get_config("yi-6b").smoke()
+    data = SyntheticLMData(cfg, smoke_shape("train"), seed=0)
+    pf = Prefetcher(data, start_step=0)
+    try:
+        s0, b0 = next(pf)
+        s1, b1 = next(pf)
+        assert (s0, s1) == (0, 1)
+        np.testing.assert_array_equal(b0["tokens"], data.batch(0)["tokens"])
+    finally:
+        pf.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: round-trip, atomicity, elastic resharding
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_bf16():
+    tmp = tempfile.mkdtemp()
+    try:
+        state = {"a": jnp.ones((4, 4), jnp.bfloat16) * 1.5,
+                 "n": {"b": jnp.arange(6, dtype=jnp.int32)}}
+        save_checkpoint(tmp, 3, state)
+        out, step = restore_checkpoint(tmp, state)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(out["a"], np.float32),
+                                      np.asarray(state["a"], np.float32))
+        assert out["a"].dtype == jnp.bfloat16
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def test_async_checkpointer_and_latest():
+    tmp = tempfile.mkdtemp()
+    try:
+        ck = AsyncCheckpointer(tmp)
+        ck.save(1, {"x": jnp.zeros(3)})
+        ck.save(2, {"x": jnp.ones(3)})
+        ck.close()
+        assert latest_step(tmp) == 2
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+ELASTIC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import tempfile, shutil
+import jax, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import save_checkpoint, restore_checkpoint
+
+tmp = tempfile.mkdtemp()
+mesh_a = jax.make_mesh((4,), ("data",))
+x = jax.device_put(np.arange(64, dtype=np.float32).reshape(8, 8),
+                   NamedSharding(mesh_a, P("data")))
+save_checkpoint(tmp, 1, {"x": x})
+
+mesh_b = jax.make_mesh((2, 4), ("data", "model"))
+sh = {"x": NamedSharding(mesh_b, P("data", "model"))}
+out, step = restore_checkpoint(tmp, {"x": x}, shardings=sh)
+assert step == 1
+np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(x))
+assert out["x"].sharding.spec == P("data", "model")
+shutil.rmtree(tmp)
+print("ELASTIC_OK")
+"""
+
+
+def test_elastic_reshard_across_meshes():
+    r = subprocess.run([sys.executable, "-c", ELASTIC_SCRIPT],
+                       capture_output=True, text=True, timeout=300,
+                       env={**os.environ, "PYTHONPATH": "src"}, cwd=".")
+    assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+def test_paged_server_continuous_batching():
+    cfg = get_config("yi-6b").smoke()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    srv = PagedServer(cfg, params, num_pages=32, page_size=4, max_lanes=2,
+                      max_pages_per_seq=8, use_kernel=False)
+    for rid in range(4):
+        srv.submit(Request(rid=rid, prompt=[rid + 1, 2, 3], max_new=3))
+    done = srv.run()
+    assert len(done) == 4
+    assert all(len(r.out) == 3 for r in done)
+    assert len(srv.pool.free) == 32   # all pages returned
+    assert srv.rab.stats["l1_hits"] + srv.rab.stats["misses"] > 0
+
+
+def test_paged_server_kernel_matches_ref():
+    cfg = get_config("yi-6b").smoke()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    def run(use_kernel):
+        srv = PagedServer(cfg, params, num_pages=32, page_size=4,
+                          max_lanes=2, max_pages_per_seq=8,
+                          use_kernel=use_kernel)
+        srv.submit(Request(rid=0, prompt=[5, 6, 7], max_new=4))
+        return srv.run()[0].out
+
+    assert run(False) == run(True)
+
+
+# ---------------------------------------------------------------------------
+# C5: config matrix
+# ---------------------------------------------------------------------------
+
+def test_hero_test_matrix_counts():
+    g = hero_test_matrix()
+    cells = g.cells()
+    # 10 archs x 4 shapes x 2 meshes minus long_500k skips (8 archs x 2)
+    assert len(cells) == 10 * 4 * 2 - 8 * 2
+    assert all(c["kind"] in ("train", "prefill", "decode") for c in cells)
+
+
+def test_config_graph_constraints():
+    g = (ConfigGraph()
+         .axis("a", [1, 2, 3])
+         .axis("b", ["x", "y"])
+         .constraint(lambda c: not (c["a"] == 3 and c["b"] == "y"))
+         .annotate(lambda c: {"tag": f"{c['a']}{c['b']}"}))
+    cells = g.cells()
+    assert len(cells) == 5
+    assert {c["tag"] for c in cells} == {"1x", "1y", "2x", "2y", "3x"}
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_logical_pspec_divisibility():
+    from repro.parallel.sharding import logical_pspec
+    from jax.sharding import PartitionSpec as P
+    # single-device mesh: every logical axis drops to replication
+    mesh = jax.make_mesh((1,), ("model",))
+    assert logical_pspec((25, 64), ("tp", None), mesh) == P()
+
+    sub = subprocess.run(
+        [sys.executable, "-c", r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.parallel.sharding import logical_pspec
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+assert logical_pspec((32, 64), ("dp", "tp"), mesh) == P("data", "model")
+assert logical_pspec((25, 64), ("tp", None), mesh) == P()
+assert logical_pspec((8, 25), ("dp", "tp"), mesh) == P("data")
+mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+assert logical_pspec((8, 8), ("fsdp", "tp"), mesh3) == P(("pod", "data"), "model")
+print("PSPEC_OK")
+"""],
+        capture_output=True, text=True, timeout=300,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd=".")
+    assert "PSPEC_OK" in sub.stdout, sub.stdout + sub.stderr
+
+
+# ---------------------------------------------------------------------------
+# optimizer + compression
+# ---------------------------------------------------------------------------
+
+def test_adamw_descends_quadratic():
+    from repro.optim import AdamWConfig, init_opt_state, adamw_update
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    st = init_opt_state(params, cfg)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, st, _ = adamw_update(params, grads, st, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_int8_error_feedback_bounded():
+    from repro.optim.compress import ef_compress_grads, init_residual
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal(512).astype(np.float32))}
+    resid = init_residual(g)
+    acc_true = np.zeros(512, np.float32)
+    acc_comp = np.zeros(512, np.float32)
+    for _ in range(20):
+        d, resid = ef_compress_grads(g, resid)
+        acc_true += np.asarray(g["w"])
+        acc_comp += np.asarray(d["w"])
+    # error feedback keeps the *accumulated* error bounded by one quantum
+    quantum = float(jnp.abs(g["w"]).max()) / 127.0
+    assert np.abs(acc_true - acc_comp).max() <= 2 * quantum + 1e-5

@@ -1,0 +1,66 @@
+"""Tracer tests: in-step recording is pure, lossless under capacity,
+host/device domains merge, analysis layers decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tracing import TraceBuffer, EventType, HOST_TRACER_ID
+from repro.core.analysis import layer1_decode, layer2_per_core, \
+    layer2_tlb_transactions, render_timeline
+
+
+def test_device_record_inside_jit():
+    tb = TraceBuffer(capacity=16)
+
+    @jax.jit
+    def step(dev, x):
+        dev = TraceBuffer.record(dev, 1, EventType.STEP_BEGIN, 0, 0)
+        y = x * 2
+        dev = TraceBuffer.tick(dev, 3)
+        dev = TraceBuffer.record(dev, 1, EventType.STEP_END, 0, 0)
+        return dev, y
+
+    dev = tb.device_init()
+    dev, y = step(dev, jnp.ones(4))
+    rows = tb.drain(dev)
+    assert rows.shape == (2, 5)
+    assert rows[0, 2] == EventType.STEP_BEGIN
+    assert rows[1, 2] == EventType.STEP_END
+    assert rows[1, 0] - rows[0, 0] == 4  # 1 record + 3 ticks
+
+
+def test_capacity_saturation_counts_drops():
+    tb = TraceBuffer(capacity=4)
+    dev = tb.device_init()
+    for _ in range(7):
+        dev = TraceBuffer.record(dev, 2, EventType.MEM_READ, 0, 0)
+    rows = tb.drain(dev)
+    assert rows.shape[0] == 4
+    assert tb.dropped == 3
+
+
+def test_host_device_merge():
+    tb = TraceBuffer(capacity=8)
+    dev = tb.device_init()
+    dev = TraceBuffer.record(dev, 1, EventType.MEM_WRITE, 5, 6)
+    tb.record_host(EventType.OFFLOAD_BEGIN, 1, 2)
+    rows = tb.drain(dev)
+    tracers = set(rows[:, 1].tolist())
+    assert tracers == {1, HOST_TRACER_ID}
+
+
+def test_analysis_layers():
+    tb = TraceBuffer()
+    tb.record_host(EventType.TLB_MISS, 0, 7)
+    tb.record_host(EventType.TLB_L1_HIT, 1, 3)
+    tb.record_host(EventType.MISS_HANDLED, 0, 7)
+    tb.record_host(EventType.CORE_WAKE, 0, 7)
+    events = layer1_decode(tb.drain())
+    per_core = layer2_per_core(events)
+    assert set(per_core) == {0, 1}
+    txs = layer2_tlb_transactions(events)
+    kinds = {t["kind"] for t in txs}
+    assert kinds == {"miss", "hit_l1"}
+    miss = [t for t in txs if t["kind"] == "miss"][0]
+    assert miss["latency"] > 0
+    assert "core   0" in render_timeline(events)
