@@ -1,0 +1,150 @@
+"""Serving hot-path benchmark: chunked prefill vs token-by-token admission.
+
+Runs the same workload through the paged engine twice — ``chunk=1``
+(reproducing the pre-chunked-prefill engine's iteration structure: one
+prompt token per engine iteration) and ``chunk=N`` — and reports per run:
+
+* generated tokens/s (wall clock over the whole workload)
+* engine iterations per finished request
+* host->device / device->host transfer events, trace-counted from the
+  engine's ``TraceBuffer`` (``EventType.H2D`` / ``D2H``), per generated
+  token
+
+Emits ``BENCH_serve.json`` so the serving perf trajectory is tracked
+PR-over-PR.
+
+    PYTHONPATH=src python benchmarks/serve_throughput.py            # full
+    PYTHONPATH=src python benchmarks/serve_throughput.py --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.tracing import EventType, TraceBuffer
+from repro.models import model as M
+from repro.runtime import PagedServer, Request
+
+
+def _make_prompts(n: int, length: int, vocab: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, size=length).tolist() for _ in range(n)]
+
+
+def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
+               max_lanes, max_pages_per_seq, use_kernel) -> dict:
+    tracer = TraceBuffer(capacity=1 << 16)
+    srv = PagedServer(cfg, params, num_pages=num_pages, page_size=page_size,
+                      max_lanes=max_lanes, max_pages_per_seq=max_pages_per_seq,
+                      chunk=chunk, use_kernel=use_kernel, tracer=tracer)
+    reqs = [Request(rid=rid, prompt=list(p), max_new=max_new)
+            for rid, p in enumerate(prompts)]
+    for r in reqs:
+        srv.submit(r)
+    srv.step()                       # warmup iteration triggers jit compile
+    warm_gen = sum(len(r.out) for r in reqs)
+    t0 = time.perf_counter()
+    done = srv.run()
+    jax.block_until_ready(srv.last_tok)
+    dt = time.perf_counter() - t0
+
+    events = tracer.drain()
+    h2d = int(sum(e[3] for e in events if e[2] == EventType.H2D))
+    d2h = int(sum(e[3] for e in events if e[2] == EventType.D2H))
+    gen = sum(len(r.out) for r in done)
+    # tokens/s only counts tokens produced inside the timed window, so the
+    # untimed warmup iteration (which for a chunked run is the expensive
+    # full-prefill step and may itself emit tokens) doesn't bias the ratio
+    gen_timed = gen - warm_gen
+    assert len(done) == len(prompts), "workload did not drain"
+    return {
+        "chunk": chunk,
+        "iterations": srv.iterations,
+        "iters_per_request": srv.iterations / len(done),
+        "generated_tokens": gen,
+        "tokens_per_s": gen_timed / max(dt, 1e-9),
+        "wall_s": dt,
+        "h2d_events": h2d,
+        "d2h_events": d2h,
+        "h2d_per_generated_token": h2d / max(gen, 1),
+        "d2h_per_generated_token": d2h / max(gen, 1),
+    }
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--max-lanes", type=int, default=4)
+    ap.add_argument("--kernel", action="store_true",
+                    help="force the Pallas kernels (default: kernels on TPU, "
+                         "XLA reference path elsewhere — engine structure and "
+                         "transfer counts are identical either way)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: tiny workload, seconds on CPU")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.requests, args.prompt_len, args.max_new = 3, 12, 4
+        args.chunk, args.page_size, args.max_lanes = 8, 4, 2
+
+    cfg = get_config(args.arch).smoke()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = _make_prompts(args.requests, args.prompt_len, cfg.vocab_size)
+
+    per_seq = -(-(args.prompt_len + args.max_new) // args.page_size) + 1
+    num_pages = per_seq * args.max_lanes + 8
+    use_kernel = args.kernel or jax.default_backend() == "tpu"
+    common = dict(max_new=args.max_new, num_pages=num_pages,
+                  page_size=args.page_size, max_lanes=args.max_lanes,
+                  max_pages_per_seq=per_seq, use_kernel=use_kernel)
+
+    baseline = run_engine(cfg, params, prompts, chunk=1, **common)
+    chunked = run_engine(cfg, params, prompts, chunk=args.chunk, **common)
+
+    result = {
+        "arch": cfg.name,
+        "backend": jax.default_backend(),
+        "use_kernel": use_kernel,
+        "workload": {"requests": args.requests,
+                     "prompt_len": args.prompt_len,
+                     "max_new": args.max_new,
+                     "page_size": args.page_size,
+                     "max_lanes": args.max_lanes},
+        "baseline_token_by_token": baseline,
+        "chunked_prefill": chunked,
+        "iters_per_request_reduction":
+            baseline["iters_per_request"] / chunked["iters_per_request"],
+        "tokens_per_s_speedup":
+            chunked["tokens_per_s"] / max(baseline["tokens_per_s"], 1e-9),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+
+    print(f"# serve_throughput ({cfg.name}, {jax.default_backend()}, "
+          f"kernel={use_kernel})")
+    for tag, r in (("token-by-token", baseline), ("chunked", chunked)):
+        print(f"{tag:>16s}: chunk={r['chunk']:<4d} "
+              f"iters/req={r['iters_per_request']:6.1f}  "
+              f"tok/s={r['tokens_per_s']:8.1f}  "
+              f"h2d/tok={r['h2d_per_generated_token']:5.2f}  "
+              f"d2h/tok={r['d2h_per_generated_token']:5.2f}")
+    print(f"iters/request reduction: "
+          f"{result['iters_per_request_reduction']:.2f}x   "
+          f"tokens/s speedup: {result['tokens_per_s_speedup']:.2f}x")
+    print(f"wrote {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -18,20 +18,26 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--chunk", type=int, default=4,
+                    help="prompt tokens consumed per engine iteration "
+                         "(chunked prefill)")
     ap.add_argument("--kernel", action="store_true",
-                    help="use the Pallas paged-attention kernel "
-                         "(interpret mode on CPU; slower but exercises it)")
+                    help="use the Pallas paged-attention kernels "
+                         "(interpret mode on CPU; slower but exercises them)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     srv = PagedServer(cfg, params, num_pages=64, page_size=4, max_lanes=4,
-                      max_pages_per_seq=16, use_kernel=args.kernel)
+                      max_pages_per_seq=16, chunk=args.chunk,
+                      use_kernel=args.kernel)
     for rid in range(args.requests):
         srv.submit(Request(rid=rid, prompt=[1 + rid, 7, 3, 11], max_new=6))
     done = srv.run()
 
-    print(f"# served {len(done)} requests (lanes=4, pages=64x4)")
+    print(f"# served {len(done)} requests (lanes=4, pages=64x4, "
+          f"chunk={args.chunk}) in {srv.iterations} engine iterations "
+          f"(h2d={srv.h2d_events}, d2h={srv.d2h_events})")
     for r in done:
         print(f"req {r.rid}: prompt {r.prompt} -> {r.out}")
     print("\n# RAB:", srv.rab.stats)

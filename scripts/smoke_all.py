@@ -44,4 +44,16 @@ for name in ARCHS:
         print(f"FAIL {name}: {e}")
         traceback.print_exc()
         sys.exit(1)
+
+# serving hot path: chunked prefill vs token-by-token on a tiny workload
+try:
+    import os
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import serve_throughput
+    serve_throughput.main(["--smoke"])
+except Exception as e:
+    print(f"FAIL serve_throughput: {e}")
+    traceback.print_exc()
+    sys.exit(1)
 print("ALL SMOKE OK")

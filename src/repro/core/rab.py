@@ -185,12 +185,34 @@ class PagedKVPool:
         self.free = list(range(num_pages - 1, -1, -1))
         self.page_table: Dict[Tuple[int, int], int] = {}   # (seq, lpage) -> p
         self.seq_len: Dict[int, int] = {}
+        self.reserved: Dict[int, int] = {}                 # seq -> pages held
         self.rab = rab
 
+    def available(self) -> int:
+        """Free pages not spoken for by admission-time reservations."""
+        return len(self.free) - sum(self.reserved.values())
+
     def can_alloc(self, n: int = 1) -> bool:
-        return len(self.free) >= n
+        return self.available() >= n
+
+    def reserve(self, seq: int, n: int):
+        """Hold ``n`` pages for ``seq`` so lazy mid-stream allocation can
+        never fail after admission (chunked prefill allocates many pages per
+        engine iteration; without the reservation, a later admit could eat
+        pages this sequence still needs)."""
+        if self.available() < n:
+            raise MemoryError(f"cannot reserve {n} pages "
+                              f"({self.available()} available)")
+        self.reserved[seq] = self.reserved.get(seq, 0) + n
 
     def alloc_page(self, seq: int, lpage: int) -> int:
+        if self.reserved.get(seq, 0) > 0:
+            self.reserved[seq] -= 1        # draw down this seq's reservation
+        elif self.available() < 1:
+            # an unreserved allocation may not eat into pages other
+            # sequences reserved at admission — that would break the
+            # never-fail-after-admission guarantee reserve() documents
+            raise MemoryError("KV pool exhausted (remaining pages reserved)")
         if not self.free:
             raise MemoryError("KV pool exhausted")
         p = self.free.pop()
@@ -214,6 +236,7 @@ class PagedKVPool:
                 self.free.append(p)
                 del self.page_table[(s, lp)]
         self.seq_len.pop(seq, None)
+        self.reserved.pop(seq, None)
         if self.rab is not None:
             self.rab.invalidate()
 

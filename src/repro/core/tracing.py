@@ -52,6 +52,10 @@ class EventType(enum.IntEnum):
     PAGE_RELEASE = 31
     REQUEST_ADMIT = 32
     REQUEST_FINISH = 33
+    # host<->device transfers on the serving hot path (the data-path cost
+    # HERO's DMA double-buffering / zero-copy SVM exist to hide)
+    H2D = 40
+    D2H = 41
 
 
 HOST_TRACER_ID = 255

@@ -74,17 +74,26 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "cap", "bq", "bk", "interpret", "scale"))
+    "causal", "window", "cap", "bq", "bk", "interpret", "scale", "groups"))
 def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, window: int = 0,
                         cap: float = 0.0, scale: float | None = None,
                         bq: int = 128, bk: int = 128,
-                        interpret: bool = False) -> jax.Array:
-    """q: (BH, S, d); k/v: (BH, T, d) — heads pre-flattened/broadcast.
+                        interpret: bool = False,
+                        groups: int = 1) -> jax.Array:
+    """q: (BH, S, d); k/v: (BH // groups, T, d) — heads pre-flattened.
+
+    GQA runs with the *unexpanded* K/V: query head ``b`` reads KV head
+    ``b // groups`` through the BlockSpec index map, so the G-fold head
+    expansion never materializes in HBM (consecutive query heads reuse the
+    same resident K/V tile).  Query heads must be KV-major, i.e. flat index
+    ``(batch * Kv + kv) * groups + g`` — the layout ``ops.mha_flash``
+    produces.
 
     Returns (BH, S, d)."""
     BH, S, d = q.shape
     T = k.shape[1]
+    assert BH == k.shape[0] * groups, (BH, k.shape[0], groups)
     bq, bk = min(bq, S), min(bk, T)
     assert S % bq == 0 and T % bk == 0
     nk = T // bk
@@ -95,8 +104,8 @@ def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
         grid=(BH, S // bq, nk),
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda b, i, kk: (b, i, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, i, kk: (b, kk, 0)),
-            pl.BlockSpec((1, bk, d), lambda b, i, kk: (b, kk, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, kk: (b // groups, kk, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, kk: (b // groups, kk, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, d), lambda b, i, kk: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),

@@ -14,36 +14,48 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
 def flash_attention(q, k, v, causal=True, window=0, cap=0.0,
-                    interpret=None):
+                    interpret=None, groups=1):
     itp = (not _on_tpu()) if interpret is None else interpret
     return K.flash_attention_fwd(q, k, v, causal=causal, window=window,
-                                 cap=cap, interpret=itp)
+                                 cap=cap, interpret=itp, groups=groups)
 
 
-def _fwd(q, k, v, causal, window, cap, interpret):
-    return flash_attention(q, k, v, causal, window, cap, interpret), (q, k, v)
+def _fwd(q, k, v, causal, window, cap, interpret, groups):
+    return (flash_attention(q, k, v, causal, window, cap, interpret, groups),
+            (q, k, v))
 
 
-def _bwd(causal, window, cap, interpret, res, g):
+def _bwd(causal, window, cap, interpret, groups, res, g):
     q, k, v = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: flash_attention_ref(
-            q_, k_, v_, causal=causal, window=window, cap=cap), q, k, v)
-    return vjp(g)
+
+    def ref(q_, k_, v_):
+        # exact recompute; the jnp.repeat is backward-only (its VJP sums the
+        # per-group K/V grads) — the kernel-fast forward never expands
+        if groups > 1:
+            k_ = jnp.repeat(k_, groups, axis=0)
+            v_ = jnp.repeat(v_, groups, axis=0)
+        return flash_attention_ref(q_, k_, v_, causal=causal, window=window,
+                                   cap=cap)
+
+    return jax.vjp(ref, q, k, v)[1](g)
 
 
 flash_attention.defvjp(_fwd, _bwd)
 
 
 def mha_flash(q, k, v, *, causal=True, window=0, cap=0.0, interpret=None):
-    """(B,S,H,hd) x (B,T,K,hd) GQA convenience wrapper -> (B,S,H,hd)."""
+    """(B,S,H,hd) x (B,T,K,hd) GQA convenience wrapper -> (B,S,H,hd).
+
+    The shared KV head is indexed inside the kernel (flat query head
+    ``b*H + kv*G + g`` reads KV row ``b*Kv + kv = (b*H + kv*G + g) // G``)
+    instead of materializing the G-fold ``jnp.repeat`` expansion in HBM."""
     B, S, H, hd = q.shape
     T, Kv = k.shape[1], k.shape[2]
     G = H // Kv
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
-    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, T, hd)
-    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, T, hd)
-    out = flash_attention(qf, kf, vf, causal, window, cap, interpret)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Kv, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Kv, T, hd)
+    out = flash_attention(qf, kf, vf, causal, window, cap, interpret, G)
     return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

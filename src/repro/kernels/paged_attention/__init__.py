@@ -1,4 +1,11 @@
-from repro.kernels.paged_attention.ops import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.ops import (
+    paged_attention, paged_prefill, paged_decode_fused, paged_prefill_fused,
+    pad_block_table, page_counts_for,
+)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_ref, paged_prefill_ref,
+)
 
-__all__ = ["paged_attention", "paged_attention_ref"]
+__all__ = ["paged_attention", "paged_prefill", "paged_decode_fused",
+           "paged_prefill_fused", "pad_block_table", "page_counts_for",
+           "paged_attention_ref", "paged_prefill_ref"]

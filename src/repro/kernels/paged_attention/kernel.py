@@ -1,15 +1,39 @@
-"""Paged decode attention with in-kernel RAB translation.
+"""Paged attention kernels with in-kernel RAB translation.
 
 The RAB insight (HERO C2): a tiny software-managed table suffices to let an
 accelerator translate virtual addresses at run time.  Here the table is the
-block table maintained by ``core/rab.py``; the kernel *itself* performs the
-translation on its fast path — the block table is scalar-prefetched (SMEM)
-and indexes the physical KV page pulled into VMEM per grid step.  A -1 entry
-is an unmapped page (never touched: masked + clamped), the slow path
-(allocation) having been handled by the host-side RAB miss handler before
+block table maintained by ``core/rab.py``; the kernels *themselves* perform
+the translation on their fast path — the block table is scalar-prefetched
+(SMEM) and indexes physical KV pages pulled into VMEM per grid step.  The
+slow path (allocation) is handled by the host-side RAB miss handler before
 launch.
 
-Grid (B, max_pages): online-softmax accumulation over one request's pages.
+One kernel body serves two entry points:
+
+``paged_prefill_fwd``
+    A whole prompt chunk (``C`` tokens) per request against the paged pool,
+    flash-style.  Grid ``(B, ceil(n_pages / G))``: each step attends ``G``
+    KV pages (``pages_per_step``) with a single online-softmax rescale plus
+    the causal in-chunk mask (the chunk's own K/V are pool-resident by the
+    time the kernel runs, so one mask covers both history and in-chunk
+    causality).
+
+``paged_decode_fwd``
+    One query token per request — the C=1 special case of the above (with
+    ``q_start = lengths - 1`` the masks coincide), kept as its own entry
+    point for the engine's decode path.
+
+Both take a *fused* KV pool of shape ``(P, 2, page, Kv, hd)`` — K and V for
+a page live in one block and are fetched through one combined index map,
+halving the address-translation work of the old separate-K/V layout.
+
+Both require a *repeat-padded* block table: entries past a request's last
+mapped page hold the last mapped physical page (never -1).  Trailing grid
+steps therefore map to the same block as their predecessor, which lets the
+Pallas pipeline elide the DMA entirely, and a scalar-prefetched per-request
+page count (``page_counts``) gates the compute, so fully-unmapped trailing
+steps cost neither fetch nor FLOPs.  ``ops.pad_block_table`` produces the
+padded form from a -1-marked table.
 """
 from __future__ import annotations
 
@@ -24,9 +48,47 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *, scale: float, page_size: int,
-            n_pages: int, groups: int):
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ===========================================================================
+# decode: one query token, G pages per grid step
+# ===========================================================================
+
+@functools.partial(jax.jit, static_argnames=("pages_per_step", "interpret",
+                                             "scale"))
+def paged_decode_fwd(q: jax.Array, kv_pages: jax.Array,
+                     block_table: jax.Array, page_counts: jax.Array,
+                     lengths: jax.Array, *, pages_per_step: int = 2,
+                     scale: float | None = None,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B,H,hd); kv_pages: (P, 2, page, Kv, hd) fused K/V pool;
+    block_table: (B, max_pages) int32 physical page ids, repeat-padded (no
+    -1; see module docstring); page_counts: (B,) mapped logical pages per
+    request; lengths: (B,) tokens per request.
+
+    Decode is exactly the C=1 case of chunked prefill: with
+    ``q_start = lengths - 1`` the prefill mask ``tok < len & tok <= qpos``
+    collapses to the decode mask ``tok < len``, so one kernel serves both
+    paths (and empty lanes, qpos = -1, stay fully masked).
+
+    Returns (B,H,hd)."""
+    return paged_prefill_fwd(q[:, None], kv_pages, block_table, page_counts,
+                             lengths, lengths - 1,
+                             pages_per_step=pages_per_step, scale=scale,
+                             interpret=interpret)[:, 0]
+
+
+# ===========================================================================
+# chunked prefill: C query tokens, G pages per grid step
+# ===========================================================================
+
+def _prefill_kernel(bt_ref, cnt_ref, len_ref, start_ref, q_ref, *refs,
+                    scale: float, page_size: int, g_pages: int, groups: int):
+    kv_refs = refs[:g_pages]
+    o_ref = refs[g_pages]
+    m_ref, l_ref, acc_ref = refs[g_pages + 1:]
     b, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
@@ -35,78 +97,90 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    valid_page = bt_ref[b, j] >= 0
+    npages = cnt_ref[b]
 
-    @pl.when(valid_page)
+    @pl.when(j * g_pages < npages)
     def _accumulate():
-        q = q_ref[0]                              # (H, hd)
-        k = k_ref[0]                              # (page, Kv, hd)
-        v = v_ref[0]
+        q = q_ref[0]                                   # (C, H, hd)
+        k = jnp.concatenate([r[0, 0] for r in kv_refs], axis=0)
+        v = jnp.concatenate([r[0, 1] for r in kv_refs], axis=0)
+        C, _, hd = q.shape
         Kv = k.shape[1]
-        hd = q.shape[-1]
-        qg = q.reshape(Kv, groups, hd)
-        s = jnp.einsum("kgh,pkh->kgp", qg.astype(jnp.float32),
-                       k.astype(jnp.float32)) * scale  # (Kv,G,page)
-        tok = j * page_size + jax.lax.broadcasted_iota(
-            jnp.int32, s.shape, 2)
-        mask = tok < len_ref[b]
+        qg = q.reshape(C, Kv, groups, hd)
+        s = jnp.einsum("ckgh,pkh->ckgp", qg.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale  # (C,Kv,G,G*page)
+        tok = j * g_pages * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 3)
+        qpos = start_ref[b] + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        # one mask covers pool history AND in-chunk causality: the chunk's
+        # own K/V are already pool-resident at positions start..start+C-1
+        mask = (tok < len_ref[b]) & (tok <= qpos)
         s = jnp.where(mask, s, NEG_INF)
 
-        m_prev, l_prev = m_ref[...], l_ref[...]   # (Kv,G,1)
-        m_cur = jnp.max(s, axis=2, keepdims=True)
-        m_new = jnp.maximum(m_prev, m_cur)
+        m_prev, l_prev = m_ref[...], l_ref[...]        # (C,Kv,G,1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=3, keepdims=True))
         p = jnp.exp(s - m_new)
         p = jnp.where(mask, p, 0.0)
         alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=2, keepdims=True)
-        ctx = jnp.einsum("kgp,pkh->kgh", p, v.astype(jnp.float32))
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=3, keepdims=True)
+        ctx = jnp.einsum("ckgp,pkh->ckgh", p, v.astype(jnp.float32))
         acc_ref[...] = acc_ref[...] * alpha + ctx
         m_ref[...] = m_new
 
-    @pl.when(j == n_pages - 1)
+    last_step = (jnp.maximum(npages, 1) + g_pages - 1) // g_pages - 1
+
+    @pl.when(j == last_step)
     def _flush():
         l = l_ref[...]
         safe = jnp.where(l == 0.0, 1.0, l)
-        out = (acc_ref[...] / safe)               # (Kv,G,hd)
+        out = acc_ref[...] / safe                      # (C,Kv,G,hd)
         o_ref[0] = out.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "scale"))
-def paged_attention_fwd(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
-                        block_table: jax.Array, lengths: jax.Array, *,
-                        scale: float | None = None,
-                        interpret: bool = False) -> jax.Array:
-    """q: (B,H,hd); k/v_pages: (P, page, Kv, hd); block_table: (B, max_pages)
-    int32 physical page ids (-1 unmapped); lengths: (B,) tokens per request.
+@functools.partial(jax.jit, static_argnames=("pages_per_step", "interpret",
+                                             "scale"))
+def paged_prefill_fwd(q: jax.Array, kv_pages: jax.Array,
+                      block_table: jax.Array, page_counts: jax.Array,
+                      lengths: jax.Array, q_start: jax.Array, *,
+                      pages_per_step: int = 2, scale: float | None = None,
+                      interpret: bool = False) -> jax.Array:
+    """q: (B,C,H,hd) — a chunk of C query tokens per request, occupying
+    positions ``q_start[b] .. q_start[b]+C-1``; their K/V must already be
+    written into the pool (``lengths`` includes them).  Other args as
+    ``paged_decode_fwd``.  Rows past a request's real chunk length attend
+    to the full resident sequence (callers ignore them).
 
-    Returns (B,H,hd)."""
-    B, H, hd = q.shape
-    P, page, Kv, _ = k_pages.shape
+    Returns (B,C,H,hd)."""
+    B, C, H, hd = q.shape
+    P, _, page, Kv, _ = kv_pages.shape
     n_pages = block_table.shape[1]
+    g = max(1, min(pages_per_step, n_pages))
+    n_steps = _cdiv(n_pages, g)
     groups = H // Kv
     sc = scale if scale is not None else 1.0 / math.sqrt(hd)
 
+    def kv_spec(gi):
+        def imap(b, j, bt, cnt, ln, st):
+            idx = jnp.minimum(j * g + gi, n_pages - 1)
+            return (bt[b, idx], 0, 0, 0, 0)
+        return pl.BlockSpec((1, 2, page, Kv, hd), imap)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(B, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, H, hd), lambda b, j, bt, ln: (b, 0, 0)),
-            pl.BlockSpec((1, page, Kv, hd),
-                         lambda b, j, bt, ln: (jnp.maximum(bt[b, j], 0), 0, 0, 0)),
-            pl.BlockSpec((1, page, Kv, hd),
-                         lambda b, j, bt, ln: (jnp.maximum(bt[b, j], 0), 0, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, H, hd), lambda b, j, bt, ln: (b, 0, 0)),
+        num_scalar_prefetch=4,
+        grid=(B, n_steps),
+        in_specs=[pl.BlockSpec((1, C, H, hd), lambda b, j, *_: (b, 0, 0, 0))] +
+                 [kv_spec(gi) for gi in range(g)],
+        out_specs=pl.BlockSpec((1, C, H, hd), lambda b, j, *_: (b, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((Kv, groups, 1), jnp.float32),
-            pltpu.VMEM((Kv, groups, 1), jnp.float32),
-            pltpu.VMEM((Kv, groups, hd), jnp.float32),
+            pltpu.VMEM((C, Kv, groups, 1), jnp.float32),
+            pltpu.VMEM((C, Kv, groups, 1), jnp.float32),
+            pltpu.VMEM((C, Kv, groups, hd), jnp.float32),
         ],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, scale=sc, page_size=page,
-                          n_pages=n_pages, groups=groups),
+        functools.partial(_prefill_kernel, scale=sc, page_size=page,
+                          g_pages=g, groups=groups),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, C, H, hd), q.dtype),
         interpret=interpret,
-    )(block_table, lengths, q, k_pages, v_pages)
+    )(block_table, page_counts, lengths, q_start, q, *([kv_pages] * g))

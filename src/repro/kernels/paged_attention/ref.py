@@ -37,3 +37,35 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     p = jnp.where(jnp.any(mask & page_ok, axis=-1, keepdims=True), p, 0.0)
     out = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
     return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_prefill_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                      block_table: jax.Array, lengths: jax.Array,
+                      q_start: jax.Array, *,
+                      scale: float | None = None) -> jax.Array:
+    """Oracle for chunked prefill: same contract as kernel.paged_prefill_fwd
+    (q: (B,C,H,hd); lengths include the chunk's pool-resident tokens)."""
+    B, C, H, hd = q.shape
+    P, page, Kv, _ = k_pages.shape
+    n_pages = block_table.shape[1]
+    G = H // Kv
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    safe_bt = jnp.maximum(block_table, 0)
+    T = n_pages * page
+    k = k_pages[safe_bt].reshape(B, T, Kv, hd)
+    v = v_pages[safe_bt].reshape(B, T, Kv, hd)
+
+    qg = q.reshape(B, C, Kv, G, hd)
+    s = jnp.einsum("bckgh,btkh->bckgt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sc
+    tok = jnp.arange(T)[None, None, :]                        # (1,1,T)
+    qpos = (q_start[:, None] + jnp.arange(C)[None, :])[..., None]  # (B,C,1)
+    mask = (tok < lengths[:, None, None]) & (tok <= qpos)     # (B,C,T)
+    page_ok = jnp.repeat(block_table >= 0, page, axis=1)[:, None, :]
+    mask = (mask & page_ok)[:, :, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, axis=-1, keepdims=True), p, 0.0)
+    out = jnp.einsum("bckgt,btkh->bckgh", p, v.astype(jnp.float32))
+    return out.reshape(B, C, H, hd).astype(q.dtype)

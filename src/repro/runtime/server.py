@@ -2,21 +2,42 @@
 
 This is the serving-side integration of HERO's C1/C2: the host scheduler and
 the accelerator share the *logical token address space* (SVM); the RAB
-translates logical pages to physical KV pool slots; the decode kernel
-(`kernels/paged_attention`) performs the translation on-device through the
+translates logical pages to physical KV pool slots; the attention kernels
+(`kernels/paged_attention`) perform the translation on-device through the
 scalar-prefetched block table; page allocation happens on the RAB miss path;
 admit/finish/alloc/release are all traced (C4) so Fig.6-style timelines can
 be reconstructed from a run.
 
+The hot path follows HERO's "keep the accelerator fed" discipline (Fig. 5 —
+DMA double-buffering + zero-copy SVM so the host never serializes on the
+data path):
+
+* prompts are admitted through a *chunked prefill* step that consumes up to
+  ``chunk`` tokens per engine iteration in one ``paged_prefill`` kernel
+  launch (not token-by-token through the decode path);
+* the decode step runs entirely from device-resident state — block tables,
+  lengths, the active-lane mask, and the previously sampled token all live
+  on device, greedy sampling is on-device, and the only per-iteration
+  transfer is a single device->host pull of the sampled tokens;
+* K and V for all new tokens of all lanes are written into the fused
+  ``(L, P+1, 2, page, Kv, hd)`` pool with ONE scatter per layer (invalid
+  slots are routed to a trash page, index ``P``, so no masking pass is
+  needed);
+* the device block table is repeat-padded (entries past the last mapped
+  page repeat it) and updated incrementally — one small host->device row
+  write per page allocation, amortized to ``<= 1/page_size`` per token.
+
+Host<->device transfer events on this path are traced (``EventType.H2D`` /
+``D2H``) so ``benchmarks/serve_throughput.py`` can count them.
+
 Demo-scale engine for plain-GQA transformer archs (yi/minitron/qwen3/olmoe
-smoke configs); prompts are prefilled through the decode path token-by-token
-(a production engine would batch-prefill — noted simplification).
+smoke configs).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,8 +49,10 @@ from repro.core.tracing import EventType, TraceBuffer
 from repro.models import layers as L
 from repro.models import model as M
 from repro.models.layers import rope, rms_head_norm
-from repro.kernels.paged_attention.ops import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.ops import (
+    paged_prefill_fused, page_counts_for,
+)
+from repro.kernels.paged_attention.ref import paged_prefill_ref
 
 
 @dataclasses.dataclass
@@ -46,7 +69,8 @@ class Request:
 class PagedServer:
     def __init__(self, cfg: ArchConfig, params, *, num_pages: int = 64,
                  page_size: int = 8, max_lanes: int = 4,
-                 max_pages_per_seq: int = 16,
+                 max_pages_per_seq: int = 16, chunk: int = 16,
+                 pages_per_step: int = 2,
                  rab_cfg: RABConfig = RABConfig(l1_entries=8, l2_entries=32,
                                                 l2_assoc=4, l2_banks=2),
                  tracer: Optional[TraceBuffer] = None,
@@ -57,36 +81,84 @@ class PagedServer:
         self.cfg, self.params = cfg, params
         self.page_size, self.max_lanes = page_size, max_lanes
         self.max_pages = max_pages_per_seq
+        self.chunk = max(1, chunk)
         self.tracer = tracer or TraceBuffer()
         self.rab = RAB(rab_cfg, self.tracer)
         self.pool = PagedKVPool(num_pages, page_size, max_pages_per_seq,
                                 self.rab)
         L_, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
         dt = jnp.dtype(cfg.param_dtype)
-        self.k_pages = jnp.zeros((L_, num_pages, page_size, kv, hd), dt)
-        self.v_pages = jnp.zeros((L_, num_pages, page_size, kv, hd), dt)
+        # fused K/V pool; the extra page (index num_pages) is the trash page
+        # masked writes are routed to
+        self.kv_pages = jnp.zeros((L_, num_pages + 1, 2, page_size, kv, hd),
+                                  dt)
         self.use_kernel = use_kernel
-        self._step = jax.jit(functools.partial(
-            _paged_decode_step, cfg, use_kernel))
+        itp = jax.default_backend() != "tpu"
+        self._chunk_step = jax.jit(functools.partial(
+            _paged_chunk_step, cfg, use_kernel, pages_per_step, itp,
+            num_pages))
+        self._decode_step = jax.jit(functools.partial(
+            _paged_decode_step, cfg, use_kernel, pages_per_step, itp,
+            num_pages))
+        # device-resident engine state (HERO SVM: the scheduler and the
+        # model share these without per-iteration re-uploads)
+        self.bt_dev = jnp.zeros((max_lanes, max_pages_per_seq), jnp.int32)
+        self.len_dev = jnp.zeros((max_lanes,), jnp.int32)
+        self.active_dev = jnp.zeros((max_lanes,), jnp.int32)
+        self.last_tok = jnp.zeros((max_lanes,), jnp.int32)
+        self._bt_host = np.zeros((max_lanes, max_pages_per_seq), np.int32)
         self.lanes: List[Optional[Request]] = [None] * max_lanes
         self.queue: List[Request] = []
         self.finished: List[Request] = []
-        self._rid_seq: Dict[int, int] = {}
+        self.iterations = 0
+        self.h2d_events = 0
+        self.d2h_events = 0
+
+    # --------------------------------------------------------------- trace --
+    def _h2d(self, n: int = 1):
+        self.h2d_events += n
+        self.tracer.record_host(EventType.H2D, n, 0)
+
+    def _d2h(self, n: int = 1):
+        self.d2h_events += n
+        self.tracer.record_host(EventType.D2H, n, 0)
 
     # ------------------------------------------------------------- admin --
     def submit(self, req: Request):
+        # real exceptions, not asserts: an unplaceable request at the queue
+        # head would otherwise spin _admit forever (and -O strips asserts)
+        if not req.prompt:
+            # an empty prompt would enter decode seeded by whatever token
+            # the lane's previous occupant left in last_tok
+            raise ValueError("empty prompt")
+        if len(req.prompt) + req.max_new - 1 > \
+                self.max_pages * self.page_size:
+            raise ValueError("request exceeds max_pages_per_seq")
+        if self._pages_needed(req) > self.pool.num_pages:
+            raise ValueError("request exceeds KV pool capacity")
         self.queue.append(req)
+
+    def _pages_needed(self, req: Request) -> int:
+        # every token the engine will *write* K/V for: the prompt plus all
+        # generated tokens except the last (sampled but never fed back)
+        total = len(req.prompt) + req.max_new - 1
+        return int(page_counts_for(total, self.page_size))
 
     def _admit(self):
         for i in range(self.max_lanes):
             if self.lanes[i] is None and self.queue:
-                need = -(-len(self.queue[0].prompt) // self.page_size) + 1
+                need = self._pages_needed(self.queue[0])
                 if not self.pool.can_alloc(need):
                     break
                 req = self.queue.pop(0)
                 req.lane = i
                 self.lanes[i] = req
-                self._rid_seq[req.rid] = req.rid
+                # reserve the request's full lifetime page budget so chunked
+                # prefill can never hit pool exhaustion mid-stream
+                self.pool.reserve(req.rid, need)
+                self.active_dev = self.active_dev.at[i].set(1)
+                self.len_dev = self.len_dev.at[i].set(0)
+                self._h2d(1)
                 self.tracer.record_host(EventType.REQUEST_ADMIT, req.rid, i)
 
     def _finish(self, req: Request):
@@ -96,6 +168,9 @@ class PagedServer:
         self.pool.release(req.rid)
         self.tracer.record_host(EventType.PAGE_RELEASE, req.rid, 0)
         self.lanes[req.lane] = None
+        self.active_dev = self.active_dev.at[req.lane].set(0)
+        self.len_dev = self.len_dev.at[req.lane].set(0)
+        self._h2d(1)
         self.finished.append(req)
 
     # --------------------------------------------------------------- step --
@@ -105,41 +180,66 @@ class PagedServer:
         active = [r for r in self.lanes if r is not None]
         if not active:
             return bool(self.queue)
+        self.iterations += 1
 
-        B = len(active)
-        tokens = np.zeros((B, 1), np.int32)
-        write_page = np.zeros((B,), np.int32)
-        write_slot = np.zeros((B,), np.int32)
-        pos = np.zeros((B,), np.int32)
-        for j, r in enumerate(active):
-            nxt = r.prompt[r.fed] if r.fed < len(r.prompt) else r.out[-1]
-            tokens[j, 0] = nxt
-            t = self.pool.seq_len.get(r.rid, 0)
-            pos[j] = t
-            lpage, slot = self.pool.append_token(r.rid)
-            if slot == 0:
-                self.tracer.record_host(EventType.PAGE_ALLOC, r.rid, lpage)
-            # RAB translation for the *write* path (miss -> handler -> retry)
-            write_page[j] = self.pool.translate(r.rid, lpage)
-            write_slot[j] = slot
-
-        bt = self.pool.block_table([r.rid for r in active])
-        lengths = self.pool.lengths([r.rid for r in active])
-
-        logits, self.k_pages, self.v_pages = self._step(
-            self.params, self.k_pages, self.v_pages,
-            jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(bt),
-            jnp.asarray(lengths), jnp.asarray(write_page),
-            jnp.asarray(write_slot))
-        nxt_tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
-
-        for j, r in enumerate(active):
+        B, C = self.max_lanes, self.chunk
+        n_new = np.zeros((B,), np.int32)
+        feed = np.zeros((B, C), np.int32)
+        use_last = np.zeros((B,), np.int32)
+        decode_only = True
+        for r in active:
+            i = r.lane
             if r.fed < len(r.prompt):
-                r.fed += 1
-                if r.fed == len(r.prompt):
-                    r.out.append(int(nxt_tok[j]))
+                n = min(C, len(r.prompt) - r.fed)
+                feed[i, :n] = r.prompt[r.fed:r.fed + n]
+                n_new[i] = n
+                decode_only = False
             else:
-                r.out.append(int(nxt_tok[j]))
+                n_new[i] = 1
+                use_last[i] = 1     # token is device-resident; no upload
+
+        # host-side page accounting: allocate (through the RAB translate
+        # path) every page the new tokens touch, and push only the dirty
+        # repeat-padded block-table rows to the device
+        dirty = set()
+        for r in active:
+            i = r.lane
+            for _ in range(int(n_new[i])):
+                lpage, slot = self.pool.append_token(r.rid)
+                if slot == 0:
+                    phys = self.pool.translate(r.rid, lpage)
+                    self.tracer.record_host(EventType.PAGE_ALLOC, r.rid, phys)
+                    self._bt_host[i, lpage:] = phys
+                    dirty.add(i)
+        if dirty:
+            rows = sorted(dirty)
+            self.bt_dev = self.bt_dev.at[jnp.asarray(rows)].set(
+                jnp.asarray(self._bt_host[rows]))
+            self._h2d(len(rows))    # one dispatch, len(rows) rows uploaded
+
+        if decode_only:
+            # sync-free: every input already lives on device
+            self.last_tok, self.kv_pages, self.len_dev = self._decode_step(
+                self.params, self.kv_pages, self.bt_dev, self.len_dev,
+                self.active_dev, self.last_tok)
+        else:
+            self._h2d(1)            # the prompt-chunk feed bundle
+            self.last_tok, self.kv_pages, self.len_dev = self._chunk_step(
+                self.params, self.kv_pages, self.bt_dev, self.len_dev,
+                jnp.asarray(n_new), jnp.asarray(feed), self.last_tok,
+                jnp.asarray(use_last))
+
+        tok = np.asarray(self.last_tok)     # one pull per iteration
+        self._d2h(1)
+
+        for r in list(active):
+            i = r.lane
+            if r.fed < len(r.prompt):
+                r.fed += int(n_new[i])
+                if r.fed == len(r.prompt):
+                    r.out.append(int(tok[i]))
+            else:
+                r.out.append(int(tok[i]))
             if len(r.out) >= r.max_new:
                 self._finish(r)
         return True
@@ -154,47 +254,103 @@ class PagedServer:
 
 
 # ===========================================================================
-# jitted paged decode step
+# jitted engine steps
 # ===========================================================================
 
-def _paged_decode_step(cfg: ArchConfig, use_kernel: bool, params,
-                       k_pages, v_pages, tokens, pos, block_table, lengths,
-                       write_page, write_slot):
-    """One token for B lanes against the paged pool.
+def _write_coords(bt, lens, n_new, C, page_size, trash):
+    """Physical (page, slot) for the C candidate token writes of each lane.
 
-    k/v_pages: (L, P, page, kv, hd); block_table: (B, n_pages);
-    write_page/slot: physical coordinates for this token's K/V.
-    """
-    B = tokens.shape[0]
-    x = L.embed_tokens(cfg, params["embed"], tokens)
-    lanes = jnp.arange(B)
-    attend = paged_attention if use_kernel else paged_attention_ref
+    Invalid slots (beyond a lane's n_new) are routed to the trash page so a
+    single unmasked scatter covers every lane."""
+    n_pages = bt.shape[1]
+    pos = lens[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]   # (B,C)
+    lp = jnp.minimum(pos // page_size, n_pages - 1)
+    sl = pos % page_size
+    phys = jnp.take_along_axis(bt, lp, axis=1)
+    valid = jnp.arange(C, dtype=jnp.int32)[None, :] < n_new[:, None]
+    return jnp.where(valid, phys, trash), sl
+
+
+def _layer_qkv(cfg, lp, x, pos):
+    h = L.norm_forward(cfg, lp["ln1"], x)
+    ap = lp["attn"]
+    q = jnp.einsum("bsd,dhk->bshk", h, ap["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, ap["wv"])
+    if cfg.use_qk_norm:
+        q = rms_head_norm(ap["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(ap["k_norm"], k, cfg.norm_eps)
+    if cfg.use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _layer_mlp(cfg, lp, x):
+    h = L.norm_forward(cfg, lp["ln2"], x)
+    if "moe" in lp:
+        from repro.models import moe as MOE
+        return x + MOE.moe_forward(cfg, lp["moe"], h)
+    return x + L.mlp_forward(cfg, lp["mlp"], h)
+
+
+def _paged_chunk_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
+                      interpret: bool, num_pages: int, params, kv_pages,
+                      bt, lens, n_new, feed, last_tok, use_last):
+    """Consume up to C tokens per lane: prompt chunks from ``feed``, decode
+    lanes (``use_last``) from the device-resident previous sample.
+
+    kv_pages: (L, P+1, 2, page, kv, hd); bt: (B, n_pages) repeat-padded.
+    Returns (sampled_tokens (B,), kv_pages, new_lens)."""
+    B, C = feed.shape
+    page = kv_pages.shape[3]
+    n_pages = bt.shape[1]
+    tokens = feed.at[:, 0].set(jnp.where(use_last == 1, last_tok, feed[:, 0]))
+    x = L.embed_tokens(cfg, params["embed"], tokens)        # (B,C,d)
+    pos = lens[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    new_lens = lens + n_new
+    counts = page_counts_for(new_lens, page)
+    phys, sl = _write_coords(bt, lens, n_new, C, page, num_pages)
+    if not use_kernel:      # the -1-marked table form the oracle expects
+        idx = jnp.arange(n_pages, dtype=jnp.int32)[None, :]
+        bt_masked = jnp.where(idx < counts[:, None], bt, -1)
 
     for i in range(cfg.num_layers):
         lp = M._sub(params["layers"], i)
-        h = L.norm_forward(cfg, lp["ln1"], x)
-        ap = lp["attn"]
-        q = jnp.einsum("bsd,dhk->bshk", h, ap["wq"])
-        k = jnp.einsum("bsd,dhk->bshk", h, ap["wk"])
-        v = jnp.einsum("bsd,dhk->bshk", h, ap["wv"])
-        if cfg.use_qk_norm:
-            q = rms_head_norm(ap["q_norm"], q, cfg.norm_eps)
-            k = rms_head_norm(ap["k_norm"], k, cfg.norm_eps)
-        if cfg.use_rope:
-            q = rope(q, pos[:, None], cfg.rope_theta)
-            k = rope(k, pos[:, None], cfg.rope_theta)
-        # write this token's K/V into its physical page slot
-        k_pages = k_pages.at[i, write_page, write_slot].set(k[:, 0])
-        v_pages = v_pages.at[i, write_page, write_slot].set(v[:, 0])
-        a = attend(q[:, 0], k_pages[i], v_pages[i], block_table, lengths)
-        x = x + jnp.einsum("bhk,hkd->bd", a, ap["wo"])[:, None, :]
-        h = L.norm_forward(cfg, lp["ln2"], x)
-        if "moe" in lp:
-            from repro.models import moe as MOE
-            x = x + MOE.moe_forward(cfg, lp["moe"], h)
+        q, k, v = _layer_qkv(cfg, lp, x, pos)
+        # one fused scatter writes K AND V for all lanes' chunk tokens
+        kv_pages = kv_pages.at[i, phys, :, sl].set(jnp.stack([k, v], axis=2))
+        if use_kernel:
+            a = paged_prefill_fused(q, kv_pages[i], bt, counts, new_lens,
+                                    lens, interpret=interpret,
+                                    pages_per_step=pages_per_step)
         else:
-            x = x + L.mlp_forward(cfg, lp["mlp"], h)
+            a = paged_prefill_ref(q, kv_pages[i, :, 0], kv_pages[i, :, 1],
+                                  bt_masked, new_lens, lens)
+        x = x + jnp.einsum("bshk,hkd->bsd", a, lp["attn"]["wo"])
+        x = _layer_mlp(cfg, lp, x)
 
     x = L.norm_forward(cfg, params["final_norm"], x)
-    logits = L.logits_from_hidden(cfg, params["embed"], x)
-    return logits, k_pages, v_pages
+    logits = L.logits_from_hidden(cfg, params["embed"], x)  # (B,C,V)
+    row = jnp.maximum(n_new - 1, 0)
+    last_logits = jnp.take_along_axis(logits, row[:, None, None],
+                                      axis=1)[:, 0]
+    nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    nxt = jnp.where(n_new > 0, nxt, last_tok)   # idle lanes keep their token
+    return nxt, kv_pages, new_lens
+
+
+def _paged_decode_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
+                       interpret: bool, num_pages: int, params, kv_pages,
+                       bt, lens, active, last_tok):
+    """One decode token for every active lane, entirely from device state —
+    the C=1 case of the chunk step (mirroring paged_decode_fwd, which is the
+    C=1 case of the prefill kernel), with every lane fed its device-resident
+    previous sample.
+
+    Returns (sampled_tokens (B,), kv_pages, new_lens)."""
+    B = lens.shape[0]
+    return _paged_chunk_step(
+        cfg, use_kernel, pages_per_step, interpret, num_pages, params,
+        kv_pages, bt, lens, active, jnp.zeros((B, 1), jnp.int32), last_tok,
+        jnp.ones((B,), jnp.int32))

@@ -8,7 +8,9 @@ from repro.kernels.cluster_matmul import cluster_matmul, cluster_matmul_ref
 from repro.kernels.flash_attention import (
     flash_attention, flash_attention_ref, mha_flash,
 )
-from repro.kernels.paged_attention import paged_attention, paged_attention_ref
+from repro.kernels.paged_attention import (
+    paged_attention, paged_attention_ref, paged_prefill, paged_prefill_ref,
+)
 
 TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
@@ -60,6 +62,33 @@ def test_flash_attention_grad(rng):
     np.testing.assert_allclose(g, gr, rtol=2e-3, atol=2e-3)
 
 
+def test_mha_flash_gqa_grad(rng):
+    """The groups>1 backward (repeat-based VJP over the unexpanded KV
+    layout) must sum per-group grads back onto the shared KV heads."""
+    B, S, H, Kv, hd = 2, 128, 4, 2, 32
+    q = jax.random.normal(rng, (B, S, H, hd), jnp.float32) * 0.3
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, S, Kv, hd),
+                          jnp.float32) * 0.3
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, S, Kv, hd),
+                          jnp.float32)
+    from repro.models.attention import attend_fullseq
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    def loss_kernel(q_, k_, v_):
+        return (mha_flash(q_, k_, v_, interpret=True) ** 2).sum()
+
+    def loss_ref(q_, k_, v_):
+        out = attend_fullseq(q_, k_, v_, q_positions=pos, k_positions=pos,
+                             causal=True)
+        return (out ** 2).sum()
+
+    g = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
 def test_mha_flash_gqa(rng):
     B, S, H, Kv, hd = 2, 128, 8, 2, 32
     q = jax.random.normal(rng, (B, S, H, hd), jnp.float32) * 0.3
@@ -102,3 +131,81 @@ def test_paged_attention(B, H, Kv, hd, page, npg, P, dtype, rng):
     ref = paged_attention_ref(q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths))
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill + multi-page decode parity
+# ---------------------------------------------------------------------------
+
+def _paged_pool(rng, B, Kv, hd, page, npg, P, lengths):
+    """Random pool + a block table mapping ceil(len/page) pages per lane."""
+    kp = jax.random.normal(jax.random.fold_in(rng, 1), (P, page, Kv, hd),
+                           jnp.float32) * 0.3
+    vp = jax.random.normal(jax.random.fold_in(rng, 2), (P, page, Kv, hd),
+                           jnp.float32)
+    bt = np.full((B, npg), -1, np.int32)
+    nxt = 0
+    for i, ln in enumerate(lengths):
+        for j in range(-(-int(ln) // page)):
+            bt[i, j] = nxt % P
+            nxt += 1
+    return kp, vp, jnp.asarray(bt)
+
+
+@pytest.mark.parametrize("pages_per_step", [1, 2, 3])
+def test_paged_decode_multi_page_grid(pages_per_step, rng):
+    """Multi-page decode grid is numerically identical to the oracle for
+    every pages-per-step grouping (incl. groups that don't divide npg)."""
+    B, H, Kv, hd, page, npg, P = 3, 8, 4, 32, 8, 7, 24
+    q = jax.random.normal(rng, (B, H, hd), jnp.float32) * 0.3
+    lengths = np.array([1, 29, 56], np.int32)
+    kp, vp, bt = _paged_pool(rng, B, Kv, hd, page, npg, P, lengths)
+    out = paged_attention(q, kp, vp, bt, jnp.asarray(lengths),
+                          interpret=True, pages_per_step=pages_per_step)
+    ref = paged_attention_ref(q, kp, vp, bt, jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("C,H,Kv,hd,page,npg,P", [
+    (8, 8, 4, 32, 4, 10, 24),      # G=2
+    (16, 8, 2, 16, 8, 6, 32),      # G=4
+    (5, 6, 6, 32, 16, 3, 8),       # G=1, chunk not a divisor of anything
+])
+@pytest.mark.parametrize("pages_per_step", [1, 2])
+def test_paged_prefill_matches_ref(C, H, Kv, hd, page, npg, P,
+                                   pages_per_step, rng):
+    """Chunked prefill vs the dense oracle across random prompt lengths,
+    page sizes and GQA group counts."""
+    B = 3
+    cap = npg * page - C
+    start = np.asarray(jax.random.randint(jax.random.fold_in(rng, 5), (B,),
+                                          0, max(cap, 1))).astype(np.int32)
+    lengths = (start + C).astype(np.int32)
+    q = jax.random.normal(rng, (B, C, H, hd), jnp.float32) * 0.3
+    kp, vp, bt = _paged_pool(rng, B, Kv, hd, page, npg, P, lengths)
+    out = paged_prefill(q, kp, vp, bt, jnp.asarray(lengths),
+                        jnp.asarray(start), interpret=True,
+                        pages_per_step=pages_per_step)
+    ref = paged_prefill_ref(q, kp, vp, bt, jnp.asarray(lengths),
+                            jnp.asarray(start))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_paged_prefill_matches_token_by_token(rng):
+    """A whole chunk through the prefill kernel equals feeding the same
+    positions one at a time through the decode kernel (the pre-chunked
+    engine's path)."""
+    B, C, H, Kv, hd, page, npg, P = 2, 8, 4, 2, 16, 4, 6, 16
+    start = np.array([0, 5], np.int32)
+    lengths = (start + C).astype(np.int32)
+    q = jax.random.normal(rng, (B, C, H, hd), jnp.float32) * 0.3
+    kp, vp, bt = _paged_pool(rng, B, Kv, hd, page, npg, P, lengths)
+    chunked = np.asarray(paged_prefill(q, kp, vp, bt, jnp.asarray(lengths),
+                                       jnp.asarray(start), interpret=True))
+    for c in range(C):
+        step_len = jnp.asarray((start + c + 1).astype(np.int32))
+        one = paged_attention(q[:, c], kp, vp, bt, step_len, interpret=True)
+        np.testing.assert_allclose(chunked[:, c], np.asarray(one),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,59 @@
+"""RAB property tests (hypothesis): whatever the access pattern, translation
+is never stale and the pool never double-maps.  Skipped wholesale when
+hypothesis is not installed (see requirements-dev.txt); the deterministic
+unit tests in ``test_rab.py`` always run."""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.rab import RAB, RABConfig, PagedKVPool  # noqa: E402
+
+CFG = RABConfig(l1_entries=4, l2_entries=16, l2_assoc=4, l2_banks=2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=120))
+def test_translation_always_correct(vpages):
+    """Property: whatever the access pattern, a translation that completes
+    always returns the page-table value (TLB never returns stale garbage)."""
+    rab = RAB(CFG)
+    pt = {v: v * 7 + 1 for v in range(31)}
+    for i, v in enumerate(vpages):
+        p, _ = rab.lookup(v, requester=i % 8)
+        if p is None:
+            rab.handle_misses(pt)
+            p, _ = rab.lookup(v, requester=i % 8)
+        assert p == pt[v]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 40), min_size=1, max_size=100))
+def test_resident_subset_of_page_table(vpages):
+    rab = RAB(CFG)
+    pt = {v: v + 100 for v in range(41)}
+    for i, v in enumerate(vpages):
+        if rab.lookup(v, requester=0)[0] is None:
+            rab.handle_misses(pt)
+    for v, p in rab.resident().items():
+        assert pt[v] == p
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.sampled_from([("tok", 1), ("tok", 2), ("rel", 1),
+                                 ("rel", 2)]), max_size=60))
+def test_pool_never_double_maps(ops):
+    """Property: no physical page is mapped by two (seq, lpage) keys, and
+    free + mapped always partitions the pool."""
+    pool = PagedKVPool(num_pages=6, page_size=2, max_pages_per_seq=8)
+    for op, seq in ops:
+        try:
+            if op == "tok":
+                pool.append_token(seq)
+            else:
+                pool.release(seq)
+        except MemoryError:
+            pool.release(seq)
+        mapped = list(pool.page_table.values())
+        assert len(mapped) == len(set(mapped))
+        assert sorted(mapped + pool.free) == list(range(6))

@@ -223,6 +223,30 @@ def test_paged_server_kernel_matches_ref():
     assert run(False) == run(True)
 
 
+def test_paged_server_chunked_prefill_matches_token_by_token():
+    """Chunked admission must not change sampled tokens, only iteration
+    count and transfer traffic."""
+    cfg = get_config("yi-6b").smoke()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[5, 6, 7, 8, 9, 10, 11], [3, 1, 4, 1, 5], [2, 7]]
+
+    def run(chunk):
+        srv = PagedServer(cfg, params, num_pages=32, page_size=4,
+                          max_lanes=2, max_pages_per_seq=8, chunk=chunk,
+                          use_kernel=False)
+        for rid, p in enumerate(prompts):
+            srv.submit(Request(rid=rid, prompt=list(p), max_new=3))
+        done = srv.run()
+        assert len(srv.pool.free) == 32
+        return {r.rid: r.out for r in done}, srv.iterations
+
+    base, base_iters = run(1)
+    for chunk in (3, 4, 16):
+        outs, iters = run(chunk)
+        assert outs == base, chunk
+        assert iters < base_iters
+
+
 # ---------------------------------------------------------------------------
 # C5: config matrix
 # ---------------------------------------------------------------------------
