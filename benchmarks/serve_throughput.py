@@ -1,17 +1,19 @@
-"""Serving hot-path benchmark: chunked prefill vs token-by-token admission.
+"""Serving hot-path benchmark: chunked prefill, shared-prefix KV caching,
+and preemptive scheduling.
 
-Runs the same workload through the paged engine twice — ``chunk=1``
-(reproducing the pre-chunked-prefill engine's iteration structure: one
-prompt token per engine iteration) and ``chunk=N`` — and reports per run:
+Three workloads, all emitted into ``BENCH_serve.json``:
 
-* generated tokens/s (wall clock over the whole workload)
-* engine iterations per finished request
-* host->device / device->host transfer events, trace-counted from the
-  engine's ``TraceBuffer`` (``EventType.H2D`` / ``D2H``), per generated
-  token
-
-Emits ``BENCH_serve.json`` so the serving perf trajectory is tracked
-PR-over-PR.
+* chunked prefill vs token-by-token admission (``chunk=1`` reproduces the
+  pre-chunked-prefill engine's iteration structure) — tokens/s, engine
+  iterations per request, trace-counted H2D/D2H transfer events per
+  generated token;
+* a shared-prefix workload (K distinct system prompts x M requests each)
+  served with prefix caching off vs on — prefix-hit rate, pages saved,
+  copy-on-writes, engine iterations, tokens/s;
+* a forced-preemption probe: a tight pool where a high-priority arrival
+  preempts the running low-priority lane (non-shared pages swap D2H to the
+  host backing store and back) — completion, output correctness vs an
+  uncontended run, and trace-counted swap events.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py            # full
     PYTHONPATH=src python benchmarks/serve_throughput.py --smoke    # CI-sized
@@ -37,11 +39,13 @@ def _make_prompts(n: int, length: int, vocab: int, seed: int = 0):
 
 
 def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
-               max_lanes, max_pages_per_seq, use_kernel) -> dict:
+               max_lanes, max_pages_per_seq, use_kernel,
+               enable_prefix_cache=True) -> dict:
     tracer = TraceBuffer(capacity=1 << 16)
     srv = PagedServer(cfg, params, num_pages=num_pages, page_size=page_size,
                       max_lanes=max_lanes, max_pages_per_seq=max_pages_per_seq,
-                      chunk=chunk, use_kernel=use_kernel, tracer=tracer)
+                      chunk=chunk, use_kernel=use_kernel, tracer=tracer,
+                      enable_prefix_cache=enable_prefix_cache)
     reqs = [Request(rid=rid, prompt=list(p), max_new=max_new)
             for rid, p in enumerate(prompts)]
     for r in reqs:
@@ -62,6 +66,8 @@ def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
     # full-prefill step and may itself emit tokens) doesn't bias the ratio
     gen_timed = gen - warm_gen
     assert len(done) == len(prompts), "workload did not drain"
+    prompt_tokens = sum(len(p) for p in prompts)
+    hit_tokens = srv.pool.stats["prefix_hit_tokens"]
     return {
         "chunk": chunk,
         "iterations": srv.iterations,
@@ -73,6 +79,73 @@ def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
         "d2h_events": d2h,
         "h2d_per_generated_token": h2d / max(gen, 1),
         "d2h_per_generated_token": d2h / max(gen, 1),
+        "prefill_tokens": srv.prefill_tokens,
+        "prefix_hit_tokens": hit_tokens,
+        "prefix_hit_rate": hit_tokens / max(prompt_tokens, 1),
+        "pages_saved": srv.pool.stats["prefix_hit_pages"],
+        "cow_pages": srv.pool.stats["cow"],
+        "outputs": {r.rid: list(r.out) for r in done},
+    }
+
+
+def _make_shared_prefix_prompts(k_prefixes, m_per_prefix, sys_len, user_len,
+                                vocab, seed=1):
+    """K distinct system prompts x M requests each (distinct user tails),
+    interleaved round-robin so the cache is stressed across prefixes."""
+    rng = np.random.default_rng(seed)
+    systems = [rng.integers(1, vocab, size=sys_len).tolist()
+               for _ in range(k_prefixes)]
+    prompts = []
+    for m in range(m_per_prefix):
+        for s in systems:
+            prompts.append(s + rng.integers(1, vocab,
+                                            size=user_len).tolist())
+    return prompts
+
+
+def run_preemption_probe(cfg, params, *, page_size, max_new, use_kernel,
+                         prompt_len=8, chunk=4) -> dict:
+    """Tight pool: a high-priority arrival must preempt the running
+    low-priority lane (swap-out D2H, swap-in H2D) and both must finish
+    with the same outputs as an uncontended run."""
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab_size, size=prompt_len).tolist()
+               for _ in range(2)]
+    per_seq = int(np.ceil((prompt_len + max_new - 1) / page_size))
+
+    def run(num_pages):
+        tracer = TraceBuffer(capacity=1 << 16)
+        srv = PagedServer(cfg, params, num_pages=num_pages,
+                          page_size=page_size, max_lanes=2,
+                          max_pages_per_seq=per_seq + 1, chunk=chunk,
+                          use_kernel=use_kernel, enable_prefix_cache=False,
+                          tracer=tracer)
+        srv.submit(Request(rid=0, prompt=list(prompts[0]), max_new=max_new,
+                           priority=0))
+        srv.step()
+        srv.step()
+        srv.submit(Request(rid=1, prompt=list(prompts[1]), max_new=max_new,
+                           priority=5))
+        while srv.step():
+            pass
+        events = tracer.drain()
+        # swap events carry (rid, pages) in (a0, a1)
+        swap_out = int(sum(e[4] for e in events
+                           if e[2] == EventType.SWAP_OUT))
+        swap_in = int(sum(e[4] for e in events if e[2] == EventType.SWAP_IN))
+        return ({r.rid: list(r.out) for r in srv.finished}, srv,
+                swap_out, swap_in)
+
+    ref_out, _, _, _ = run(4 * per_seq)          # uncontended reference
+    out, srv, swap_out, swap_in = run(per_seq + per_seq // 2)
+    return {
+        "completed": len(out) == 2,
+        "outputs_match_uncontended": out == ref_out,
+        "preemptions": srv.preemptions,
+        "swap_out_pages": swap_out,
+        "swap_in_pages": swap_in,
+        "swap_bytes_out": srv.backing.bytes_out,
+        "swap_bytes_in": srv.backing.bytes_in,
     }
 
 
@@ -97,6 +170,9 @@ def main(argv=None) -> dict:
     if args.smoke:
         args.requests, args.prompt_len, args.max_new = 3, 12, 4
         args.chunk, args.page_size, args.max_lanes = 8, 4, 2
+        k_prefixes, m_per_prefix, sys_len, user_len = 2, 3, 8, 3
+    else:
+        k_prefixes, m_per_prefix, sys_len, user_len = 4, 8, 64, 16
 
     cfg = get_config(args.arch).smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -112,6 +188,31 @@ def main(argv=None) -> dict:
     baseline = run_engine(cfg, params, prompts, chunk=1, **common)
     chunked = run_engine(cfg, params, prompts, chunk=args.chunk, **common)
 
+    # shared-prefix workload: K system prompts x M requests, caching off/on
+    sp_prompts = _make_shared_prefix_prompts(
+        k_prefixes, m_per_prefix, sys_len, user_len, cfg.vocab_size)
+    sp_len = sys_len + user_len
+    sp_per_seq = -(-(sp_len + args.max_new) // args.page_size) + 1
+    # chunk below the system-prompt length so skipped prefill also shows up
+    # as fewer engine iterations, not only as fewer prefill tokens
+    sp_chunk = min(args.chunk, max(sys_len // 4, 8))
+    sp_common = dict(max_new=args.max_new,
+                     num_pages=sp_per_seq * args.max_lanes + 8,
+                     page_size=args.page_size, max_lanes=args.max_lanes,
+                     max_pages_per_seq=sp_per_seq, use_kernel=use_kernel,
+                     chunk=sp_chunk)
+    no_share = run_engine(cfg, params, sp_prompts,
+                          enable_prefix_cache=False, **sp_common)
+    shared = run_engine(cfg, params, sp_prompts,
+                        enable_prefix_cache=True, **sp_common)
+    outputs_match = no_share.pop("outputs") == shared.pop("outputs")
+
+    preemption = run_preemption_probe(cfg, params, page_size=args.page_size,
+                                      max_new=args.max_new,
+                                      use_kernel=use_kernel)
+
+    baseline.pop("outputs", None)
+    chunked.pop("outputs", None)
     result = {
         "arch": cfg.name,
         "backend": jax.default_backend(),
@@ -127,13 +228,31 @@ def main(argv=None) -> dict:
             baseline["iters_per_request"] / chunked["iters_per_request"],
         "tokens_per_s_speedup":
             chunked["tokens_per_s"] / max(baseline["tokens_per_s"], 1e-9),
+        "shared_prefix": {
+            "workload": {"k_prefixes": k_prefixes,
+                         "m_per_prefix": m_per_prefix,
+                         "sys_len": sys_len, "user_len": user_len},
+            "baseline_no_sharing": no_share,
+            "prefix_cached": shared,
+            "outputs_match": outputs_match,
+            "prefix_hit_rate": shared["prefix_hit_rate"],
+            "pages_saved": shared["pages_saved"],
+            "prefill_tokens_saved":
+                no_share["prefill_tokens"] - shared["prefill_tokens"],
+            "prefill_iters_reduction":
+                no_share["iterations"] / max(shared["iterations"], 1),
+            "tokens_per_s_speedup":
+                shared["tokens_per_s"] / max(no_share["tokens_per_s"], 1e-9),
+        },
+        "preemption": preemption,
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
 
     print(f"# serve_throughput ({cfg.name}, {jax.default_backend()}, "
           f"kernel={use_kernel})")
-    for tag, r in (("token-by-token", baseline), ("chunked", chunked)):
+    for tag, r in (("token-by-token", baseline), ("chunked", chunked),
+                   ("no-sharing", no_share), ("prefix-cached", shared)):
         print(f"{tag:>16s}: chunk={r['chunk']:<4d} "
               f"iters/req={r['iters_per_request']:6.1f}  "
               f"tok/s={r['tokens_per_s']:8.1f}  "
@@ -142,6 +261,21 @@ def main(argv=None) -> dict:
     print(f"iters/request reduction: "
           f"{result['iters_per_request_reduction']:.2f}x   "
           f"tokens/s speedup: {result['tokens_per_s_speedup']:.2f}x")
+    sp = result["shared_prefix"]
+    print(f"shared-prefix: hit-rate={sp['prefix_hit_rate']:.2f}  "
+          f"pages saved={sp['pages_saved']}  "
+          f"cow={shared['cow_pages']}  "
+          f"prefill tokens saved={sp['prefill_tokens_saved']}  "
+          f"iters reduction={sp['prefill_iters_reduction']:.2f}x  "
+          f"outputs match={sp['outputs_match']}")
+    pr = result["preemption"]
+    print(f"preemption: completed={pr['completed']}  "
+          f"outputs match={pr['outputs_match_uncontended']}  "
+          f"swapped out/in={pr['swap_out_pages']}/{pr['swap_in_pages']} "
+          f"pages")
+    assert sp["outputs_match"], "prefix caching changed outputs"
+    assert pr["completed"] and pr["outputs_match_uncontended"], \
+        "preemption run incorrect"
     print(f"wrote {args.out}")
     return result
 

@@ -1,5 +1,11 @@
 """Serve a small model with batched requests through the paged engine:
-continuous batching + RAB translation + paged-attention kernel + tracing.
+continuous batching + RAB translation + shared-prefix KV caching +
+priority preemption + paged-attention kernel + tracing.
+
+Requests share a common system prompt, so later admissions hit the prefix
+cache and skip most of their prefill; a late high-priority request lands
+in a deliberately tight pool and preempts a running lane (its pages swap
+to the host backing store and back).
 
     PYTHONPATH=src python examples/serve_paged.py [--requests 8] [--kernel]
 """
@@ -9,7 +15,7 @@ import jax
 
 from repro.configs import get_config
 from repro.core.analysis import layer1_decode, layer2_tlb_transactions, \
-    render_timeline
+    layer2_request_lifecycles, render_timeline
 from repro.models import model as M
 from repro.runtime import PagedServer, Request
 
@@ -24,27 +30,44 @@ def main():
     ap.add_argument("--kernel", action="store_true",
                     help="use the Pallas paged-attention kernels "
                          "(interpret mode on CPU; slower but exercises them)")
+    ap.add_argument("--no-prefix-cache", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    srv = PagedServer(cfg, params, num_pages=64, page_size=4, max_lanes=4,
+    srv = PagedServer(cfg, params, num_pages=24, page_size=4, max_lanes=2,
                       max_pages_per_seq=16, chunk=args.chunk,
-                      use_kernel=args.kernel)
+                      use_kernel=args.kernel,
+                      enable_prefix_cache=not args.no_prefix_cache)
+    system = [9, 9, 8, 2, 5, 5, 1, 3]          # the shared "system prompt"
     for rid in range(args.requests):
-        srv.submit(Request(rid=rid, prompt=[1 + rid, 7, 3, 11], max_new=6))
+        srv.submit(Request(rid=rid, prompt=system + [20 + rid], max_new=6))
+    # a late VIP request into a busy pool: the scheduler preempts a lane
+    srv.step()
+    srv.step()
+    srv.submit(Request(rid=99, prompt=[4, 2] * 8, max_new=6, priority=5))
     done = srv.run()
 
-    print(f"# served {len(done)} requests (lanes=4, pages=64x4, "
+    print(f"# served {len(done)} requests (lanes=2, pages=24x4, "
           f"chunk={args.chunk}) in {srv.iterations} engine iterations "
-          f"(h2d={srv.h2d_events}, d2h={srv.d2h_events})")
-    for r in done:
-        print(f"req {r.rid}: prompt {r.prompt} -> {r.out}")
+          f"(h2d={srv.h2d_events}, d2h={srv.d2h_events}, "
+          f"preemptions={srv.preemptions})")
+    for r in sorted(done, key=lambda r: r.rid):
+        tag = f" [prefix hit {r.prefix_hit_tokens} tok]" \
+            if r.prefix_hit_tokens else ""
+        tag += f" [preempted x{r.preemptions}]" if r.preemptions else ""
+        print(f"req {r.rid}: prompt {r.prompt} -> {r.out}{tag}")
     print("\n# RAB:", srv.rab.stats)
+    print("# pool:", srv.pool.stats)
+    print(f"# backing store: {srv.backing.bytes_out} B out, "
+          f"{srv.backing.bytes_in} B in")
     events = layer1_decode(srv.tracer.drain())
     print(f"\n# {len(events)} events; TLB transactions (first 10):")
     for tx in layer2_tlb_transactions(events)[:10]:
         print(tx)
+    print("\n# request lifecycles (admit/preempt/swap_in/finish):")
+    for rid, spans in sorted(layer2_request_lifecycles(events).items()):
+        print(f"req {rid}: " + " -> ".join(s["kind"] for s in spans))
     print("\n# timeline (truncated)")
     print(render_timeline(events, max_rows=12)[:2000])
 

@@ -45,13 +45,24 @@ for name in ARCHS:
         traceback.print_exc()
         sys.exit(1)
 
-# serving hot path: chunked prefill vs token-by-token on a tiny workload
+# serving hot path: chunked prefill vs token-by-token, the shared-prefix
+# KV-cache workload (hit rate must be real), and the preemption probe
 try:
     import os
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
     from benchmarks import serve_throughput
-    serve_throughput.main(["--smoke"])
+    result = serve_throughput.main(["--smoke"])
+    sp = result["shared_prefix"]
+    assert sp["prefix_hit_rate"] > 0, "no prefix-cache hits in smoke run"
+    assert sp["prefix_cached"]["iterations"] < \
+        sp["baseline_no_sharing"]["iterations"], \
+        "prefix caching did not reduce engine iterations"
+    assert result["preemption"]["swap_out_pages"] > 0, \
+        "preemption probe swapped nothing"
+    print(f"OK   shared-prefix hit-rate="
+          f"{sp['prefix_hit_rate']:.2f} pages_saved={sp['pages_saved']} "
+          f"preemption swaps={result['preemption']['swap_out_pages']}")
 except Exception as e:
     print(f"FAIL serve_throughput: {e}")
     traceback.print_exc()

@@ -10,7 +10,7 @@ buildflow- C5: graph-based config matrix flattening
 """
 from repro.core.rab import RAB, RABConfig, PagedKVPool, RABMiss
 from repro.core.svm import SVMSpace, AddressCollision
-from repro.core.offload import OffloadTarget, OffloadReport
+from repro.core.offload import OffloadTarget, OffloadReport, HostBackingStore
 from repro.core.tracing import TraceBuffer, EventType, HOST_TRACER_ID
 from repro.core.cluster import (
     ClusterConfig, make_cluster_mesh, cluster_parallel_matmul,
@@ -21,7 +21,7 @@ from repro.core.buildflow import ConfigGraph, hero_test_matrix
 __all__ = [
     "RAB", "RABConfig", "PagedKVPool", "RABMiss",
     "SVMSpace", "AddressCollision",
-    "OffloadTarget", "OffloadReport",
+    "OffloadTarget", "OffloadReport", "HostBackingStore",
     "TraceBuffer", "EventType", "HOST_TRACER_ID",
     "ClusterConfig", "make_cluster_mesh", "cluster_parallel_matmul",
     "interconnect_model",

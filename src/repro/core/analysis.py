@@ -71,6 +71,39 @@ def layer2_tlb_transactions(events: Iterable[Event]) -> List[Dict]:
     return done
 
 
+def layer2_request_lifecycles(events: Iterable[Event]) -> Dict[int, List[Dict]]:
+    """Platform: per-request scheduler lifecycle — admit / preempt (with
+    swap-out page counts) / re-admit / finish — stitched from the serving
+    event stream.  a0 is the request id for all scheduler events."""
+    out: Dict[int, List[Dict]] = defaultdict(list)
+    for e in events:
+        if e.etype == EventType.REQUEST_ADMIT:
+            out[e.a0].append({"kind": "admit", "ts": e.ts, "lane": e.a1})
+        elif e.etype == EventType.REQUEST_PREEMPT:
+            out[e.a0].append({"kind": "preempt", "ts": e.ts,
+                              "swapped_pages": e.a1})
+        elif e.etype == EventType.SWAP_IN:
+            out[e.a0].append({"kind": "swap_in", "ts": e.ts, "pages": e.a1})
+        elif e.etype == EventType.REQUEST_FINISH:
+            out[e.a0].append({"kind": "finish", "ts": e.ts, "tokens": e.a1})
+    return dict(out)
+
+
+def assert_swaps_balanced(events: List[Event]) -> bool:
+    """Every page swapped out for a request that eventually finished was
+    swapped back in first (no request completes on lost KV state)."""
+    out_pages: Dict[int, int] = defaultdict(int)
+    for e in events:
+        if e.etype == EventType.SWAP_OUT:
+            out_pages[e.a0] += e.a1
+        elif e.etype == EventType.SWAP_IN:
+            out_pages[e.a0] -= e.a1
+        elif e.etype == EventType.REQUEST_FINISH:
+            if out_pages.get(e.a0, 0) != 0:
+                return False
+    return True
+
+
 @dataclasses.dataclass
 class Assertion:
     """Layer-3 definable assertion over the event stream (HERO §3.4b)."""

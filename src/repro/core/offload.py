@@ -47,6 +47,44 @@ def _nbytes(tree: Any) -> int:
     return sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))
 
 
+class HostBackingStore:
+    """Host-DRAM backing store for reclaimed KV pages (swap space).
+
+    When the serving scheduler preempts a sequence, its pages are dropped
+    from the device pool (non-shared ones are thereby reclaimed): the
+    payload crosses D2H into this store and crosses back H2D on
+    re-admission.  This is HERO's SVM page
+    reclamation (§2.2): because translation is software-managed, a physical
+    page can be repurposed while its *content* survives in host memory, and
+    the mapping is re-established later without the accelerator noticing
+    anything but a RAB refill.
+
+    The store only keeps host copies and byte counters; the engine owns the
+    transfers themselves (and traces them as SWAP_OUT / SWAP_IN plus the
+    underlying D2H / H2D events).
+    """
+
+    def __init__(self):
+        self._pages: Dict[Tuple[int, int], np.ndarray] = {}
+        self.bytes_out = 0       # device -> host (swap-out)
+        self.bytes_in = 0        # host -> device (swap-in)
+        self.peak_pages = 0
+
+    def put(self, seq: int, lpage: int, payload: np.ndarray):
+        arr = np.asarray(payload)
+        self._pages[(seq, lpage)] = arr
+        self.bytes_out += arr.nbytes
+        self.peak_pages = max(self.peak_pages, len(self._pages))
+
+    def pop(self, seq: int, lpage: int) -> np.ndarray:
+        arr = self._pages.pop((seq, lpage))
+        self.bytes_in += arr.nbytes
+        return arr
+
+    def __len__(self) -> int:
+        return len(self._pages)
+
+
 class OffloadTarget:
     """The 'PMCA': a jit compilation target + the offload RTE around it."""
 

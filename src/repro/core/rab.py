@@ -170,11 +170,32 @@ class RAB:
 # ===========================================================================
 
 class PagedKVPool:
-    """Fixed pool of KV pages + per-sequence logical page tables.
+    """Fixed pool of KV pages + per-sequence logical page tables, with
+    shared-prefix caching and copy-on-write.
 
     The device-side consumable is ``block_table(seq_ids)``: an int32 array
     (B, max_pages) of physical page indices (the RAB table image the
     paged_attention kernel reads).  -1 marks unmapped logical pages.
+
+    Page *sharing* reproduces HERO's central SVM property (§2.2, §3.4):
+    because translation is software-managed, a physical page can be mapped
+    into several logical address spaces at once and remapped or reclaimed
+    without touching the data path.  Concretely:
+
+    * every physical page carries a refcount (number of (seq, lpage)
+      mappings pointing at it);
+    * pages whose content is a pure prompt prefix are registered in a
+      prefix index keyed by the exact token prefix they hold (a chain of
+      token blocks; the key for logical page *i* is the token tuple up to
+      the end of that page), so a later request with the same prefix maps
+      the already-filled pages instead of re-prefilling them;
+    * appending into a shared page triggers *copy-on-write* through the
+      ordinary allocation path: a fresh page is mapped for the writer, the
+      old refcount is decremented, and the engine is told to copy the page
+      payload device-side (``drain_cow``);
+    * a released page that is still prefix-indexed parks on a *cached-free*
+      LRU list instead of the free list — reusable as a prefix hit until
+      capacity pressure evicts it.
     """
 
     def __init__(self, num_pages: int, page_size: int, max_pages_per_seq: int,
@@ -186,11 +207,26 @@ class PagedKVPool:
         self.page_table: Dict[Tuple[int, int], int] = {}   # (seq, lpage) -> p
         self.seq_len: Dict[int, int] = {}
         self.reserved: Dict[int, int] = {}                 # seq -> pages held
+        self.refcount: Dict[int, int] = {}                 # ppage -> mappings
+        self.page_key: Dict[int, Tuple[int, ...]] = {}     # ppage -> prefix
+        self.prefix_index: Dict[Tuple[int, ...], int] = {}  # prefix -> ppage
+        self.cached_free: "OrderedDict[int, None]" = OrderedDict()  # LRU
+        self.pending_cow: List[Tuple[int, int, int, int]] = []
         self.rab = rab
+        self.stats = {"prefix_hit_pages": 0, "prefix_hit_tokens": 0,
+                      "cow": 0, "cache_evictions": 0, "swapped_out": 0,
+                      "swapped_in": 0}
 
+    # ------------------------------------------------------------ capacity --
     def available(self) -> int:
-        """Free pages not spoken for by admission-time reservations."""
-        return len(self.free) - sum(self.reserved.values())
+        """Pages obtainable right now (free + evictable cached) minus
+        admission-time reservations."""
+        return len(self.free) + len(self.cached_free) \
+            - sum(self.reserved.values())
+
+    def free_pages(self) -> int:
+        """Pages not referenced by any live mapping (free + cached-free)."""
+        return len(self.free) + len(self.cached_free)
 
     def can_alloc(self, n: int = 1) -> bool:
         return self.available() >= n
@@ -205,40 +241,200 @@ class PagedKVPool:
                               f"({self.available()} available)")
         self.reserved[seq] = self.reserved.get(seq, 0) + n
 
-    def alloc_page(self, seq: int, lpage: int) -> int:
+    def _take_page(self) -> int:
+        """Pop a physical page: free list first, then evict the LRU
+        cached-free page (dropping its prefix-index entry)."""
+        if self.free:
+            return self.free.pop()
+        if self.cached_free:
+            p, _ = self.cached_free.popitem(last=False)
+            self._unregister(p)
+            self.stats["cache_evictions"] += 1
+            return p
+        raise MemoryError("KV pool exhausted")
+
+    def _draw_reservation(self, seq: int):
+        """Charge one page to ``seq``: draw down its reservation, or — when
+        none remains — take from the unreserved residue.  An unreserved
+        allocation may not eat into pages other sequences reserved at
+        admission; that would break the never-fail-after-admission
+        guarantee ``reserve`` documents."""
         if self.reserved.get(seq, 0) > 0:
-            self.reserved[seq] -= 1        # draw down this seq's reservation
+            self.reserved[seq] -= 1
         elif self.available() < 1:
-            # an unreserved allocation may not eat into pages other
-            # sequences reserved at admission — that would break the
-            # never-fail-after-admission guarantee reserve() documents
             raise MemoryError("KV pool exhausted (remaining pages reserved)")
-        if not self.free:
-            raise MemoryError("KV pool exhausted")
-        p = self.free.pop()
+
+    # ---------------------------------------------------------- alloc/free --
+    def alloc_page(self, seq: int, lpage: int) -> int:
+        self._draw_reservation(seq)
+        p = self._take_page()
         self.page_table[(seq, lpage)] = p
+        self.refcount[p] = 1
+        self._invalidate(seq, lpage)
         return p
+
+    def share_page(self, seq: int, lpage: int, ppage: int):
+        """Map an already-filled physical page into ``seq``'s table (a
+        prefix-cache hit): RAB entry installed lazily on first translate,
+        refcount bumped, no data movement."""
+        assert (seq, lpage) not in self.page_table
+        if ppage in self.cached_free:      # revive a parked page
+            del self.cached_free[ppage]
+        self.page_table[(seq, lpage)] = ppage
+        self.refcount[ppage] = self.refcount.get(ppage, 0) + 1
+        self.stats["prefix_hit_pages"] += 1
+        self._invalidate(seq, lpage)
+
+    def unmap_page(self, seq: int, lpage: int):
+        """Drop one mapping; the page is freed (or parked on the cached-free
+        list if still prefix-indexed) when its last reference goes."""
+        p = self.page_table.pop((seq, lpage))
+        self.refcount[p] -= 1
+        if self.refcount[p] == 0:
+            del self.refcount[p]
+            if p in self.page_key:
+                self.cached_free[p] = None
+                self.cached_free.move_to_end(p)
+            else:
+                self.free.append(p)
+        self._invalidate(seq, lpage)
 
     def append_token(self, seq: int) -> Tuple[int, int]:
         """Account one new token; allocates a page at page boundaries.
+
+        Appending into a *shared* page (refcount > 1) copy-on-writes it:
+        the writer gets a private page through the normal allocation path
+        and the (src, dst) payload copy is queued on ``pending_cow`` for
+        the engine to apply device-side.  Appending in place into a page
+        that is prefix-indexed un-registers it (its content is about to
+        diverge from the indexed prefix).
 
         Returns (lpage, slot_in_page)."""
         t = self.seq_len.get(seq, 0)
         lpage, slot = divmod(t, self.page_size)
         if slot == 0:
             self.alloc_page(seq, lpage)
+        else:
+            p = self.page_table[(seq, lpage)]
+            if self.refcount[p] > 1:
+                self._cow(seq, lpage, p)
+            elif p in self.page_key:
+                self._unregister(p)
         self.seq_len[seq] = t + 1
         return lpage, slot
 
+    def _cow(self, seq: int, lpage: int, src: int) -> int:
+        """Copy-on-write ``(seq, lpage)`` off shared page ``src``."""
+        self._draw_reservation(seq)
+        dst = self._take_page()
+        self.refcount[src] -= 1
+        self.refcount[dst] = 1
+        self.page_table[(seq, lpage)] = dst
+        self.pending_cow.append((seq, lpage, src, dst))
+        self.stats["cow"] += 1
+        self._invalidate(seq, lpage)
+        return dst
+
+    def drain_cow(self) -> List[Tuple[int, int, int, int]]:
+        """Hand the queued (seq, lpage, src, dst) payload copies to the
+        engine (which owns the device-side KV arrays) and clear the queue."""
+        out, self.pending_cow = self.pending_cow, []
+        return out
+
     def release(self, seq: int):
-        for (s, lp), p in list(self.page_table.items()):
-            if s == seq:
-                self.free.append(p)
-                del self.page_table[(s, lp)]
+        for (s, lp) in [k for k in self.page_table if k[0] == seq]:
+            self.unmap_page(s, lp)
         self.seq_len.pop(seq, None)
         self.reserved.pop(seq, None)
+
+    def seq_pages(self, seq: int) -> List[Tuple[int, int]]:
+        """Sorted [(lpage, ppage)] currently mapped for ``seq``."""
+        return sorted((lp, p) for (s, lp), p in self.page_table.items()
+                      if s == seq)
+
+    # ------------------------------------------------------- prefix cache --
+    def prefix_key(self, tokens, lpage: int) -> Tuple[int, ...]:
+        """Index key for logical page ``lpage`` of a prompt: the exact token
+        prefix up to the end of that page (chained full blocks; the final
+        partial block keys the whole prompt)."""
+        return tuple(tokens[:min((lpage + 1) * self.page_size, len(tokens))])
+
+    def register_page(self, seq: int, lpage: int, tokens):
+        """Publish ``seq``'s page ``lpage`` (whose KV holds exactly the
+        prompt prefix ``tokens[:end-of-page]``) in the prefix index."""
+        p = self.page_table[(seq, lpage)]
+        key = self.prefix_key(tokens, lpage)
+        if key in self.prefix_index or p in self.page_key:
+            return
+        self.prefix_index[key] = p
+        self.page_key[p] = key
+
+    def _unregister(self, p: int):
+        key = self.page_key.pop(p, None)
+        if key is not None and self.prefix_index.get(key) == p:
+            del self.prefix_index[key]
+
+    def match_prefix(self, tokens) -> Tuple[List[int], int]:
+        """Longest cached prefix of ``tokens``: ([physical pages], tokens
+        covered).  Full pages chain block-by-block; a final partial page
+        matches only on the exact whole-prompt key."""
+        pages: List[int] = []
+        n = 0
+        while n < len(tokens):
+            key = self.prefix_key(tokens, len(pages))
+            p = self.prefix_index.get(key)
+            if p is None:
+                break
+            pages.append(p)
+            n = min(n + self.page_size, len(tokens))
+        return pages, n
+
+    # ---------------------------------------------------------- translate --
+    def _invalidate(self, seq: int, lpage: int):
         if self.rab is not None:
-            self.rab.invalidate()
+            self.rab.invalidate(self._vpage(seq, lpage))
+
+    # ---------------------------------------------------------- invariants --
+    def check_invariants(self):
+        """Assert the pool's conservation laws (used by the property suite):
+
+        * refcount conservation: sum of refcounts == number of mappings;
+        * free / cached-free / referenced partitions the physical pool
+          exactly (no double-free, no leak);
+        * a page reachable from two sequences has refcount > 1;
+        * prefix index and page_key are a consistent bijection;
+        * reservations never exceed obtainable pages.
+        """
+        mapped = list(self.page_table.values())
+        assert sum(self.refcount.values()) == len(mapped), \
+            "refcount conservation violated"
+        per_page: Dict[int, int] = {}
+        for p in mapped:
+            per_page[p] = per_page.get(p, 0) + 1
+        assert per_page == self.refcount, "refcount drifted from mappings"
+        owners: Dict[int, set] = {}
+        for (s, _lp), p in self.page_table.items():
+            owners.setdefault(p, set()).add(s)
+        for p, ss in owners.items():
+            assert len(ss) <= self.refcount[p], \
+                f"page {p} reachable from {len(ss)} seqs, refcount " \
+                f"{self.refcount[p]}"
+        pool = sorted(self.free) + sorted(self.cached_free) \
+            + sorted(self.refcount)
+        assert sorted(pool) == list(range(self.num_pages)), \
+            f"free/cached/referenced does not partition the pool: {pool}"
+        assert len(set(self.free)) == len(self.free), "double-free"
+        assert not (set(self.cached_free) & set(self.refcount))
+        for key, p in self.prefix_index.items():
+            assert self.page_key.get(p) == key, "index/page_key mismatch"
+        for p in self.page_key:
+            assert p in self.refcount or p in self.cached_free, \
+                f"indexed page {p} is on the raw free list"
+        assert self.available() >= 0, "reservations exceed capacity"
+        for (s, lp) in self.page_table:
+            n = self.seq_len.get(s, 0)
+            assert n > 0 and lp < -(-n // self.page_size), \
+                f"mapping ({s},{lp}) beyond seq_len {n}"
 
     def translate(self, seq: int, lpage: int) -> int:
         """RAB-mediated translation (miss -> handler walk -> retry)."""

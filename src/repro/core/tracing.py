@@ -52,6 +52,13 @@ class EventType(enum.IntEnum):
     PAGE_RELEASE = 31
     REQUEST_ADMIT = 32
     REQUEST_FINISH = 33
+    # shared-prefix KV cache + preemption (HERO §2.2/§3.4: SVM pages are
+    # remapped, shared and reclaimed without touching the data path)
+    PAGE_COW = 34          # copy-on-write: (seq, new physical page)
+    PREFIX_HIT = 35        # admission prefix-cache hit: (rid, tokens reused)
+    REQUEST_PREEMPT = 36   # (rid, private pages swapped out)
+    SWAP_OUT = 37          # D2H page reclamation: (rid, pages)
+    SWAP_IN = 38           # H2D page restoration: (rid, pages)
     # host<->device transfers on the serving hot path (the data-path cost
     # HERO's DMA double-buffering / zero-copy SVM exist to hide)
     H2D = 40

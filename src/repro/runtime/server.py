@@ -30,6 +30,23 @@ data path):
 Host<->device transfer events on this path are traced (``EventType.H2D`` /
 ``D2H``) so ``benchmarks/serve_throughput.py`` can count them.
 
+On top of the hot path sit HERO's SVM page *sharing* and *reclamation*
+(§2.2, §3.4), serving-side:
+
+* **shared-prefix KV caching** — admission consults the pool's prefix
+  index; pages already holding the request's prompt prefix are mapped into
+  its block table (refcount bumped, RAB entries installed) and their
+  prefill is skipped — only the tail chunk runs the prefill kernel.  A
+  lane appending into a still-shared partial page is copy-on-written onto
+  a private page through the ordinary allocation path;
+* **preemptive scheduling** — admission is priority-ordered; when the pool
+  (or lane set) is exhausted, the lowest-priority running lane is
+  preempted: its pages swap out D2H to a ``HostBackingStore`` (non-shared
+  pages are thereby reclaimed; shared ones drop this lane's refcount, the
+  host copy making re-admission independent of the sharers' lifetimes)
+  and swap back H2D on re-admission, with all traffic traced as
+  SWAP_OUT/SWAP_IN plus the underlying H2D/D2H events.
+
 Demo-scale engine for plain-GQA transformer archs (yi/minitron/qwen3/olmoe
 smoke configs).
 """
@@ -44,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.offload import HostBackingStore
 from repro.core.rab import RAB, RABConfig, PagedKVPool
 from repro.core.tracing import EventType, TraceBuffer
 from repro.models import layers as L
@@ -60,10 +78,16 @@ class Request:
     rid: int
     prompt: List[int]
     max_new: int = 8
+    priority: int = 0                 # scheduler class; higher preempts lower
     out: List[int] = dataclasses.field(default_factory=list)
     fed: int = 0                      # prompt tokens already consumed
     lane: int = -1
     done: bool = False
+    prefix_hit_tokens: int = 0        # prompt tokens reused from the cache
+    preemptions: int = 0
+    arrival: int = -1                 # FIFO tiebreak, assigned by submit()
+    reg_pages: int = 0                # prompt pages published to the index
+    swapped: Optional[List[int]] = None   # lpages parked in the backing store
 
 
 class PagedServer:
@@ -74,7 +98,8 @@ class PagedServer:
                  rab_cfg: RABConfig = RABConfig(l1_entries=8, l2_entries=32,
                                                 l2_assoc=4, l2_banks=2),
                  tracer: Optional[TraceBuffer] = None,
-                 use_kernel: bool = True):
+                 use_kernel: bool = True,
+                 enable_prefix_cache: bool = True):
         assert cfg.block_kind == "transformer" and cfg.attention_kind == "gqa" \
             and not cfg.local_global_period, \
             "paged engine supports plain-GQA transformer archs"
@@ -111,8 +136,16 @@ class PagedServer:
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.iterations = 0
+        self.prefill_tokens = 0       # prompt tokens run through prefill
         self.h2d_events = 0
         self.d2h_events = 0
+        # shared-prefix caching + preemption (HERO SVM page sharing and
+        # reclamation on the serving path)
+        self.enable_prefix_cache = enable_prefix_cache
+        self.backing = HostBackingStore()
+        self.preemptions = 0
+        self._dirty: set = set()      # lane rows to push before the kernel
+        self._arrival = 0
 
     # --------------------------------------------------------------- trace --
     def _h2d(self, n: int = 1):
@@ -134,8 +167,11 @@ class PagedServer:
         if len(req.prompt) + req.max_new - 1 > \
                 self.max_pages * self.page_size:
             raise ValueError("request exceeds max_pages_per_seq")
-        if self._pages_needed(req) > self.pool.num_pages:
+        if self._pages_needed(req) + self._cow_budget(req) > \
+                self.pool.num_pages:
             raise ValueError("request exceeds KV pool capacity")
+        req.arrival = self._arrival
+        self._arrival += 1
         self.queue.append(req)
 
     def _pages_needed(self, req: Request) -> int:
@@ -144,22 +180,203 @@ class PagedServer:
         total = len(req.prompt) + req.max_new - 1
         return int(page_counts_for(total, self.page_size))
 
+    # --------------------------------------------------------- scheduler --
+    def _cow_budget(self, req: Request) -> int:
+        """One extra reserved page for a request whose prompt tail is
+        partial: once that tail is *registered* in the prefix index, a
+        later admission may share it, and this request's own next append
+        then copy-on-writes — a page its plain per-page reservation never
+        counted (the donor side of CoW must be budgeted too, or an
+        admitted request could hit pool exhaustion mid-stream)."""
+        return 1 if (self.enable_prefix_cache and req.max_new > 1
+                     and len(req.prompt) % self.page_size) else 0
+
+    def _plan(self, req: Request) -> dict:
+        """Admission plan: which prefix-cache pages to map and how many
+        pages to reserve.  ``need`` excludes only *stable* shared pages
+        (fully written, never appended again); a shared partial tail keeps
+        one reserved page as the sharer's copy-on-write budget, the
+        donor-side CoW is budgeted by ``_cow_budget``, and a resuming
+        request budgets every page it must restore or still allocate."""
+        total = self._pages_needed(req) + self._cow_budget(req)
+        ps = self.page_size
+        if req.swapped is not None:            # resuming after preemption
+            # preemption dropped every mapping, so the whole lifetime page
+            # budget (restores + future allocations) is needed again
+            return {"resume": True, "hit_pages": [], "usable": 0,
+                    "need": total, "cached_hits": 0}
+        usable, hits = 0, []
+        if self.enable_prefix_cache and len(req.prompt) > 1:
+            pages, n = self.pool.match_prefix(req.prompt)
+            # the final prompt token always runs through the model (it
+            # produces the first sampled token), so it is never reused
+            usable = min(n, len(req.prompt) - 1)
+            hits = pages[:-(-usable // ps)] if usable else []
+        need = total - usable // ps
+        cached = sum(1 for p in hits if p in self.pool.cached_free)
+        plan = {"resume": False, "hit_pages": hits, "usable": usable,
+                "need": need, "cached_hits": cached}
+        if hits and not self._fits(plan):
+            # hits sitting on cached-free pages cost evictable capacity a
+            # no-sharing admission would simply reuse — never let the cache
+            # starve a request that fits without it
+            fallback = {"resume": False, "hit_pages": [], "usable": 0,
+                        "need": total, "cached_hits": 0}
+            if self._fits(fallback):
+                return fallback
+        return plan
+
+    def _fits(self, plan: dict) -> bool:
+        # reviving cached-free hit pages consumes them from the evictable
+        # set, so they are budgeted on top of the reservation
+        return self.pool.available() >= plan["need"] + plan["cached_hits"]
+
+    def _victim(self, head: Request) -> Optional[Request]:
+        """Lowest-priority running request (youngest within a class) —
+        preemptable only by a strictly higher-priority waiter, so equal
+        classes never churn each other."""
+        running = [r for r in self.lanes if r is not None]
+        if not running:
+            return None
+        v = min(running, key=lambda r: (r.priority, -r.arrival))
+        return v if v.priority < head.priority else None
+
     def _admit(self):
-        for i in range(self.max_lanes):
-            if self.lanes[i] is None and self.queue:
-                need = self._pages_needed(self.queue[0])
-                if not self.pool.can_alloc(need):
+        while self.queue:
+            # re-sort every round: _preempt re-enqueues its victim, which
+            # must keep its priority rank over lower-priority waiters
+            self.queue.sort(key=lambda r: (-r.priority, r.arrival))
+            head = self.queue[0]
+            lane = next((i for i in range(self.max_lanes)
+                         if self.lanes[i] is None), None)
+            plan = self._plan(head)
+            if lane is None or not self._fits(plan):
+                victim = self._victim(head)
+                if victim is None:
                     break
-                req = self.queue.pop(0)
-                req.lane = i
-                self.lanes[i] = req
-                # reserve the request's full lifetime page budget so chunked
-                # prefill can never hit pool exhaustion mid-stream
-                self.pool.reserve(req.rid, need)
-                self.active_dev = self.active_dev.at[i].set(1)
-                self.len_dev = self.len_dev.at[i].set(0)
-                self._h2d(1)
-                self.tracer.record_host(EventType.REQUEST_ADMIT, req.rid, i)
+                self._preempt(victim)
+                continue                  # pool/lane state changed: re-plan
+            self.queue.pop(0)
+            self._place(head, lane, plan)
+
+    def _place(self, req: Request, lane: int, plan: dict):
+        rid = req.rid
+        req.lane = lane
+        self.lanes[lane] = req
+        if plan["need"] > 0:
+            # reserve the request's remaining lifetime page budget so
+            # chunked prefill / restore can never hit exhaustion mid-stream
+            self.pool.reserve(rid, plan["need"])
+        if plan["resume"]:
+            self._swap_in(req)
+        elif plan["usable"]:
+            # prefix-cache hit: map the cached pages, skip their prefill
+            for lp, p in enumerate(plan["hit_pages"]):
+                self.pool.share_page(rid, lp, p)
+            self.pool.seq_len[rid] = plan["usable"]
+            self.pool.stats["prefix_hit_tokens"] += plan["usable"]
+            req.fed = plan["usable"]
+            req.prefix_hit_tokens = plan["usable"]
+            req.reg_pages = plan["usable"] // self.page_size
+            self.tracer.record_host(EventType.PREFIX_HIT, rid,
+                                    plan["usable"])
+        self._refresh_row(lane, rid)
+        self.active_dev = self.active_dev.at[lane].set(1)
+        self.len_dev = self.len_dev.at[lane].set(
+            self.pool.seq_len.get(rid, 0))
+        if plan["resume"] and req.fed >= len(req.prompt) and req.out:
+            # mid-decode resume: re-seed the device-resident last sample
+            self.last_tok = self.last_tok.at[lane].set(req.out[-1])
+        self._h2d(1)
+        self.tracer.record_host(EventType.REQUEST_ADMIT, rid, lane)
+
+    def _preempt(self, req: Request):
+        """Reclaim a running lane: every mapped page's payload goes D2H
+        into the host backing store and the mapping drops.  Non-shared
+        pages are thereby freed immediately; shared pages merely lose this
+        request's refcount (they live on under their other owners or on
+        the cached-free list), but checkpointing their payload too makes
+        re-admission independent of those owners' lifetimes — so a full
+        preemption sweep always reclaims everything a victim held and the
+        scheduler can never pin the pool behind preempted sequences."""
+        rid, i = req.rid, req.lane
+        mapped = self.pool.seq_pages(rid)
+        if mapped:
+            idx = jnp.asarray([p for _, p in mapped])
+            payload = np.asarray(self.kv_pages[:, idx])
+            self._d2h(len(mapped))    # one gather, len(mapped) pages pulled
+            for j, (lp, _p) in enumerate(mapped):
+                self.backing.put(rid, lp, payload[:, j])
+                self.pool.unmap_page(rid, lp)
+        req.swapped = [lp for lp, _ in mapped]
+        self.pool.reserved.pop(rid, None)
+        req.lane = -1
+        req.preemptions += 1
+        self.preemptions += 1
+        self.lanes[i] = None
+        self.active_dev = self.active_dev.at[i].set(0)
+        self.len_dev = self.len_dev.at[i].set(0)
+        self._h2d(1)
+        self.pool.stats["swapped_out"] += len(mapped)
+        self.tracer.record_host(EventType.SWAP_OUT, rid, len(mapped))
+        self.tracer.record_host(EventType.REQUEST_PREEMPT, rid, len(mapped))
+        self.queue.append(req)
+
+    def preempt(self, rid: int) -> bool:
+        """Forcibly preempt a running request (test/benchmark hook; pool
+        pressure drives the same path through the scheduler)."""
+        for r in self.lanes:
+            if r is not None and r.rid == rid:
+                self._preempt(r)
+                return True
+        return False
+
+    def _swap_in(self, req: Request):
+        """Restore a preempted request's swapped pages: fresh physical
+        pages, one batched H2D payload upload, mappings re-established."""
+        rid = req.rid
+        lps, req.swapped = req.swapped, None
+        if not lps:
+            return
+        phys = [self.pool.alloc_page(rid, lp) for lp in lps]
+        payload = jnp.stack(
+            [jnp.asarray(self.backing.pop(rid, lp)) for lp in lps], axis=1)
+        self.kv_pages = self.kv_pages.at[:, jnp.asarray(phys)].set(
+            payload.astype(self.kv_pages.dtype))
+        self._h2d(len(lps))
+        self.pool.stats["swapped_in"] += len(lps)
+        self.tracer.record_host(EventType.SWAP_IN, rid, len(lps))
+
+    def _refresh_row(self, lane: int, rid: int):
+        """Rebuild a lane's repeat-padded host block-table row from the
+        pool (through the RAB translate path) and mark it for upload."""
+        n = self.pool.seq_len.get(rid, 0)
+        n_pages = -(-n // self.page_size) if n else 0
+        last = 0
+        for lp in range(n_pages):
+            last = self.pool.translate(rid, lp)
+            self._bt_host[lane, lp] = last
+        self._bt_host[lane, n_pages:] = last
+        self._dirty.add(lane)
+
+    def _register_prompt_pages(self, active: List[Request],
+                               n_new: np.ndarray):
+        """Publish prompt-prefix pages completed this iteration into the
+        prefix index (full pages as they fill; the partial tail page once
+        the whole prompt is pool-resident).  Decode-phase pages are never
+        indexed — generated tokens are request-private."""
+        if not self.enable_prefix_cache:
+            return
+        ps = self.page_size
+        for r in active:
+            if n_new[r.lane] == 0 or r.fed >= len(r.prompt):
+                continue
+            written = min(self.pool.seq_len.get(r.rid, 0), len(r.prompt))
+            for lp in range(r.reg_pages, written // ps):
+                self.pool.register_page(r.rid, lp, r.prompt)
+            r.reg_pages = max(r.reg_pages, written // ps)
+            if written == len(r.prompt) and written % ps:
+                self.pool.register_page(r.rid, written // ps, r.prompt)
 
     def _finish(self, req: Request):
         req.done = True
@@ -193,15 +410,18 @@ class PagedServer:
                 n = min(C, len(r.prompt) - r.fed)
                 feed[i, :n] = r.prompt[r.fed:r.fed + n]
                 n_new[i] = n
+                self.prefill_tokens += n
                 decode_only = False
             else:
                 n_new[i] = 1
                 use_last[i] = 1     # token is device-resident; no upload
 
         # host-side page accounting: allocate (through the RAB translate
-        # path) every page the new tokens touch, and push only the dirty
-        # repeat-padded block-table rows to the device
-        dirty = set()
+        # path) every page the new tokens touch, apply any copy-on-write
+        # remaps, and push only the dirty repeat-padded block-table rows
+        dirty, self._dirty = self._dirty, set()
+        cow_src: List[int] = []
+        cow_dst: List[int] = []
         for r in active:
             i = r.lane
             for _ in range(int(n_new[i])):
@@ -211,6 +431,20 @@ class PagedServer:
                     self.tracer.record_host(EventType.PAGE_ALLOC, r.rid, phys)
                     self._bt_host[i, lpage:] = phys
                     dirty.add(i)
+                for (s, lp, src, dst) in self.pool.drain_cow():
+                    # the writer was remapped off a shared page: patch its
+                    # row and queue the device-side payload copy
+                    cow_src.append(src)
+                    cow_dst.append(dst)
+                    self._bt_host[i, lp:] = dst
+                    dirty.add(i)
+                    self.tracer.record_host(EventType.PAGE_COW, s, dst)
+        if cow_src:
+            # one batched on-device page copy, applied before this step's
+            # K/V scatter so the write lands in the private copy
+            self.kv_pages = self.kv_pages.at[:, jnp.asarray(cow_dst)].set(
+                self.kv_pages[:, jnp.asarray(cow_src)])
+        self._register_prompt_pages(active, n_new)
         if dirty:
             rows = sorted(dirty)
             self.bt_dev = self.bt_dev.at[jnp.asarray(rows)].set(

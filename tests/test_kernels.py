@@ -10,6 +10,7 @@ from repro.kernels.flash_attention import (
 )
 from repro.kernels.paged_attention import (
     paged_attention, paged_attention_ref, paged_prefill, paged_prefill_ref,
+    paged_prefill_fused, pad_block_table, page_counts_for,
 )
 
 TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
@@ -188,6 +189,38 @@ def test_paged_prefill_matches_ref(C, H, Kv, hd, page, npg, P,
                         jnp.asarray(start), interpret=True,
                         pages_per_step=pages_per_step)
     ref = paged_prefill_ref(q, kp, vp, bt, jnp.asarray(lengths),
+                            jnp.asarray(start))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("pages_per_step", [1, 2])
+def test_paged_prefill_fused_aliased_pages(pages_per_step, rng):
+    """Shared-prefix block tables alias the same physical pages across
+    lanes (prefix-cache hits); the fused kernel must match the oracle when
+    reads of one physical page serve several lanes at different logical
+    positions."""
+    B, C, H, Kv, hd, page, npg, P = 3, 4, 4, 2, 16, 4, 4, 10
+    # lanes share physical pages 0 and 1 for their first two logical pages
+    # (a 8-token shared prefix), then diverge into private tails
+    lengths = np.array([12, 11, 10], np.int32)
+    start = (lengths - C).astype(np.int32)
+    bt = np.full((B, npg), -1, np.int32)
+    bt[0, :3] = [0, 1, 2]
+    bt[1, :3] = [0, 1, 3]
+    bt[2, :3] = [0, 1, 4]
+    q = jax.random.normal(rng, (B, C, H, hd), jnp.float32) * 0.3
+    kp = jax.random.normal(jax.random.fold_in(rng, 1), (P, page, Kv, hd),
+                           jnp.float32) * 0.3
+    vp = jax.random.normal(jax.random.fold_in(rng, 2), (P, page, Kv, hd),
+                           jnp.float32)
+    counts = page_counts_for(jnp.asarray(lengths), page)
+    out = paged_prefill_fused(
+        q, jnp.stack([kp, vp], axis=1),
+        pad_block_table(jnp.asarray(bt), counts), counts,
+        jnp.asarray(lengths), jnp.asarray(start), interpret=True,
+        pages_per_step=pages_per_step)
+    ref = paged_prefill_ref(q, kp, vp, jnp.asarray(bt), jnp.asarray(lengths),
                             jnp.asarray(start))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=1e-4, atol=1e-4)

@@ -1,0 +1,234 @@
+"""Pool property tests (hypothesis): random interleavings of
+submit / decode / finish / preempt / resume schedules — driving the pool
+exactly the way ``PagedServer`` does (prefix-hit admission, reservation
+discipline, copy-on-write appends, swap-out page reclamation) — must
+preserve the pool's conservation laws:
+
+* refcount conservation: sum of refcounts == number of live mappings;
+* free + cached-free + referenced partitions the physical pool (no
+  double-free, no leak);
+* no page reachable from two sequences unless its refcount > 1;
+* block tables of running sequences always translate through live RAB
+  entries that agree with the page table.
+
+Skipped wholesale when hypothesis is not installed (see
+requirements-dev.txt); the deterministic unit tests in ``test_rab.py``
+always run.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.rab import RAB, RABConfig, PagedKVPool  # noqa: E402
+
+PAGE_SIZE = 2
+NUM_PAGES = 12
+MAX_PAGES_PER_SEQ = 8
+
+# prompts engineered to share prefixes at several page boundaries
+BASE = [1, 2, 3, 4, 5, 6]
+PROMPTS = [
+    BASE[:6], BASE[:6],                 # identical (full + tail sharing)
+    BASE[:4] + [7, 8], BASE[:4] + [9],  # shared 2-page prefix
+    BASE[:2] + [10],                    # shared 1-page prefix
+    [11, 12, 13],                       # disjoint
+    [14],                               # single token (never cacheable)
+]
+
+
+class SchedulerModel:
+    """Host-side mirror of PagedServer's pool driving (chunk=1): admission
+    with prefix hits + reservations, per-token appends with prompt-page
+    registration, finish, preempt (swap-out), resume (swap-in)."""
+
+    def __init__(self):
+        self.rab = RAB(RABConfig(l1_entries=4, l2_entries=16, l2_assoc=4,
+                                 l2_banks=2))
+        self.pool = PagedKVPool(NUM_PAGES, PAGE_SIZE, MAX_PAGES_PER_SEQ,
+                                self.rab)
+        self.live = {}          # seq -> state dict
+        self.next_seq = 0
+
+    # ------------------------------------------------------------- ops --
+    @staticmethod
+    def _cow_budget(prompt, max_new):
+        # mirror PagedServer._cow_budget: a registered partial prompt tail
+        # may be shared under the owner, whose own next append then CoWs
+        return 1 if (max_new > 1 and len(prompt) % PAGE_SIZE) else 0
+
+    def submit(self, prompt_idx, max_new):
+        prompt = list(PROMPTS[prompt_idx % len(PROMPTS)])
+        total = -(-(len(prompt) + max_new - 1) // PAGE_SIZE) \
+            + self._cow_budget(prompt, max_new)
+        if total > NUM_PAGES or total > MAX_PAGES_PER_SEQ:
+            return
+        pool = self.pool
+        usable, hits = 0, []
+        if len(prompt) > 1:
+            pages, n = pool.match_prefix(prompt)
+            usable = min(n, len(prompt) - 1)
+            hits = pages[:-(-usable // PAGE_SIZE)] if usable else []
+        need = total - usable // PAGE_SIZE
+        cached = sum(1 for p in hits if p in pool.cached_free)
+        if pool.available() < need + cached:
+            # mirror the server's no-sharing fallback plan
+            if pool.available() < total:
+                return                  # admission would not fit: skip
+            usable, hits, need, cached = 0, [], total, 0
+        seq = self.next_seq
+        self.next_seq += 1
+        for lp, p in enumerate(hits):
+            pool.share_page(seq, lp, p)
+        if usable:
+            pool.seq_len[seq] = usable
+        if need:
+            pool.reserve(seq, need)
+        self.live[seq] = {"prompt": prompt, "max_new": max_new,
+                          "reg_pages": usable // PAGE_SIZE,
+                          "preempted": False, "swapped": []}
+
+    def _running(self, k):
+        seqs = [s for s, v in self.live.items() if not v["preempted"]]
+        return seqs[k % len(seqs)] if seqs else None
+
+    def _preempted(self, k):
+        seqs = [s for s, v in self.live.items() if v["preempted"]]
+        return seqs[k % len(seqs)] if seqs else None
+
+    def decode(self, k):
+        seq = self._running(k)
+        if seq is None:
+            return
+        st_, pool = self.live[seq], self.pool
+        prompt = st_["prompt"]
+        total = len(prompt) + st_["max_new"] - 1
+        if pool.seq_len.get(seq, 0) >= total:
+            return self.finish(k)
+        pool.append_token(seq)
+        for (s, lp, src, dst) in pool.drain_cow():
+            assert s == seq and pool.page_table[(s, lp)] == dst
+            assert dst != src
+        written = min(pool.seq_len[seq], len(prompt))
+        if pool.seq_len[seq] <= len(prompt):   # still a prompt token
+            for lp in range(st_["reg_pages"], written // PAGE_SIZE):
+                pool.register_page(seq, lp, prompt)
+            st_["reg_pages"] = max(st_["reg_pages"], written // PAGE_SIZE)
+            if written == len(prompt) and written % PAGE_SIZE:
+                pool.register_page(seq, written // PAGE_SIZE, prompt)
+
+    def finish(self, k):
+        seq = self._running(k)
+        if seq is None:
+            return
+        self.pool.release(seq)
+        del self.live[seq]
+
+    def preempt(self, k):
+        seq = self._running(k)
+        if seq is None:
+            return
+        pool, st_ = self.pool, self.live[seq]
+        mapped = pool.seq_pages(seq)          # full sweep: every mapping
+        for lp, _p in mapped:                 # drops (payload checkpointed
+            pool.unmap_page(seq, lp)          # host-side by the server)
+        pool.reserved.pop(seq, None)
+        st_["preempted"] = True
+        st_["swapped"] = [lp for lp, _ in mapped]
+
+    def resume(self, k):
+        seq = self._preempted(k)
+        if seq is None:
+            return
+        pool, st_ = self.pool, self.live[seq]
+        total = -(-(len(st_["prompt"]) + st_["max_new"] - 1) // PAGE_SIZE) \
+            + self._cow_budget(st_["prompt"], st_["max_new"])
+        need = total
+        if pool.available() < need:
+            return                      # re-admission would not fit: skip
+        if need:
+            pool.reserve(seq, need)
+        for lp in st_["swapped"]:
+            pool.alloc_page(seq, lp)    # the H2D payload restore
+        st_["preempted"] = False
+        st_["swapped"] = []
+
+    # ------------------------------------------------------- invariants --
+    def check(self):
+        pool = self.pool
+        pool.check_invariants()
+        # no page reachable from two sequences unless refcount > 1
+        owners = {}
+        for (s, _lp), p in pool.page_table.items():
+            owners.setdefault(p, set()).add(s)
+        for p, ss in owners.items():
+            if len(ss) > 1:
+                assert pool.refcount[p] > 1, (p, ss)
+        # running sequences' block tables translate through live RAB
+        # entries that agree with the page table
+        running = [s for s, v in self.live.items() if not v["preempted"]]
+        for s in running:
+            bt = pool.block_table([s])
+            resident = self.rab.resident()
+            for (s2, lp), p in pool.page_table.items():
+                if s2 != s:
+                    continue
+                assert bt[0, lp] == p, (s, lp)
+                vpage = pool._vpage(s, lp)
+                assert resident.get(vpage, p) == p, \
+                    f"stale RAB entry for vpage {vpage}"
+        # preempted sequences hold exactly their non-swapped mappings
+        for s, v in self.live.items():
+            if v["preempted"]:
+                mapped = {lp for lp, _ in pool.seq_pages(s)}
+                assert not (mapped & set(v["swapped"]))
+
+
+OPS = st.sampled_from(["submit", "decode", "decode", "decode", "decode",
+                       "finish", "preempt", "resume"])
+SCHEDULE = st.lists(st.tuples(OPS, st.integers(0, 6), st.integers(1, 4)),
+                    min_size=1, max_size=120)
+
+
+@settings(max_examples=50, deadline=None)
+@given(SCHEDULE)
+def test_pool_invariants_under_random_schedules(schedule):
+    m = SchedulerModel()
+    for op, arg, max_new in schedule:
+        if op == "submit":
+            m.submit(arg, max_new)
+        elif op == "decode":
+            m.decode(arg)
+        elif op == "finish":
+            m.finish(arg)
+        elif op == "preempt":
+            m.preempt(arg)
+        elif op == "resume":
+            m.resume(arg)
+        m.check()
+    # drain everything: the pool must return to pristine capacity
+    for s in list(m.live):
+        m.pool.release(s)
+        m.check()
+    assert m.pool.free_pages() == NUM_PAGES
+    assert sum(m.pool.refcount.values()) == 0 == len(m.pool.page_table)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 6), st.integers(1, 3)),
+                min_size=1, max_size=40))
+def test_prefix_index_consistency(subs):
+    """Whatever the submission order, every prefix-index entry maps a key
+    to a page whose owner really holds that token prefix — matches never
+    fabricate pages, and revived cached pages keep exact content keys."""
+    m = SchedulerModel()
+    for prompt_idx, max_new in subs:
+        m.submit(prompt_idx, max_new)
+        for k in range(10):             # run a few tokens through
+            m.decode(k)
+        m.check()
+        pool = m.pool
+        for key, p in pool.prefix_index.items():
+            assert pool.page_key[p] == key
+            hit, n = pool.match_prefix(list(key))
+            assert n == len(key) and hit[-1] == p

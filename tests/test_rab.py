@@ -104,6 +104,113 @@ def test_pool_reservations_guard_midstream_alloc():
     assert pool.available() == 4 and not pool.reserved
 
 
+def test_pool_prefix_sharing_and_cow():
+    """Prefix hits map existing pages (refcount bumped, no allocation);
+    appending into a shared page copy-on-writes it through the normal
+    allocation path."""
+    pool = PagedKVPool(num_pages=8, page_size=4, max_pages_per_seq=4)
+    prompt = [5, 6, 7, 8, 9, 10]
+    for _ in range(len(prompt)):
+        pool.append_token(1)
+    pool.register_page(1, 0, prompt)          # full page [5,6,7,8]
+    pool.register_page(1, 1, prompt)          # partial tail [9,10]
+    pool.check_invariants()
+
+    pages, n = pool.match_prefix(prompt)
+    assert n == 6 and len(pages) == 2
+    assert pool.match_prefix([5, 6, 7, 8, 0, 0]) == ([pages[0]], 4)
+    assert pool.match_prefix([1, 2, 3]) == ([], 0)
+
+    for lp, p in enumerate(pages):            # seq 2 shares the whole prefix
+        pool.share_page(2, lp, p)
+    pool.seq_len[2] = 6
+    pool.check_invariants()
+    assert pool.refcount[pages[0]] == 2 and pool.refcount[pages[1]] == 2
+    free_before = pool.free_pages()
+
+    lpage, slot = pool.append_token(2)        # slot 2 of the shared tail
+    assert (lpage, slot) == (1, 2)
+    cow = pool.drain_cow()
+    assert len(cow) == 1
+    s, lp, src, dst = cow[0]
+    assert (s, lp, src) == (2, 1, pages[1]) and dst != src
+    assert pool.refcount[pages[1]] == 1       # seq 1 kept the original
+    assert pool.page_table[(2, 1)] == dst
+    assert pool.free_pages() == free_before - 1
+    pool.check_invariants()
+
+    # in-place append by the sole owner un-registers the mutating page
+    pool.append_token(1)
+    assert pool.drain_cow() == []             # refcount was 1: no CoW
+    assert pool.match_prefix(prompt)[1] == 4  # tail key gone, full page stays
+    pool.check_invariants()
+
+
+def test_pool_cached_free_revival_and_eviction():
+    """Released prefix-indexed pages park on the cached-free LRU: a later
+    match revives them without data movement; allocation pressure evicts
+    them (dropping the index entry) before failing."""
+    pool = PagedKVPool(num_pages=2, page_size=2, max_pages_per_seq=4)
+    prompt = [3, 4]
+    pool.append_token(7)
+    pool.append_token(7)
+    pool.register_page(7, 0, prompt)
+    pool.release(7)
+    assert len(pool.free) == 1 and len(pool.cached_free) == 1
+    assert pool.free_pages() == 2 and pool.available() == 2
+    pool.check_invariants()
+
+    pages, n = pool.match_prefix(prompt)      # revival
+    assert n == 2
+    pool.share_page(8, 0, pages[0])
+    pool.seq_len[8] = 2
+    assert not pool.cached_free and pool.refcount[pages[0]] == 1
+    pool.check_invariants()
+    pool.release(8)
+    assert len(pool.cached_free) == 1         # parked again
+
+    # pressure: two fresh allocations must evict the cached page
+    pool.append_token(9)
+    pool.append_token(9)
+    pool.append_token(9)
+    assert pool.stats["cache_evictions"] == 1
+    assert pool.match_prefix(prompt) == ([], 0)
+    pool.check_invariants()
+    with pytest.raises(MemoryError):
+        pool.append_token(5)
+
+
+def test_pool_unmap_and_reservation_interplay():
+    """unmap_page (the swap-out path) frees private pages while shared
+    pages survive through their other reference; reservations still guard
+    mid-stream allocation."""
+    pool = PagedKVPool(num_pages=6, page_size=2, max_pages_per_seq=4)
+    for _ in range(4):
+        pool.append_token(1)                  # seq 1: 2 private pages
+    pool.register_page(1, 0, [1, 2, 3, 4])
+    pool.share_page(2, 0, pool.page_table[(1, 0)])
+    pool.seq_len[2] = 2
+    pool.check_invariants()
+
+    shared = pool.page_table[(1, 0)]
+    pool.unmap_page(1, 1)                     # private: really freed
+    assert len(pool.free) == 5
+    pool.unmap_page(1, 0)                     # shared: survives via seq 2
+    assert pool.refcount[shared] == 1
+    assert pool.page_table[(2, 0)] == shared
+    pool.check_invariants()
+
+    pool.reserve(3, 4)
+    assert pool.available() == 1
+    with pytest.raises(MemoryError):
+        pool.reserve(4, 2)
+    pool.append_token(5)                      # unreserved residue is usable
+    pool.append_token(5)
+    with pytest.raises(MemoryError):
+        pool.append_token(5)                  # would eat seq 3's reservation
+    pool.check_invariants()
+
+
 def test_rab_backed_pool_translation():
     rab = RAB(RABConfig(l1_entries=2, l2_entries=4, l2_assoc=2, l2_banks=1))
     pool = PagedKVPool(num_pages=16, page_size=2, max_pages_per_seq=8,

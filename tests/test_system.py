@@ -205,7 +205,8 @@ def test_paged_server_continuous_batching():
     done = srv.run()
     assert len(done) == 4
     assert all(len(r.out) == 3 for r in done)
-    assert len(srv.pool.free) == 32   # all pages returned
+    # all pages returned (prefix-indexed ones park on the cached-free list)
+    assert srv.pool.free_pages() == 32
     assert srv.rab.stats["l1_hits"] + srv.rab.stats["misses"] > 0
 
 
@@ -237,7 +238,7 @@ def test_paged_server_chunked_prefill_matches_token_by_token():
         for rid, p in enumerate(prompts):
             srv.submit(Request(rid=rid, prompt=list(p), max_new=3))
         done = srv.run()
-        assert len(srv.pool.free) == 32
+        assert srv.pool.free_pages() == 32
         return {r.rid: r.out for r in done}, srv.iterations
 
     base, base_iters = run(1)
@@ -245,6 +246,110 @@ def test_paged_server_chunked_prefill_matches_token_by_token():
         outs, iters = run(chunk)
         assert outs == base, chunk
         assert iters < base_iters
+
+
+@pytest.mark.parametrize("page_size", [4, 8])
+def test_prefix_cache_parity_and_forced_preemption(page_size):
+    """Serving the same prompts with prefix caching on vs off is
+    token-for-token identical, and a forced mid-decode preemption (swap
+    out to host, swap back in) leaves outputs unchanged."""
+    from repro.core.analysis import assert_swaps_balanced
+
+    cfg = get_config("yi-6b").smoke()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    sys_p = [11, 12, 13, 14, 15, 16, 17, 18]     # one full page at size 8
+    prompts = [sys_p + [21], sys_p + [22], sys_p + [23]]
+
+    def run(enable, preempt_rid=None):
+        tracer = TraceBuffer()
+        srv = PagedServer(cfg, params, num_pages=32, page_size=page_size,
+                          max_lanes=2, max_pages_per_seq=8, chunk=4,
+                          use_kernel=False, enable_prefix_cache=enable,
+                          tracer=tracer)
+        srv.submit(Request(rid=0, prompt=list(prompts[0]), max_new=4))
+        srv.step()
+        srv.step()       # rid 0 reaches decode; its prefix pages published
+        for rid in (1, 2):
+            srv.submit(Request(rid=rid, prompt=list(prompts[rid]),
+                               max_new=4))
+        if preempt_rid is not None:
+            srv.step()
+            assert srv.preempt(preempt_rid)
+        it = 0
+        while srv.step():
+            srv.pool.check_invariants()
+            it += 1
+            assert it < 500, "engine did not drain"
+        srv.pool.check_invariants()
+        assert srv.pool.free_pages() == 32
+        return {r.rid: r.out for r in srv.finished}, srv, tracer.drain()
+
+    base, _, _ = run(False)
+    cached, csrv, _ = run(True)
+    assert cached == base
+    assert csrv.pool.stats["prefix_hit_tokens"] > 0
+
+    pre, psrv, events = run(True, preempt_rid=0)
+    assert pre == base
+    assert psrv.preemptions >= 1
+    kinds = [int(e[2]) for e in events]
+    assert kinds.count(int(EventType.SWAP_OUT)) >= 1
+    assert kinds.count(int(EventType.SWAP_IN)) >= 1
+    assert assert_swaps_balanced(layer1_decode(events))
+
+
+def test_prefix_cache_never_starves_admission():
+    """When cached-free prefix hits would cost more evictable capacity
+    than a plain admission, the scheduler falls back to a no-sharing plan
+    instead of queueing the request forever."""
+    cfg = get_config("yi-6b").smoke()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    srv = PagedServer(cfg, params, num_pages=3, page_size=4, max_lanes=2,
+                      max_pages_per_seq=4, chunk=8, use_kernel=False)
+    srv.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5, 6], max_new=1))
+    it = 0
+    while srv.step():
+        it += 1
+        assert it < 100
+    assert len(srv.pool.cached_free) > 0    # donor parked indexed pages
+    srv.submit(Request(rid=1, prompt=[1, 2, 3, 4, 5, 6], max_new=3))
+    while srv.step():
+        srv.pool.check_invariants()
+        it += 1
+        assert it < 300, "request starved behind its own prefix hits"
+    assert len(srv.finished) == 2
+
+
+def test_priority_preemption_under_pool_pressure():
+    """A higher-priority request arriving into an exhausted pool preempts
+    the running low-priority lane; both finish with the same outputs as an
+    uncontended run."""
+    cfg = get_config("yi-6b").smoke()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    def run(num_pages):
+        srv = PagedServer(cfg, params, num_pages=num_pages, page_size=4,
+                          max_lanes=2, max_pages_per_seq=8, chunk=4,
+                          use_kernel=False, enable_prefix_cache=False)
+        srv.submit(Request(rid=0, prompt=[3, 1, 4, 1, 5, 9, 2, 6],
+                           max_new=10, priority=0))
+        srv.step()
+        srv.step()
+        srv.submit(Request(rid=1, prompt=[2, 7, 1, 8, 2, 8, 1, 8],
+                           max_new=10, priority=5))
+        it = 0
+        while srv.step():
+            srv.pool.check_invariants()
+            it += 1
+            assert it < 500
+        return {r.rid: r.out for r in srv.finished}, srv
+
+    base, _ = run(32)            # ample pool: no preemption needed
+    out, srv = run(8)            # each request needs 5 pages; 8 force a swap
+    assert out == base
+    assert srv.preemptions >= 1
+    assert len(srv.backing) == 0          # everything swapped back in
+    assert srv.backing.bytes_out == srv.backing.bytes_in > 0
 
 
 # ---------------------------------------------------------------------------
