@@ -13,24 +13,44 @@ Three workloads, all emitted into ``BENCH_serve.json``:
 * a forced-preemption probe: a tight pool where a high-priority arrival
   preempts the running low-priority lane (non-shared pages swap D2H to the
   host backing store and back) — completion, output correctness vs an
-  uncontended run, and trace-counted swap events.
+  uncontended run, and trace-counted swap events;
+* a multi-cluster sweep (``--clusters 4`` -> configs {1, 2, 4}): the same
+  workload served by the sharded engine across a ``("cluster", "head")``
+  mesh — iters/request, per-cluster peak page occupancy, dispatch balance,
+  with the 1-cluster configuration asserted token-for-token identical to
+  the unsharded engine.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py            # full
     PYTHONPATH=src python benchmarks/serve_throughput.py --smoke    # CI-sized
+    PYTHONPATH=src python benchmarks/serve_throughput.py --smoke --clusters 4
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
+
+# The cluster sweep needs virtual devices on CPU; XLA only reads the flag
+# before the first jax import, so force it here when launched as a script
+# with a sweep request.  (When imported as a module — e.g. by smoke_all —
+# jax may already be up; the sweep then skips configs it lacks devices for.)
+if "--clusters" in sys.argv and \
+        "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.analysis import layer1_decode, layer2_cluster_balance
 from repro.core.tracing import EventType, TraceBuffer
 from repro.models import model as M
-from repro.runtime import PagedServer, Request
+from repro.runtime import PagedServer, Request, ShardedPagedServer
 
 
 def _make_prompts(n: int, length: int, vocab: int, seed: int = 0):
@@ -40,12 +60,26 @@ def _make_prompts(n: int, length: int, vocab: int, seed: int = 0):
 
 def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
                max_lanes, max_pages_per_seq, use_kernel,
-               enable_prefix_cache=True) -> dict:
+               enable_prefix_cache=True, clusters=None, heads=1,
+               keep_events=None) -> dict:
+    """One engine run.  ``clusters=None`` -> the unsharded ``PagedServer``;
+    an int -> ``ShardedPagedServer`` over a (clusters, heads) mesh, with
+    per-cluster occupancy and dispatch balance added to the result."""
     tracer = TraceBuffer(capacity=1 << 16)
-    srv = PagedServer(cfg, params, num_pages=num_pages, page_size=page_size,
-                      max_lanes=max_lanes, max_pages_per_seq=max_pages_per_seq,
-                      chunk=chunk, use_kernel=use_kernel, tracer=tracer,
-                      enable_prefix_cache=enable_prefix_cache)
+    if clusters is None:
+        srv = PagedServer(cfg, params, num_pages=num_pages,
+                          page_size=page_size, max_lanes=max_lanes,
+                          max_pages_per_seq=max_pages_per_seq,
+                          chunk=chunk, use_kernel=use_kernel, tracer=tracer,
+                          enable_prefix_cache=enable_prefix_cache)
+    else:
+        srv = ShardedPagedServer(cfg, params, clusters=clusters, heads=heads,
+                                 num_pages=num_pages, page_size=page_size,
+                                 max_lanes=max_lanes,
+                                 max_pages_per_seq=max_pages_per_seq,
+                                 chunk=chunk, use_kernel=use_kernel,
+                                 tracer=tracer,
+                                 enable_prefix_cache=enable_prefix_cache)
     reqs = [Request(rid=rid, prompt=list(p), max_new=max_new)
             for rid, p in enumerate(prompts)]
     for r in reqs:
@@ -66,9 +100,19 @@ def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
     # full-prefill step and may itself emit tokens) doesn't bias the ratio
     gen_timed = gen - warm_gen
     assert len(done) == len(prompts), "workload did not drain"
+    if keep_events is not None:
+        keep_events.extend(np.asarray(events).tolist())
     prompt_tokens = sum(len(p) for p in prompts)
     hit_tokens = srv.pool.stats["prefix_hit_tokens"]
+    extra = {}
+    if clusters is not None:
+        bal = layer2_cluster_balance(layer1_decode(events),
+                                     n_clusters=clusters)
+        extra = dict(srv.cluster_report(),
+                     dispatch_balance=bal["balance"],
+                     all_gathers=bal["all_gathers"])
     return {
+        **extra,
         "chunk": chunk,
         "iterations": srv.iterations,
         "iters_per_request": srv.iterations / len(done),
@@ -149,6 +193,38 @@ def run_preemption_probe(cfg, params, *, page_size, max_new, use_kernel,
     }
 
 
+def run_cluster_sweep(cfg, params, prompts, *, max_clusters, heads, common,
+                      unsharded_outputs, trace_events=None) -> dict:
+    """Serve the same workload on the sharded engine at 1..max_clusters
+    clusters (per-cluster pool/lane budget held fixed, so capacity scales
+    with C).  The 1-cluster configuration must match the unsharded engine
+    token-for-token."""
+    configs, skipped = {}, {}
+    match_1 = None
+    for C in (1, 2, 4, 8):
+        if C > max_clusters:
+            continue
+        need = C * heads
+        if need > len(jax.devices()):
+            skipped[str(C)] = (f"needs {need} devices, "
+                               f"{len(jax.devices())} visible")
+            continue
+        keep = trace_events.setdefault(f"clusters={C}", []) \
+            if trace_events is not None else None
+        r = run_engine(cfg, params, prompts, clusters=C, heads=heads,
+                       keep_events=keep, **common)
+        outputs = r.pop("outputs")
+        if C == 1:
+            match_1 = outputs == unsharded_outputs
+        configs[str(C)] = r
+    return {
+        "heads": heads,
+        "configs": configs,
+        "skipped": skipped,
+        "one_cluster_outputs_match_unsharded": match_1,
+    }
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
@@ -164,6 +240,16 @@ def main(argv=None) -> dict:
                          "transfer counts are identical either way)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized: tiny workload, seconds on CPU")
+    ap.add_argument("--clusters", type=int, default=1,
+                    help="sweep the sharded engine over {1,2,4,8} clusters "
+                         "up to this count (forces 8 virtual CPU devices "
+                         "when launched as a script)")
+    ap.add_argument("--heads", type=int, default=1,
+                    help="tensor-parallel head shards per cluster "
+                         "(must divide num_kv_heads)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the cluster sweep's drained trace events "
+                         "to this JSON file (nightly CI artifact)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -187,6 +273,7 @@ def main(argv=None) -> dict:
 
     baseline = run_engine(cfg, params, prompts, chunk=1, **common)
     chunked = run_engine(cfg, params, prompts, chunk=args.chunk, **common)
+    chunked_outputs = chunked["outputs"]
 
     # shared-prefix workload: K system prompts x M requests, caching off/on
     sp_prompts = _make_shared_prefix_prompts(
@@ -210,6 +297,12 @@ def main(argv=None) -> dict:
     preemption = run_preemption_probe(cfg, params, page_size=args.page_size,
                                       max_new=args.max_new,
                                       use_kernel=use_kernel)
+
+    trace_events = {} if args.trace_out else None
+    sweep = run_cluster_sweep(
+        cfg, params, prompts, max_clusters=args.clusters, heads=args.heads,
+        common=dict(common, chunk=args.chunk),
+        unsharded_outputs=chunked_outputs, trace_events=trace_events)
 
     baseline.pop("outputs", None)
     chunked.pop("outputs", None)
@@ -245,9 +338,15 @@ def main(argv=None) -> dict:
                 shared["tokens_per_s"] / max(no_share["tokens_per_s"], 1e-9),
         },
         "preemption": preemption,
+        "cluster_sweep": sweep,
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
+    if args.trace_out:
+        with open(args.trace_out, "w") as f:
+            json.dump({"schema": ["ts", "tracer", "etype", "a0", "a1"],
+                       "event_types": {e.name: int(e) for e in EventType},
+                       "events": trace_events}, f)
 
     print(f"# serve_throughput ({cfg.name}, {jax.default_backend()}, "
           f"kernel={use_kernel})")
@@ -273,9 +372,19 @@ def main(argv=None) -> dict:
           f"outputs match={pr['outputs_match_uncontended']}  "
           f"swapped out/in={pr['swap_out_pages']}/{pr['swap_in_pages']} "
           f"pages")
+    for C, r in sweep["configs"].items():
+        print(f"clusters={C:>2s} (x{sweep['heads']} heads): "
+              f"iters/req={r['iters_per_request']:6.1f}  "
+              f"tok/s={r['tokens_per_s']:8.1f}  "
+              f"peak pages/cluster={r['peak_pages_per_cluster']}  "
+              f"balance={r['dispatch_balance']:.2f}")
+    for C, why in sweep["skipped"].items():
+        print(f"clusters={C:>2s}: skipped ({why})")
     assert sp["outputs_match"], "prefix caching changed outputs"
     assert pr["completed"] and pr["outputs_match_uncontended"], \
         "preemption run incorrect"
+    assert sweep["one_cluster_outputs_match_unsharded"] is not False, \
+        "1-cluster sharded engine diverged from the unsharded engine"
     print(f"wrote {args.out}")
     return result
 

@@ -1,0 +1,89 @@
+"""CI bench-regression gate: fresh BENCH_serve.json vs the committed one.
+
+HERO validates every change "through fully automated hardware and software
+builds and executed tests" (§1); this is the serving-side analogue for the
+engine's *scheduling efficiency* metrics, which are deterministic for a
+fixed workload (unlike wall-clock tokens/s on shared CI runners):
+
+* ``chunked_prefill.iters_per_request`` — engine iterations per request
+  (chunked-prefill admission efficiency);
+* ``chunked_prefill.h2d_per_generated_token`` — host->device transfer
+  events per generated token (device-residency of the hot path).
+
+The job fails when either regresses by more than ``--max-regress``
+(default 10%).  Workload descriptors must match exactly — comparing
+different workloads would make the gate meaningless, so a mismatch is
+also a failure.
+
+    python scripts/check_bench.py --baseline BENCH_baseline.json \
+        --fresh BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: (json path, human name); lower is better for every gated metric
+GATED = [
+    (("chunked_prefill", "iters_per_request"), "engine iters/request"),
+    (("chunked_prefill", "h2d_per_generated_token"), "H2D events/token"),
+]
+
+
+def _dig(d, path):
+    for k in path:
+        d = d[k]
+    return d
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_serve.json (the gate's reference)")
+    ap.add_argument("--fresh", default="BENCH_serve.json",
+                    help="freshly produced BENCH_serve.json")
+    ap.add_argument("--max-regress", type=float, default=0.10,
+                    help="maximum tolerated relative regression")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    if base.get("workload") != fresh.get("workload"):
+        print(f"FAIL workload mismatch — the gate compares nothing useful\n"
+              f"  baseline: {base.get('workload')}\n"
+              f"  fresh:    {fresh.get('workload')}")
+        return 2
+
+    failed = False
+    for path, name in GATED:
+        try:
+            b = float(_dig(base, path))
+        except KeyError as e:
+            print(f"FAIL {name}: missing key {e} in baseline result")
+            failed = True
+            continue
+        try:
+            x = float(_dig(fresh, path))
+        except KeyError as e:
+            print(f"FAIL {name}: missing key {e} in fresh result")
+            failed = True
+            continue
+        ratio = x / b if b else (1.0 if x == b else float("inf"))
+        verdict = "OK  "
+        if ratio > 1.0 + args.max_regress:
+            verdict, failed = "FAIL", True
+        print(f"{verdict} {name}: baseline={b:.4f} fresh={x:.4f} "
+              f"({ratio - 1.0:+.1%} vs baseline)")
+    if failed:
+        print(f"bench gate FAILED (>{args.max_regress:.0%} regression)")
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,23 @@
-"""Fast dev loop: one train + prefill + decode step per smoke arch on CPU."""
+"""Fast dev loop: one train + prefill + decode step per smoke arch on CPU.
+
+Failures are *aggregated*: every arch (and the serving benchmark) runs even
+when an earlier step fails, a summary is printed at the end, and the exit
+code is non-zero iff anything failed — so CI can run this script directly
+and a single broken arch can't mask later ones (or sneak through a
+reporting path that swallows the failure).
+"""
+import os
 import sys
 import traceback
+
+# force virtual devices before the first jax import so the serving
+# benchmark's multi-cluster sweep runs for real (single-device jit work is
+# unaffected: it places on device 0)
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
 
 import jax
 import jax.numpy as jnp
@@ -10,6 +27,8 @@ from repro.models import model as M
 from repro.models import steps as ST
 
 ARCHS = sys.argv[1:] or list_archs()
+
+failures = []
 
 for name in ARCHS:
     cfg = get_config(name).smoke()
@@ -43,16 +62,16 @@ for name in ARCHS:
     except Exception as e:
         print(f"FAIL {name}: {e}")
         traceback.print_exc()
-        sys.exit(1)
+        failures.append(name)
 
 # serving hot path: chunked prefill vs token-by-token, the shared-prefix
-# KV-cache workload (hit rate must be real), and the preemption probe
+# KV-cache workload (hit rate must be real), the preemption probe, and the
+# sharded-engine cluster sweep (1-cluster parity is asserted inside main)
 try:
-    import os
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
     from benchmarks import serve_throughput
-    result = serve_throughput.main(["--smoke"])
+    result = serve_throughput.main(["--smoke", "--clusters", "4"])
     sp = result["shared_prefix"]
     assert sp["prefix_hit_rate"] > 0, "no prefix-cache hits in smoke run"
     assert sp["prefix_cached"]["iterations"] < \
@@ -60,11 +79,19 @@ try:
         "prefix caching did not reduce engine iterations"
     assert result["preemption"]["swap_out_pages"] > 0, \
         "preemption probe swapped nothing"
+    sweep = result["cluster_sweep"]
+    assert sweep["one_cluster_outputs_match_unsharded"], \
+        "sharded engine diverged at 1 cluster"
     print(f"OK   shared-prefix hit-rate="
           f"{sp['prefix_hit_rate']:.2f} pages_saved={sp['pages_saved']} "
-          f"preemption swaps={result['preemption']['swap_out_pages']}")
+          f"preemption swaps={result['preemption']['swap_out_pages']} "
+          f"cluster configs={sorted(sweep['configs'])}")
 except Exception as e:
     print(f"FAIL serve_throughput: {e}")
     traceback.print_exc()
+    failures.append("serve_throughput")
+
+if failures:
+    print(f"SMOKE FAILURES ({len(failures)}): " + ", ".join(failures))
     sys.exit(1)
 print("ALL SMOKE OK")

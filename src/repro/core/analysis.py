@@ -89,6 +89,38 @@ def layer2_request_lifecycles(events: Iterable[Event]) -> Dict[int, List[Dict]]:
     return dict(out)
 
 
+def layer2_cluster_balance(events: Iterable[Event],
+                           n_clusters: Optional[int] = None) -> Dict:
+    """Platform: per-cluster placement balance for the sharded engine.
+
+    CLUSTER_DISPATCH carries (rid, cluster); ALL_GATHER carries
+    (iteration, active clusters).  Returns per-cluster dispatch counts and
+    request sets plus a min/max balance ratio (1.0 = perfectly balanced,
+    0.0 = some cluster never used while another was).  Pass ``n_clusters``
+    so clusters that never dispatched count as zero — without it only
+    clusters present in the event stream are visible."""
+    per: Dict[int, Dict] = {}
+    gathers = 0
+    for e in events:
+        if e.etype == EventType.CLUSTER_DISPATCH:
+            c = per.setdefault(e.a1, {"dispatches": 0, "requests": set()})
+            c["dispatches"] += 1
+            c["requests"].add(e.a0)
+        elif e.etype == EventType.ALL_GATHER:
+            gathers += 1
+    for c in range(n_clusters or 0):
+        per.setdefault(c, {"dispatches": 0, "requests": set()})
+    counts = [c["dispatches"] for c in per.values()]
+    balance = (min(counts) / max(counts)) if counts and max(counts) else 1.0
+    return {
+        "clusters": {k: {"dispatches": v["dispatches"],
+                         "requests": sorted(v["requests"])}
+                     for k, v in sorted(per.items())},
+        "all_gathers": gathers,
+        "balance": balance,
+    }
+
+
 def assert_swaps_balanced(events: List[Event]) -> bool:
     """Every page swapped out for a request that eventually finished was
     swapped back in first (no request completes on lost KV state)."""

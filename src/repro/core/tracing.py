@@ -63,6 +63,11 @@ class EventType(enum.IntEnum):
     # HERO's DMA double-buffering / zero-copy SVM exist to hide)
     H2D = 40
     D2H = 41
+    # multi-cluster sharded serving (HERO §2.1: the PMCA scales by adding
+    # clusters behind one SVM fabric; placement and the cross-cluster token
+    # gather are the observable scheduling events)
+    CLUSTER_DISPATCH = 42  # request placed on a cluster: (rid, cluster)
+    ALL_GATHER = 43        # cross-cluster token gather: (iter, active clusters)
 
 
 HOST_TRACER_ID = 255

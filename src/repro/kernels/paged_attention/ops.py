@@ -23,8 +23,30 @@ from repro.kernels.paged_attention.ref import (
 __all__ = [
     "paged_attention", "paged_prefill", "paged_decode_fused",
     "paged_prefill_fused", "pad_block_table", "page_counts_for",
-    "paged_attention_ref", "paged_prefill_ref",
+    "paged_attention_ref", "paged_prefill_ref", "validate_head_sharding",
 ]
+
+
+def validate_head_sharding(num_heads: int, num_kv_heads: int,
+                           shards: int) -> int:
+    """Check a tensor-parallel head split is GQA-safe for these kernels.
+
+    The kernels' head layout is kv-major: query head ``k*G + g`` reads kv
+    head ``k`` (``G = H // Kv``).  A split into ``shards`` equal contiguous
+    blocks therefore keeps every query head on the same shard as its kv
+    head iff ``shards`` divides ``num_kv_heads``.  Returns the per-shard
+    kv-head count; raises ``ValueError`` on an unsafe split.
+    """
+    if shards < 1:
+        raise ValueError(f"head shards must be >= 1, got {shards}")
+    if num_heads % max(num_kv_heads, 1):
+        raise ValueError(f"H={num_heads} not a multiple of Kv={num_kv_heads}")
+    if num_kv_heads % shards:
+        raise ValueError(
+            f"head axis {shards} does not divide num_kv_heads="
+            f"{num_kv_heads}: a shard would split a GQA group across "
+            f"devices and the block-table gather could not stay local")
+    return num_kv_heads // shards
 
 
 def _on_tpu() -> bool:

@@ -7,8 +7,55 @@ import; everything else (smoke tests, benches) sees the real single device.
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+
 import jax
 from jax.sharding import Mesh
+
+#: Recipe for getting C virtual devices on a CPU host (must be set before
+#: the first jax import; see README "Scaling across clusters").
+HOST_DEVICE_RECIPE = (
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterMesh:
+    """The serving engine's device mesh: C PMCA clusters x H head shards.
+
+    HERO §2.1: the PMCA scales by adding clusters behind one SVM fabric.
+    The serving adaptation maps each cluster to a data-parallel lane group
+    with its own KV page shard, and splits attention heads (GQA-aware)
+    tensor-parallel inside a cluster over the ``head`` axis.  Axis names
+    are fixed: ``("cluster", "head")``.
+    """
+
+    mesh: Mesh
+    clusters: int
+    heads: int
+
+    AXIS_NAMES = ("cluster", "head")
+
+    @property
+    def devices(self) -> int:
+        return self.clusters * self.heads
+
+
+def make_serving_mesh(clusters: int = 1, heads: int = 1) -> ClusterMesh:
+    """Build the ``("cluster", "head")`` serving mesh.
+
+    Works on CPU via forced virtual devices::
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 python ...
+    """
+    n = len(jax.devices())
+    if clusters * heads > n:
+        raise ValueError(
+            f"mesh {clusters}x{heads} needs {clusters * heads} devices, "
+            f"only {n} visible (on CPU, relaunch with {HOST_DEVICE_RECIPE}; "
+            f"XLA_FLAGS now: {os.environ.get('XLA_FLAGS', '<unset>')!r})")
+    mesh = jax.make_mesh((clusters, heads), ClusterMesh.AXIS_NAMES)
+    return ClusterMesh(mesh=mesh, clusters=clusters, heads=heads)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

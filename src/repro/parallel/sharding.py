@@ -253,3 +253,64 @@ def tree_shardings(spec_tree: Any, axes_tree: Any, mesh: Mesh) -> Any:
     return jax.tree.map(
         lambda sds, ax: NamedSharding(mesh, logical_pspec(sds.shape, ax.axes, mesh)),
         spec_tree, axes_tree, is_leaf=lambda x: is_axes_leaf(x))
+
+
+# ---------------------------------------------------------------------------
+# Sharded paged-serving engine specs (the ClusterMesh ("cluster", "head"))
+# ---------------------------------------------------------------------------
+#
+# The paged engine shards two ways: request lanes (and their KV page shard)
+# over ``cluster``, attention heads GQA-aware over ``head``.  Everything
+# else — embeddings, norms, MLP/MoE weights, the logits path — is
+# replicated so on-device greedy sampling needs no cross-shard collective
+# beyond the attention-output psum.
+
+#: attention param leaves sharded over the head axis: leaf name -> the
+#: negative index of its head dimension (stacked-layer leading dims make
+#: positive indices unstable).  wq/wk/wv: (..., d, H|Kv, hd); wo:
+#: (..., H, hd, d); q_norm/k_norm: (..., H|Kv, hd).
+_HEAD_DIM_BY_NAME = {"wq": -2, "wk": -2, "wv": -2, "wo": -3,
+                     "q_norm": -2, "k_norm": -2}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return getattr(last, "key", None) or getattr(last, "name", "") or str(last)
+
+
+def head_param_pspecs(params: Any, head_axis: str = "head") -> Any:
+    """PartitionSpec tree sharding attention heads over ``head_axis``.
+
+    GQA-aware by construction: the reference/kernel head layout is
+    kv-major (query head ``k*G + g`` attends through kv head ``k``), so
+    splitting both the H and Kv dims into equal contiguous blocks keeps
+    every query head co-resident with its kv head.  The caller must check
+    the axis size divides ``num_kv_heads`` (see
+    ``kernels.paged_attention.ops.validate_head_sharding``).
+    """
+    def spec(path, leaf):
+        dim = _HEAD_DIM_BY_NAME.get(_leaf_name(path))
+        if dim is None:
+            return P()
+        out = [None] * leaf.ndim
+        out[leaf.ndim + dim] = head_axis
+        return P(*out)
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def cluster_engine_specs(params: Any) -> Dict[str, Any]:
+    """Spec pieces for ``shard_map``-ing the paged engine steps.
+
+    ``kv`` is the fused (L, C*(P+1), 2, page, Kv, hd) slab — pages sharded
+    over ``cluster`` (each cluster's contiguous block includes its own
+    trash page), kv heads over ``head``; ``lane``/``lane2`` shard
+    lane-indexed (B,) / (B, n) arrays' leading batch dim over ``cluster``;
+    ``params`` is the head-sharded attention-weight tree.  The engine step
+    returns (sampled, kv_pages, new_lens) -> (lane, kv, lane).
+    """
+    return {
+        "params": head_param_pspecs(params),
+        "kv": P(None, "cluster", None, None, "head", None),
+        "lane": P("cluster"),
+        "lane2": P("cluster", None),
+    }

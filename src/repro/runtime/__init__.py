@@ -1,5 +1,6 @@
 from repro.runtime.trainer import Trainer, TrainerConfig, FailureInjector
 from repro.runtime.server import PagedServer, Request
+from repro.runtime.sharded_server import ShardedPagedServer
 
 __all__ = ["Trainer", "TrainerConfig", "FailureInjector", "PagedServer",
-           "Request"]
+           "Request", "ShardedPagedServer"]

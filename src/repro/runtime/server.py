@@ -86,6 +86,7 @@ class Request:
     prefix_hit_tokens: int = 0        # prompt tokens reused from the cache
     preemptions: int = 0
     arrival: int = -1                 # FIFO tiebreak, assigned by submit()
+    cluster: int = 0                  # owning PMCA cluster (sharded engine)
     reg_pages: int = 0                # prompt pages published to the index
     swapped: Optional[List[int]] = None   # lpages parked in the backing store
 
@@ -108,30 +109,14 @@ class PagedServer:
         self.max_pages = max_pages_per_seq
         self.chunk = max(1, chunk)
         self.tracer = tracer or TraceBuffer()
-        self.rab = RAB(rab_cfg, self.tracer)
-        self.pool = PagedKVPool(num_pages, page_size, max_pages_per_seq,
-                                self.rab)
-        L_, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
-        dt = jnp.dtype(cfg.param_dtype)
-        # fused K/V pool; the extra page (index num_pages) is the trash page
-        # masked writes are routed to
-        self.kv_pages = jnp.zeros((L_, num_pages + 1, 2, page_size, kv, hd),
-                                  dt)
         self.use_kernel = use_kernel
-        itp = jax.default_backend() != "tpu"
-        self._chunk_step = jax.jit(functools.partial(
-            _paged_chunk_step, cfg, use_kernel, pages_per_step, itp,
-            num_pages))
-        self._decode_step = jax.jit(functools.partial(
-            _paged_decode_step, cfg, use_kernel, pages_per_step, itp,
-            num_pages))
-        # device-resident engine state (HERO SVM: the scheduler and the
-        # model share these without per-iteration re-uploads)
-        self.bt_dev = jnp.zeros((max_lanes, max_pages_per_seq), jnp.int32)
-        self.len_dev = jnp.zeros((max_lanes,), jnp.int32)
-        self.active_dev = jnp.zeros((max_lanes,), jnp.int32)
-        self.last_tok = jnp.zeros((max_lanes,), jnp.int32)
-        self._bt_host = np.zeros((max_lanes, max_pages_per_seq), np.int32)
+        # overridable construction hooks: the sharded subclass substitutes
+        # per-cluster pools and mesh-sharded device state here instead of
+        # allocating the unsharded versions only to discard them
+        self._build_pool(num_pages, rab_cfg)
+        self._build_device_state(num_pages, pages_per_step)
+        self._bt_host = np.zeros((self.max_lanes, max_pages_per_seq),
+                                 np.int32)
         self.lanes: List[Optional[Request]] = [None] * max_lanes
         self.queue: List[Request] = []
         self.finished: List[Request] = []
@@ -156,6 +141,52 @@ class PagedServer:
         self.d2h_events += n
         self.tracer.record_host(EventType.D2H, n, 0)
 
+    # ------------------------------------------------------ construction --
+    def _build_pool(self, num_pages: int, rab_cfg: RABConfig):
+        self.rab = RAB(rab_cfg, self.tracer)
+        self.pool = PagedKVPool(num_pages, self.page_size, self.max_pages,
+                                self.rab)
+
+    def _build_device_state(self, num_pages: int, pages_per_step: int):
+        cfg = self.cfg
+        L_, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.param_dtype)
+        # fused K/V pool; the extra page (index num_pages) is the trash page
+        # masked writes are routed to
+        self.kv_pages = jnp.zeros(
+            (L_, num_pages + 1, 2, self.page_size, kv, hd), dt)
+        itp = jax.default_backend() != "tpu"
+        self._chunk_step = jax.jit(functools.partial(
+            _paged_chunk_step, cfg, self.use_kernel, pages_per_step, itp,
+            num_pages))
+        self._decode_step = jax.jit(functools.partial(
+            _paged_decode_step, cfg, self.use_kernel, pages_per_step, itp,
+            num_pages))
+        # device-resident engine state (HERO SVM: the scheduler and the
+        # model share these without per-iteration re-uploads)
+        self.bt_dev = jnp.zeros((self.max_lanes, self.max_pages), jnp.int32)
+        self.len_dev = jnp.zeros((self.max_lanes,), jnp.int32)
+        self.active_dev = jnp.zeros((self.max_lanes,), jnp.int32)
+        self.last_tok = jnp.zeros((self.max_lanes,), jnp.int32)
+
+    # ---------------------------------------------------------- pool seam --
+    # Every pool access for a placed request routes through these, so the
+    # sharded subclass can substitute cluster-local pools and translate
+    # local physical page ids into the fused device slab's global indices.
+    def _pool_of(self, cluster: int) -> PagedKVPool:
+        return self.pool
+
+    def _pool(self, req: Request) -> PagedKVPool:
+        return self._pool_of(req.cluster)
+
+    def _capacity_pages(self) -> int:
+        """Page capacity one request can draw from (per cluster)."""
+        return self.pool.num_pages
+
+    def _gpage(self, req: Request, p: int) -> int:
+        """Pool-local physical page -> index into self.kv_pages."""
+        return p
+
     # ------------------------------------------------------------- admin --
     def submit(self, req: Request):
         # real exceptions, not asserts: an unplaceable request at the queue
@@ -168,7 +199,7 @@ class PagedServer:
                 self.max_pages * self.page_size:
             raise ValueError("request exceeds max_pages_per_seq")
         if self._pages_needed(req) + self._cow_budget(req) > \
-                self.pool.num_pages:
+                self._capacity_pages():
             raise ValueError("request exceeds KV pool capacity")
         req.arrival = self._arrival
         self._arrival += 1
@@ -191,37 +222,39 @@ class PagedServer:
         return 1 if (self.enable_prefix_cache and req.max_new > 1
                      and len(req.prompt) % self.page_size) else 0
 
-    def _plan(self, req: Request) -> dict:
-        """Admission plan: which prefix-cache pages to map and how many
-        pages to reserve.  ``need`` excludes only *stable* shared pages
-        (fully written, never appended again); a shared partial tail keeps
-        one reserved page as the sharer's copy-on-write budget, the
-        donor-side CoW is budgeted by ``_cow_budget``, and a resuming
-        request budgets every page it must restore or still allocate."""
+    def _plan(self, req: Request, cluster: int = 0) -> dict:
+        """Admission plan against ``cluster``'s pool: which prefix-cache
+        pages to map and how many pages to reserve.  ``need`` excludes only
+        *stable* shared pages (fully written, never appended again); a
+        shared partial tail keeps one reserved page as the sharer's
+        copy-on-write budget, the donor-side CoW is budgeted by
+        ``_cow_budget``, and a resuming request budgets every page it must
+        restore or still allocate."""
+        pool = self._pool_of(cluster)
         total = self._pages_needed(req) + self._cow_budget(req)
         ps = self.page_size
         if req.swapped is not None:            # resuming after preemption
             # preemption dropped every mapping, so the whole lifetime page
             # budget (restores + future allocations) is needed again
             return {"resume": True, "hit_pages": [], "usable": 0,
-                    "need": total, "cached_hits": 0}
+                    "need": total, "cached_hits": 0, "cluster": cluster}
         usable, hits = 0, []
         if self.enable_prefix_cache and len(req.prompt) > 1:
-            pages, n = self.pool.match_prefix(req.prompt)
+            pages, n = pool.match_prefix(req.prompt)
             # the final prompt token always runs through the model (it
             # produces the first sampled token), so it is never reused
             usable = min(n, len(req.prompt) - 1)
             hits = pages[:-(-usable // ps)] if usable else []
         need = total - usable // ps
-        cached = sum(1 for p in hits if p in self.pool.cached_free)
+        cached = sum(1 for p in hits if p in pool.cached_free)
         plan = {"resume": False, "hit_pages": hits, "usable": usable,
-                "need": need, "cached_hits": cached}
+                "need": need, "cached_hits": cached, "cluster": cluster}
         if hits and not self._fits(plan):
             # hits sitting on cached-free pages cost evictable capacity a
             # no-sharing admission would simply reuse — never let the cache
             # starve a request that fits without it
             fallback = {"resume": False, "hit_pages": [], "usable": 0,
-                        "need": total, "cached_hits": 0}
+                        "need": total, "cached_hits": 0, "cluster": cluster}
             if self._fits(fallback):
                 return fallback
         return plan
@@ -229,7 +262,8 @@ class PagedServer:
     def _fits(self, plan: dict) -> bool:
         # reviving cached-free hit pages consumes them from the evictable
         # set, so they are budgeted on top of the reservation
-        return self.pool.available() >= plan["need"] + plan["cached_hits"]
+        return self._pool_of(plan["cluster"]).available() >= \
+            plan["need"] + plan["cached_hits"]
 
     def _victim(self, head: Request) -> Optional[Request]:
         """Lowest-priority running request (youngest within a class) —
@@ -262,28 +296,30 @@ class PagedServer:
     def _place(self, req: Request, lane: int, plan: dict):
         rid = req.rid
         req.lane = lane
+        req.cluster = plan["cluster"]
+        pool = self._pool(req)
         self.lanes[lane] = req
         if plan["need"] > 0:
             # reserve the request's remaining lifetime page budget so
             # chunked prefill / restore can never hit exhaustion mid-stream
-            self.pool.reserve(rid, plan["need"])
+            pool.reserve(rid, plan["need"])
         if plan["resume"]:
             self._swap_in(req)
         elif plan["usable"]:
             # prefix-cache hit: map the cached pages, skip their prefill
             for lp, p in enumerate(plan["hit_pages"]):
-                self.pool.share_page(rid, lp, p)
-            self.pool.seq_len[rid] = plan["usable"]
-            self.pool.stats["prefix_hit_tokens"] += plan["usable"]
+                pool.share_page(rid, lp, p)
+            pool.seq_len[rid] = plan["usable"]
+            pool.stats["prefix_hit_tokens"] += plan["usable"]
             req.fed = plan["usable"]
             req.prefix_hit_tokens = plan["usable"]
             req.reg_pages = plan["usable"] // self.page_size
             self.tracer.record_host(EventType.PREFIX_HIT, rid,
                                     plan["usable"])
-        self._refresh_row(lane, rid)
+        self._refresh_row(lane, req)
         self.active_dev = self.active_dev.at[lane].set(1)
         self.len_dev = self.len_dev.at[lane].set(
-            self.pool.seq_len.get(rid, 0))
+            pool.seq_len.get(rid, 0))
         if plan["resume"] and req.fed >= len(req.prompt) and req.out:
             # mid-decode resume: re-seed the device-resident last sample
             self.last_tok = self.last_tok.at[lane].set(req.out[-1])
@@ -300,16 +336,17 @@ class PagedServer:
         preemption sweep always reclaims everything a victim held and the
         scheduler can never pin the pool behind preempted sequences."""
         rid, i = req.rid, req.lane
-        mapped = self.pool.seq_pages(rid)
+        pool = self._pool(req)
+        mapped = pool.seq_pages(rid)
         if mapped:
-            idx = jnp.asarray([p for _, p in mapped])
+            idx = jnp.asarray([self._gpage(req, p) for _, p in mapped])
             payload = np.asarray(self.kv_pages[:, idx])
             self._d2h(len(mapped))    # one gather, len(mapped) pages pulled
             for j, (lp, _p) in enumerate(mapped):
                 self.backing.put(rid, lp, payload[:, j])
-                self.pool.unmap_page(rid, lp)
+                pool.unmap_page(rid, lp)
         req.swapped = [lp for lp, _ in mapped]
-        self.pool.reserved.pop(rid, None)
+        pool.reserved.pop(rid, None)
         req.lane = -1
         req.preemptions += 1
         self.preemptions += 1
@@ -317,7 +354,7 @@ class PagedServer:
         self.active_dev = self.active_dev.at[i].set(0)
         self.len_dev = self.len_dev.at[i].set(0)
         self._h2d(1)
-        self.pool.stats["swapped_out"] += len(mapped)
+        pool.stats["swapped_out"] += len(mapped)
         self.tracer.record_host(EventType.SWAP_OUT, rid, len(mapped))
         self.tracer.record_host(EventType.REQUEST_PREEMPT, rid, len(mapped))
         self.queue.append(req)
@@ -335,26 +372,28 @@ class PagedServer:
         """Restore a preempted request's swapped pages: fresh physical
         pages, one batched H2D payload upload, mappings re-established."""
         rid = req.rid
+        pool = self._pool(req)
         lps, req.swapped = req.swapped, None
         if not lps:
             return
-        phys = [self.pool.alloc_page(rid, lp) for lp in lps]
+        phys = [self._gpage(req, pool.alloc_page(rid, lp)) for lp in lps]
         payload = jnp.stack(
             [jnp.asarray(self.backing.pop(rid, lp)) for lp in lps], axis=1)
         self.kv_pages = self.kv_pages.at[:, jnp.asarray(phys)].set(
             payload.astype(self.kv_pages.dtype))
         self._h2d(len(lps))
-        self.pool.stats["swapped_in"] += len(lps)
+        pool.stats["swapped_in"] += len(lps)
         self.tracer.record_host(EventType.SWAP_IN, rid, len(lps))
 
-    def _refresh_row(self, lane: int, rid: int):
+    def _refresh_row(self, lane: int, req: Request):
         """Rebuild a lane's repeat-padded host block-table row from the
         pool (through the RAB translate path) and mark it for upload."""
-        n = self.pool.seq_len.get(rid, 0)
+        pool, rid = self._pool(req), req.rid
+        n = pool.seq_len.get(rid, 0)
         n_pages = -(-n // self.page_size) if n else 0
         last = 0
         for lp in range(n_pages):
-            last = self.pool.translate(rid, lp)
+            last = pool.translate(rid, lp)
             self._bt_host[lane, lp] = last
         self._bt_host[lane, n_pages:] = last
         self._dirty.add(lane)
@@ -371,18 +410,19 @@ class PagedServer:
         for r in active:
             if n_new[r.lane] == 0 or r.fed >= len(r.prompt):
                 continue
-            written = min(self.pool.seq_len.get(r.rid, 0), len(r.prompt))
+            pool = self._pool(r)
+            written = min(pool.seq_len.get(r.rid, 0), len(r.prompt))
             for lp in range(r.reg_pages, written // ps):
-                self.pool.register_page(r.rid, lp, r.prompt)
+                pool.register_page(r.rid, lp, r.prompt)
             r.reg_pages = max(r.reg_pages, written // ps)
             if written == len(r.prompt) and written % ps:
-                self.pool.register_page(r.rid, written // ps, r.prompt)
+                pool.register_page(r.rid, written // ps, r.prompt)
 
     def _finish(self, req: Request):
         req.done = True
         self.tracer.record_host(EventType.REQUEST_FINISH, req.rid,
                                 len(req.out))
-        self.pool.release(req.rid)
+        self._pool(req).release(req.rid)
         self.tracer.record_host(EventType.PAGE_RELEASE, req.rid, 0)
         self.lanes[req.lane] = None
         self.active_dev = self.active_dev.at[req.lane].set(0)
@@ -424,18 +464,20 @@ class PagedServer:
         cow_dst: List[int] = []
         for r in active:
             i = r.lane
+            pool = self._pool(r)
             for _ in range(int(n_new[i])):
-                lpage, slot = self.pool.append_token(r.rid)
+                lpage, slot = pool.append_token(r.rid)
                 if slot == 0:
-                    phys = self.pool.translate(r.rid, lpage)
+                    phys = pool.translate(r.rid, lpage)
                     self.tracer.record_host(EventType.PAGE_ALLOC, r.rid, phys)
                     self._bt_host[i, lpage:] = phys
                     dirty.add(i)
-                for (s, lp, src, dst) in self.pool.drain_cow():
+                for (s, lp, src, dst) in pool.drain_cow():
                     # the writer was remapped off a shared page: patch its
-                    # row and queue the device-side payload copy
-                    cow_src.append(src)
-                    cow_dst.append(dst)
+                    # row and queue the device-side payload copy (slab
+                    # indices are global; the block table stays pool-local)
+                    cow_src.append(self._gpage(r, src))
+                    cow_dst.append(self._gpage(r, dst))
                     self._bt_host[i, lp:] = dst
                     dirty.add(i)
                     self.tracer.record_host(EventType.PAGE_COW, s, dst)
@@ -530,12 +572,18 @@ def _layer_mlp(cfg, lp, x):
 
 def _paged_chunk_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
                       interpret: bool, num_pages: int, params, kv_pages,
-                      bt, lens, n_new, feed, last_tok, use_last):
+                      bt, lens, n_new, feed, last_tok, use_last, *,
+                      axis_name=None):
     """Consume up to C tokens per lane: prompt chunks from ``feed``, decode
     lanes (``use_last``) from the device-resident previous sample.
 
     kv_pages: (L, P+1, 2, page, kv, hd); bt: (B, n_pages) repeat-padded.
-    Returns (sampled_tokens (B,), kv_pages, new_lens)."""
+    Returns (sampled_tokens (B,), kv_pages, new_lens).
+
+    ``axis_name`` names the tensor-parallel head mesh axis when this runs
+    as a ``shard_map`` body (sharded engine): q/k/v/o weights and the pool's
+    kv-head dim arrive pre-sliced, so the only collective is one psum of the
+    attention output per layer — everything else is replicated compute."""
     B, C = feed.shape
     page = kv_pages.shape[3]
     n_pages = bt.shape[1]
@@ -561,7 +609,11 @@ def _paged_chunk_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
         else:
             a = paged_prefill_ref(q, kv_pages[i, :, 0], kv_pages[i, :, 1],
                                   bt_masked, new_lens, lens)
-        x = x + jnp.einsum("bshk,hkd->bsd", a, lp["attn"]["wo"])
+        attn_out = jnp.einsum("bshk,hkd->bsd", a, lp["attn"]["wo"])
+        if axis_name is not None:
+            # each head shard holds a partial sum over its heads
+            attn_out = jax.lax.psum(attn_out, axis_name)
+        x = x + attn_out
         x = _layer_mlp(cfg, lp, x)
 
     x = L.norm_forward(cfg, params["final_norm"], x)
@@ -576,7 +628,7 @@ def _paged_chunk_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
 
 def _paged_decode_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
                        interpret: bool, num_pages: int, params, kv_pages,
-                       bt, lens, active, last_tok):
+                       bt, lens, active, last_tok, *, axis_name=None):
     """One decode token for every active lane, entirely from device state —
     the C=1 case of the chunk step (mirroring paged_decode_fwd, which is the
     C=1 case of the prefill kernel), with every lane fed its device-resident
@@ -587,4 +639,4 @@ def _paged_decode_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
     return _paged_chunk_step(
         cfg, use_kernel, pages_per_step, interpret, num_pages, params,
         kv_pages, bt, lens, active, jnp.zeros((B, 1), jnp.int32), last_tok,
-        jnp.ones((B,), jnp.int32))
+        jnp.ones((B,), jnp.int32), axis_name=axis_name)

@@ -1,0 +1,259 @@
+"""Multi-cluster sharded paged serving engine (HERO §2.1 scaled out).
+
+HERO's headline property is that the PMCA *scales*: throughput grows by
+instantiating more RISC-V clusters behind one SVM/RAB fabric.  This module
+is the serving-side reproduction of that scaling lever: the paged engine of
+``runtime.server`` is sharded across a JAX device mesh of C "clusters"
+(data-parallel lane groups) x H tensor-parallel head shards — the
+``ClusterMesh`` with named axes ``("cluster", "head")``, which works on CPU
+via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+Mapping back to the paper:
+
+* **per-cluster RAB + page shard** (§2.2) — every cluster owns a
+  ``PagedKVPool`` slice of the fused KV slab with its own free list,
+  refcounts, prefix index and ``RAB`` instance (``ClusterPagedPool``); a
+  sequence lives entirely inside one cluster, so its block table holds
+  cluster-local physical ids and the cluster id rides with the request;
+* **cluster-aware admission** — placement is cache-affine least-loaded
+  (largest prefix hit, then most obtainable pages); preemption stays
+  cluster-local: a victim's pages swap out of *its* cluster's shard only;
+* **one program, C clusters** (§3.2's shard_map discipline) — the jitted
+  chunk/decode steps of ``runtime.server`` run unchanged as ``shard_map``
+  bodies; lanes and their device-resident state (block tables, lengths,
+  sampled tokens) shard over ``cluster``, attention heads GQA-aware over
+  ``head`` (the only collective is one psum of the attention output per
+  layer); with C = H = 1 the engine is token-for-token identical to the
+  unsharded ``PagedServer``;
+* **tracing** (§2.3.1) — placement and the per-iteration cross-cluster
+  token gather emit ``CLUSTER_DISPATCH`` / ``ALL_GATHER`` events, analyzed
+  by ``core.analysis.layer2_cluster_balance``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ArchConfig
+from repro.core.rab import ClusterPagedPool, PagedKVPool, RABConfig
+from repro.core.tracing import EventType, TraceBuffer
+from repro.kernels.paged_attention.ops import validate_head_sharding
+from repro.launch.mesh import ClusterMesh, make_serving_mesh
+from repro.parallel.sharding import cluster_engine_specs
+from repro.runtime.server import (
+    PagedServer, Request, _paged_chunk_step, _paged_decode_step,
+)
+
+__all__ = ["ShardedPagedServer"]
+
+
+class ShardedPagedServer(PagedServer):
+    """``PagedServer`` sharded over a ``("cluster", "head")`` device mesh.
+
+    ``num_pages`` and ``max_lanes`` are *per cluster* (so a 1-cluster
+    sharded engine is configured exactly like the unsharded one); the
+    fused device slab holds ``C * (num_pages + 1)`` pages — each cluster's
+    contiguous block ends with its own trash page — sharded over the
+    ``cluster`` axis, kv heads over ``head``.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, *,
+                 mesh: Optional[ClusterMesh] = None,
+                 clusters: int = 1, heads: int = 1,
+                 num_pages: int = 64, page_size: int = 8, max_lanes: int = 4,
+                 max_pages_per_seq: int = 16, chunk: int = 16,
+                 pages_per_step: int = 2,
+                 rab_cfg: RABConfig = RABConfig(l1_entries=8, l2_entries=32,
+                                                l2_assoc=4, l2_banks=2),
+                 tracer: Optional[TraceBuffer] = None,
+                 use_kernel: bool = True,
+                 enable_prefix_cache: bool = True):
+        cmesh = mesh if mesh is not None else make_serving_mesh(clusters,
+                                                                heads)
+        self.cmesh = cmesh
+        self.clusters = cmesh.clusters
+        self.heads = cmesh.heads
+        self.lanes_per_cluster = max_lanes
+        self._local_pages = num_pages
+        validate_head_sharding(cfg.num_heads, cfg.num_kv_heads, cmesh.heads)
+        super().__init__(cfg, params, num_pages=num_pages,
+                         page_size=page_size,
+                         max_lanes=max_lanes * cmesh.clusters,
+                         max_pages_per_seq=max_pages_per_seq, chunk=chunk,
+                         pages_per_step=pages_per_step, rab_cfg=rab_cfg,
+                         tracer=tracer, use_kernel=use_kernel,
+                         enable_prefix_cache=enable_prefix_cache)
+        self.peak_pages = [0] * cmesh.clusters  # per-cluster occupancy peak
+        self._fin_mark = 0
+        self._parked_len: dict = {}     # rid -> seq_len across preemption
+
+    # ------------------------------------------------------ construction --
+    def _build_pool(self, num_pages: int, rab_cfg: RABConfig):
+        # per-cluster pools/RABs instead of the base's single pool;
+        # self.pool points at an aggregate view (stats/free_pages) for
+        # external readers, never at an allocator
+        self.cpool = ClusterPagedPool(self.clusters, num_pages,
+                                      self.page_size, self.max_pages,
+                                      rab_cfg, self.tracer)
+        self.pool = self.cpool
+        self.rabs = self.cpool.rabs
+        self.rab = self.rabs[0]
+
+    def _build_device_state(self, num_pages: int, pages_per_step: int):
+        # the fused slab, re-laid-out: C contiguous (num_pages + 1) blocks
+        # (trash page per cluster), pages sharded over `cluster`, kv heads
+        # over `head`; lane state shards its batch dim over `cluster`
+        cfg, C = self.cfg, self.clusters
+        L_, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = jnp.dtype(cfg.param_dtype)
+        specs = cluster_engine_specs(self.params)
+        mesh_ = self.cmesh.mesh
+        ns = functools.partial(NamedSharding, mesh_)
+        self.kv_pages = jax.device_put(
+            jnp.zeros((L_, C * (num_pages + 1), 2, self.page_size, kv, hd),
+                      dt), ns(specs["kv"]))
+        B = self.max_lanes
+        self.bt_dev = jax.device_put(
+            jnp.zeros((B, self.max_pages), jnp.int32), ns(specs["lane2"]))
+        self.len_dev = jax.device_put(jnp.zeros((B,), jnp.int32),
+                                      ns(specs["lane"]))
+        self.active_dev = jax.device_put(jnp.zeros((B,), jnp.int32),
+                                         ns(specs["lane"]))
+        self.last_tok = jax.device_put(jnp.zeros((B,), jnp.int32),
+                                       ns(specs["lane"]))
+        self.params = jax.tree.map(
+            lambda x, s: jax.device_put(x, ns(s)), self.params,
+            specs["params"])
+
+        # the unsharded engine steps, shard_mapped: each (cluster, head)
+        # shard runs the single-cluster program on its lane group, local
+        # page block and local heads — HERO's "the per-cluster body is
+        # literally the single-cluster program" discipline
+        itp = jax.default_backend() != "tpu"
+        chunk_body = functools.partial(
+            _paged_chunk_step, cfg, self.use_kernel, pages_per_step, itp,
+            num_pages, axis_name="head")
+        decode_body = functools.partial(
+            _paged_decode_step, cfg, self.use_kernel, pages_per_step, itp,
+            num_pages, axis_name="head")
+        out_specs = (specs["lane"], specs["kv"], specs["lane"])
+        self._chunk_step = jax.jit(shard_map(
+            chunk_body, mesh=mesh_,
+            in_specs=(specs["params"], specs["kv"], specs["lane2"],
+                      specs["lane"], specs["lane"], specs["lane2"],
+                      specs["lane"], specs["lane"]),
+            out_specs=out_specs, check_rep=False))
+        self._decode_step = jax.jit(shard_map(
+            decode_body, mesh=mesh_,
+            in_specs=(specs["params"], specs["kv"], specs["lane2"],
+                      specs["lane"], specs["lane"], specs["lane"]),
+            out_specs=out_specs, check_rep=False))
+
+    # ---------------------------------------------------------- pool seam --
+    def _pool_of(self, cluster: int) -> PagedKVPool:
+        return self.cpool.pools[cluster]
+
+    def _capacity_pages(self) -> int:
+        return self._local_pages
+
+    def _gpage(self, req: Request, p: int) -> int:
+        return self.cpool.global_page(req.cluster, p)
+
+    # --------------------------------------------------------- scheduler --
+    def _free_lane(self, cluster: int) -> Optional[int]:
+        lo = cluster * self.lanes_per_cluster
+        for i in range(lo, lo + self.lanes_per_cluster):
+            if self.lanes[i] is None:
+                return i
+        return None
+
+    def _admit(self):
+        """Cluster-aware admission: plan the queue head against every
+        cluster with a free lane and place it cache-affine least-loaded —
+        largest usable prefix hit first, then most obtainable pages, then
+        lowest cluster id.  When no cluster fits, preemption reclaims the
+        lowest-priority running lane (the sweep is cluster-local: only the
+        victim's cluster shard is touched) and planning retries."""
+        while self.queue:
+            self.queue.sort(key=lambda r: (-r.priority, r.arrival))
+            head = self.queue[0]
+            best = None
+            for c in range(self.clusters):
+                lane = self._free_lane(c)
+                if lane is None:
+                    continue
+                plan = self._plan(head, cluster=c)
+                if not self._fits(plan):
+                    continue
+                score = (plan["usable"], self._pool_of(c).available(), -c)
+                if best is None or score > best[0]:
+                    best = (score, lane, plan)
+            if best is None:
+                victim = self._victim(head)
+                if victim is None:
+                    break
+                self._preempt(victim)
+                continue
+            self.queue.pop(0)
+            self._place(head, best[1], best[2])
+
+    def _place(self, req: Request, lane: int, plan: dict):
+        self.cpool.place(req.rid, plan["cluster"])
+        self.tracer.record_host(EventType.CLUSTER_DISPATCH, req.rid,
+                                plan["cluster"])
+        if plan["resume"] and req.rid in self._parked_len:
+            # re-install the sequence length into the (possibly different)
+            # destination cluster's pool before the swap-in restores pages
+            self._pool_of(plan["cluster"]).seq_len[req.rid] = \
+                self._parked_len.pop(req.rid)
+        super()._place(req, lane, plan)
+
+    def _preempt(self, req: Request):
+        pool = self._pool(req)
+        super()._preempt(req)
+        # the victim may be re-placed on ANY cluster (its KV payload is
+        # host-resident now): park its sequence length with the scheduler
+        # and drop the old cluster's routing entry
+        self._parked_len[req.rid] = pool.seq_len.pop(req.rid, 0)
+        self.cpool.forget(req.rid)
+
+    def _finish(self, req: Request):
+        super()._finish(req)
+        self.cpool.forget(req.rid)
+
+    # --------------------------------------------------------------- step --
+    def step(self) -> bool:
+        before_it = self.iterations
+        occ0 = self.cpool.occupancy()
+        progressed = super().step()
+        if self.iterations > before_it:
+            busy = {r.cluster for r in self.lanes if r is not None}
+            busy |= {r.cluster for r in self.finished[self._fin_mark:]}
+            self._fin_mark = len(self.finished)
+            # the one D2H token pull per iteration gathers every active
+            # cluster's sampled tokens through the mesh
+            self.tracer.record_host(EventType.ALL_GATHER, self.iterations,
+                                    len(busy))
+            for c, (a, b) in enumerate(zip(occ0, self.cpool.occupancy())):
+                self.peak_pages[c] = max(self.peak_pages[c], a, b)
+        return progressed
+
+    # ------------------------------------------------------------- report --
+    def cluster_report(self) -> dict:
+        """Per-cluster occupancy/balance summary for benchmarks."""
+        occ = self.cpool.occupancy()
+        return {
+            "clusters": self.clusters,
+            "heads": self.heads,
+            "peak_pages_per_cluster": list(self.peak_pages),
+            "pages_per_cluster": self._local_pages,
+            "peak_occupancy_per_cluster": [
+                p / self._local_pages for p in self.peak_pages],
+            "live_pages_per_cluster": occ,
+        }

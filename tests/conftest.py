@@ -1,9 +1,39 @@
+import os
+
 import jax
 import pytest
 
 jax.config.update("jax_platform_name", "cpu")
 
+# Hypothesis example budgets: "ci" is the default everywhere (same budget
+# the suites historically hardcoded); the scheduled nightly job selects
+# "nightly" via --hypothesis-profile=nightly for a much deeper search.
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile("ci", max_examples=50, deadline=None)
+    settings.register_profile(
+        "nightly", max_examples=500, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:        # property suites importorskip hypothesis anyway
+    pass
+
 
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def matrix_page_size() -> int:
+    """Engine page size under test — the CI matrix sets REPRO_PAGE_SIZE
+    to cover {4, 8} in separate jobs."""
+    return int(os.environ.get("REPRO_PAGE_SIZE", "4"))
+
+
+@pytest.fixture(scope="session")
+def matrix_use_kernel() -> bool:
+    """Attention path under test — the CI matrix sets REPRO_ATTN_PATH to
+    'kernel' (Pallas, interpret mode on CPU) or 'ref' (XLA oracle)."""
+    return os.environ.get("REPRO_ATTN_PATH", "ref") == "kernel"

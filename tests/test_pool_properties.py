@@ -20,7 +20,9 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.rab import RAB, RABConfig, PagedKVPool  # noqa: E402
+from repro.core.rab import (  # noqa: E402
+    RAB, RABConfig, PagedKVPool, ClusterPagedPool,
+)
 
 PAGE_SIZE = 2
 NUM_PAGES = 12
@@ -190,7 +192,7 @@ SCHEDULE = st.lists(st.tuples(OPS, st.integers(0, 6), st.integers(1, 4)),
                     min_size=1, max_size=120)
 
 
-@settings(max_examples=50, deadline=None)
+@settings(deadline=None)
 @given(SCHEDULE)
 def test_pool_invariants_under_random_schedules(schedule):
     m = SchedulerModel()
@@ -214,7 +216,7 @@ def test_pool_invariants_under_random_schedules(schedule):
     assert sum(m.pool.refcount.values()) == 0 == len(m.pool.page_table)
 
 
-@settings(max_examples=40, deadline=None)
+@settings(deadline=None)
 @given(st.lists(st.tuples(st.integers(0, 6), st.integers(1, 3)),
                 min_size=1, max_size=40))
 def test_prefix_index_consistency(subs):
@@ -232,3 +234,72 @@ def test_prefix_index_consistency(subs):
             assert pool.page_key[p] == key
             hit, n = pool.match_prefix(list(key))
             assert n == len(key) and hit[-1] == p
+
+
+# ---------------------------------------------------------------------------
+# multi-cluster pool partition (sharded engine)
+# ---------------------------------------------------------------------------
+
+CLUSTER_OPS = st.sampled_from(["submit", "append", "append", "append",
+                               "release"])
+
+
+@settings(deadline=None)
+@given(st.integers(1, 4),
+       st.lists(st.tuples(CLUSTER_OPS, st.integers(0, 7)),
+                min_size=1, max_size=80))
+def test_cluster_pool_partition(clusters, schedule):
+    """Random least-loaded placements and per-sequence page traffic across
+    C cluster shards: no physical page is ever owned by two clusters, a
+    sequence is resident on exactly its routed cluster, and the shards
+    always partition the global page namespace — ``ClusterPagedPool``'s
+    invariants, checked after every operation."""
+    cp = ClusterPagedPool(clusters, NUM_PAGES, PAGE_SIZE, MAX_PAGES_PER_SEQ,
+                          RABConfig(l1_entries=4, l2_entries=16, l2_assoc=4,
+                                    l2_banks=2))
+    live = {}                       # seq -> cluster
+    next_seq = 0
+    for op, arg in schedule:
+        if op == "submit":
+            c = cp.least_loaded()
+            pool = cp.pools[c]
+            pages = -(-(arg + 1) // PAGE_SIZE)
+            if pages > min(pool.available(), MAX_PAGES_PER_SEQ):
+                continue
+            cp.place(next_seq, c)
+            pool.reserve(next_seq, pages)
+            live[next_seq] = c
+            next_seq += 1
+        elif op == "append" and live:
+            seq = sorted(live)[arg % len(live)]
+            pool = cp.pool_for(seq)
+            n = pool.seq_len.get(seq, 0)
+            need_page = n % PAGE_SIZE == 0
+            budget = pool.reserved.get(seq, 0)
+            lp = n // PAGE_SIZE
+            if lp >= MAX_PAGES_PER_SEQ or (need_page and budget == 0
+                                           and pool.available() < 1):
+                continue
+            pool.append_token(seq)
+            pool.drain_cow()
+        elif op == "release" and live:
+            seq = sorted(live)[arg % len(live)]
+            cp.pool_for(seq).release(seq)
+            cp.forget(seq)
+            del live[seq]
+        cp.check_invariants()
+    for seq in list(live):
+        cp.pool_for(seq).release(seq)
+        cp.forget(seq)
+        cp.check_invariants()
+    assert cp.free_pages() == clusters * NUM_PAGES
+    assert not cp.cluster_of
+
+
+def test_cluster_pool_rejects_double_placement():
+    cp = ClusterPagedPool(2, NUM_PAGES, PAGE_SIZE, MAX_PAGES_PER_SEQ)
+    cp.place(0, 0)
+    with pytest.raises(AssertionError):
+        cp.place(0, 1)
+    cp.forget(0)
+    cp.place(0, 1)                  # legal again after forget (re-admission)

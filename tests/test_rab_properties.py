@@ -12,7 +12,7 @@ from repro.core.rab import RAB, RABConfig, PagedKVPool  # noqa: E402
 CFG = RABConfig(l1_entries=4, l2_entries=16, l2_assoc=4, l2_banks=2)
 
 
-@settings(max_examples=40, deadline=None)
+@settings(deadline=None)
 @given(st.lists(st.integers(0, 30), min_size=1, max_size=120))
 def test_translation_always_correct(vpages):
     """Property: whatever the access pattern, a translation that completes
@@ -27,7 +27,7 @@ def test_translation_always_correct(vpages):
         assert p == pt[v]
 
 
-@settings(max_examples=30, deadline=None)
+@settings(deadline=None)
 @given(st.lists(st.integers(0, 40), min_size=1, max_size=100))
 def test_resident_subset_of_page_table(vpages):
     rab = RAB(CFG)
@@ -39,7 +39,7 @@ def test_resident_subset_of_page_table(vpages):
         assert pt[v] == p
 
 
-@settings(max_examples=25, deadline=None)
+@settings(deadline=None)
 @given(st.lists(st.sampled_from([("tok", 1), ("tok", 2), ("rel", 1),
                                  ("rel", 2)]), max_size=60))
 def test_pool_never_double_maps(ops):
