@@ -12,7 +12,6 @@ Paper's reductions: (a) ~60%, (b) >60%, (c) >95%, (d) ~80%.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import jax
@@ -57,7 +56,7 @@ def forest_kernel(feat_idx, thresh, children, x):
     """Classify batch x through depth-8 trees via gathers (partial access)."""
     node = jnp.zeros((x.shape[0], feat_idx.shape[0]), jnp.int32)
     for _ in range(8):
-        f = feat_idx[jnp.arange(feat_idx.shape[0])[None, :], node]
+        _f = feat_idx[jnp.arange(feat_idx.shape[0])[None, :], node]
         t = thresh[jnp.arange(feat_idx.shape[0])[None, :], node]
         go_right = x[:, 0][:, None] > t
         node = children[jnp.arange(feat_idx.shape[0])[None, :], node,
@@ -121,7 +120,8 @@ def run_benchmarks(repeats: int = 3):
 
     # (c) MemCopy — streaming
     big = rng.standard_normal((1 << 22,)).astype(np.float32)  # 16 MiB
-    ident = lambda x: x + 0.0
+    def ident(x):
+        return x + 0.0
     bench("memcopy",
           lambda: tgt.run_copy_based(ident, big),
           lambda: [tgt.svm.share(jax.device_put(big))],
@@ -130,7 +130,8 @@ def run_benchmarks(repeats: int = 3):
     # (d) MatMul
     A = rng.standard_normal((768, 768)).astype(np.float32)
     B = rng.standard_normal((768, 768)).astype(np.float32)
-    mm = lambda a, b: a @ b
+    def mm(a, b):
+        return a @ b
     bench("matmul",
           lambda: tgt.run_copy_based(mm, A, B),
           lambda: [tgt.svm.share(jax.device_put(A)),

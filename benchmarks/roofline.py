@@ -29,7 +29,6 @@ import json
 from pathlib import Path
 from typing import Dict, List, Optional
 
-import jax
 
 from repro.configs import SHAPES, get_config
 from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_LINK_BW

@@ -18,7 +18,11 @@ Three workloads, all emitted into ``BENCH_serve.json``:
   workload served by the sharded engine across a ``("cluster", "head")``
   mesh — iters/request, per-cluster peak page occupancy, dispatch balance,
   with the 1-cluster configuration asserted token-for-token identical to
-  the unsharded engine.
+  the unsharded engine;
+* a speculative-decoding workload (repeated-suffix prompts, one request
+  per lane so drafting is never throttled) served with ``spec_k`` off vs
+  on — engine iterations per generated token (the gated win), acceptance
+  rate, wasted verify tokens, and token-for-token parity asserted.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py            # full
     PYTHONPATH=src python benchmarks/serve_throughput.py --smoke    # CI-sized
@@ -47,7 +51,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.analysis import layer1_decode, layer2_cluster_balance
+from repro.core.analysis import (
+    layer1_decode, layer2_cluster_balance, layer2_speculation,
+)
 from repro.core.tracing import EventType, TraceBuffer
 from repro.models import model as M
 from repro.runtime import PagedServer, Request, ShardedPagedServer
@@ -61,17 +67,20 @@ def _make_prompts(n: int, length: int, vocab: int, seed: int = 0):
 def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
                max_lanes, max_pages_per_seq, use_kernel,
                enable_prefix_cache=True, clusters=None, heads=1,
-               keep_events=None) -> dict:
+               keep_events=None, spec_k=0) -> dict:
     """One engine run.  ``clusters=None`` -> the unsharded ``PagedServer``;
     an int -> ``ShardedPagedServer`` over a (clusters, heads) mesh, with
-    per-cluster occupancy and dispatch balance added to the result."""
+    per-cluster occupancy and dispatch balance added to the result.
+    ``spec_k > 0`` enables speculative decoding (n-gram drafter) and adds
+    acceptance metrics to the result."""
     tracer = TraceBuffer(capacity=1 << 16)
     if clusters is None:
         srv = PagedServer(cfg, params, num_pages=num_pages,
                           page_size=page_size, max_lanes=max_lanes,
                           max_pages_per_seq=max_pages_per_seq,
                           chunk=chunk, use_kernel=use_kernel, tracer=tracer,
-                          enable_prefix_cache=enable_prefix_cache)
+                          enable_prefix_cache=enable_prefix_cache,
+                          spec_k=spec_k)
     else:
         srv = ShardedPagedServer(cfg, params, clusters=clusters, heads=heads,
                                  num_pages=num_pages, page_size=page_size,
@@ -79,7 +88,8 @@ def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
                                  max_pages_per_seq=max_pages_per_seq,
                                  chunk=chunk, use_kernel=use_kernel,
                                  tracer=tracer,
-                                 enable_prefix_cache=enable_prefix_cache)
+                                 enable_prefix_cache=enable_prefix_cache,
+                                 spec_k=spec_k)
     reqs = [Request(rid=rid, prompt=list(p), max_new=max_new)
             for rid, p in enumerate(prompts)]
     for r in reqs:
@@ -111,11 +121,23 @@ def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
         extra = dict(srv.cluster_report(),
                      dispatch_balance=bal["balance"],
                      all_gathers=bal["all_gathers"])
+    if spec_k:
+        sp = layer2_speculation(layer1_decode(events))
+        extra.update(
+            spec_k=spec_k,
+            spec_iterations=srv.spec_iterations,
+            spec_proposed=srv.spec_proposed,
+            spec_accepted=srv.spec_accepted,
+            spec_rejected=srv.spec_rejected,
+            acceptance_rate=sp["acceptance_rate"],
+            wasted_verify_tokens=sp["wasted_verify_tokens"],
+        )
     return {
         **extra,
         "chunk": chunk,
         "iterations": srv.iterations,
         "iters_per_request": srv.iterations / len(done),
+        "iters_per_generated_token": srv.iterations / max(gen, 1),
         "generated_tokens": gen,
         "tokens_per_s": gen_timed / max(dt, 1e-9),
         "wall_s": dt,
@@ -145,6 +167,56 @@ def _make_shared_prefix_prompts(k_prefixes, m_per_prefix, sys_len, user_len,
             prompts.append(s + rng.integers(1, vocab,
                                             size=user_len).tolist())
     return prompts
+
+
+def _make_repeated_suffix_prompts(n, pat_len, reps, tail_len, vocab, seed=3):
+    """n prompts, each a short random pattern tiled ``reps`` times plus a
+    distinct random tail — the workload speculative decoding exists for:
+    greedy decode over periodic context settles into short cycles the
+    n-gram drafter predicts almost for free."""
+    rng = np.random.default_rng(seed)
+    prompts = []
+    for _ in range(n):
+        pat = rng.integers(1, vocab, size=pat_len).tolist()
+        tail = rng.integers(1, vocab, size=tail_len).tolist()
+        prompts.append(pat * reps + tail)
+    return prompts
+
+
+def run_spec_workload(cfg, params, *, spec_k, max_new, page_size, max_lanes,
+                      use_kernel, pat_len=4, reps=3, tail_len=2,
+                      chunk=8) -> dict:
+    """Repeated-suffix workload served spec-off vs spec-on.
+
+    One request per lane so the queue stays empty and drafting is never
+    throttled; identical engine configuration otherwise, so the only
+    difference is the draft-verify-rollback path.  Outputs must match
+    token-for-token (greedy parity), and engine iterations per generated
+    token is the headline win the CI gate locks in."""
+    prompts = _make_repeated_suffix_prompts(max_lanes, pat_len, reps,
+                                            tail_len, cfg.vocab_size)
+    plen = pat_len * reps + tail_len
+    per_seq = -(-(plen + max_new) // page_size) + 1
+    common = dict(chunk=chunk, max_new=max_new,
+                  num_pages=per_seq * max_lanes + 8, page_size=page_size,
+                  max_lanes=max_lanes, max_pages_per_seq=per_seq,
+                  use_kernel=use_kernel)
+    off = run_engine(cfg, params, prompts, spec_k=0, **common)
+    on = run_engine(cfg, params, prompts, spec_k=spec_k, **common)
+    outputs_match = off.pop("outputs") == on.pop("outputs")
+    return {
+        "workload": {"requests": max_lanes, "prompt_len": plen,
+                     "pat_len": pat_len, "reps": reps, "tail_len": tail_len,
+                     "max_new": max_new, "spec_k": spec_k},
+        "spec_off": off,
+        "spec_on": on,
+        "outputs_match": outputs_match,
+        "acceptance_rate": on["acceptance_rate"],
+        "wasted_verify_tokens": on["wasted_verify_tokens"],
+        "iters_per_token_reduction":
+            off["iters_per_generated_token"] /
+            max(on["iters_per_generated_token"], 1e-9),
+    }
 
 
 def run_preemption_probe(cfg, params, *, page_size, max_new, use_kernel,
@@ -250,6 +322,8 @@ def main(argv=None) -> dict:
     ap.add_argument("--trace-out", default=None,
                     help="write the cluster sweep's drained trace events "
                          "to this JSON file (nightly CI artifact)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft depth for the speculative-decoding workload")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -257,8 +331,10 @@ def main(argv=None) -> dict:
         args.requests, args.prompt_len, args.max_new = 3, 12, 4
         args.chunk, args.page_size, args.max_lanes = 8, 4, 2
         k_prefixes, m_per_prefix, sys_len, user_len = 2, 3, 8, 3
+        spec_max_new, spec_reps = 12, 3
     else:
         k_prefixes, m_per_prefix, sys_len, user_len = 4, 8, 64, 16
+        spec_max_new, spec_reps = 32, 6
 
     cfg = get_config(args.arch).smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -297,6 +373,12 @@ def main(argv=None) -> dict:
     preemption = run_preemption_probe(cfg, params, page_size=args.page_size,
                                       max_new=args.max_new,
                                       use_kernel=use_kernel)
+
+    speculation = run_spec_workload(cfg, params, spec_k=args.spec_k,
+                                    max_new=spec_max_new, reps=spec_reps,
+                                    page_size=args.page_size,
+                                    max_lanes=args.max_lanes,
+                                    use_kernel=use_kernel)
 
     trace_events = {} if args.trace_out else None
     sweep = run_cluster_sweep(
@@ -338,6 +420,7 @@ def main(argv=None) -> dict:
                 shared["tokens_per_s"] / max(no_share["tokens_per_s"], 1e-9),
         },
         "preemption": preemption,
+        "speculation": speculation,
         "cluster_sweep": sweep,
     }
     with open(args.out, "w") as f:
@@ -372,6 +455,14 @@ def main(argv=None) -> dict:
           f"outputs match={pr['outputs_match_uncontended']}  "
           f"swapped out/in={pr['swap_out_pages']}/{pr['swap_in_pages']} "
           f"pages")
+    sd = result["speculation"]
+    print(f"speculation (k={args.spec_k}): "
+          f"iters/token={sd['spec_off']['iters_per_generated_token']:.3f}"
+          f"->{sd['spec_on']['iters_per_generated_token']:.3f} "
+          f"({sd['iters_per_token_reduction']:.2f}x)  "
+          f"acceptance={sd['acceptance_rate']:.2f}  "
+          f"wasted verify tokens={sd['wasted_verify_tokens']}  "
+          f"outputs match={sd['outputs_match']}")
     for C, r in sweep["configs"].items():
         print(f"clusters={C:>2s} (x{sweep['heads']} heads): "
               f"iters/req={r['iters_per_request']:6.1f}  "
@@ -383,6 +474,10 @@ def main(argv=None) -> dict:
     assert sp["outputs_match"], "prefix caching changed outputs"
     assert pr["completed"] and pr["outputs_match_uncontended"], \
         "preemption run incorrect"
+    assert sd["outputs_match"], "speculative decoding changed outputs"
+    assert sd["spec_on"]["iters_per_generated_token"] < \
+        sd["spec_off"]["iters_per_generated_token"], \
+        "speculation did not reduce engine iterations per token"
     assert sweep["one_cluster_outputs_match_unsharded"] is not False, \
         "1-cluster sharded engine diverged from the unsharded engine"
     print(f"wrote {args.out}")

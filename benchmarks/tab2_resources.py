@@ -10,8 +10,6 @@ Also prints the PMCA configuration space (Tab.1) sizes via the config graph.
 """
 from __future__ import annotations
 
-import json
-from pathlib import Path
 
 from repro.configs import SHAPES, get_config
 from repro.configs.hero_pmca import pmca_config_space, JUNO_ADP, ZC706

@@ -5,7 +5,6 @@
 import argparse
 import tempfile
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, smoke_shape

@@ -17,7 +17,8 @@ def main():
     a = rng.standard_normal((256, 256)).astype(np.float32)
     b = rng.standard_normal((256, 256)).astype(np.float32)
 
-    kern = lambda a, b: cluster_matmul(a, b, interpret=True)
+    def kern(a, b):
+        return cluster_matmul(a, b, interpret=True)
 
     out_c, rep_c = tgt.run_copy_based(kern, a, b)
     print(f"copy-based : offload {rep_c.offload_s*1e3:7.2f} ms  "

@@ -45,7 +45,6 @@ def main():
     else:
         cfg = model_100m()
 
-    import jax
     n_params_est = (cfg.num_layers *
                     (2 * cfg.d_model * cfg.num_heads * cfg.resolved_head_dim +
                      2 * cfg.d_model * cfg.num_kv_heads * cfg.resolved_head_dim

@@ -8,12 +8,31 @@ fixed workload (unlike wall-clock tokens/s on shared CI runners):
 * ``chunked_prefill.iters_per_request`` — engine iterations per request
   (chunked-prefill admission efficiency);
 * ``chunked_prefill.h2d_per_generated_token`` — host->device transfer
-  events per generated token (device-residency of the hot path).
+  events per generated token (device-residency of the hot path);
+* ``speculation.spec_on.iters_per_generated_token`` — engine iterations
+  per generated token with speculative decoding (lower is better);
+* ``speculation.acceptance_rate`` — drafted tokens the verify step
+  confirmed (HIGHER is better — the gate is direction-aware).
 
-The job fails when either regresses by more than ``--max-regress``
-(default 10%).  Workload descriptors must match exactly — comparing
-different workloads would make the gate meaningless, so a mismatch is
-also a failure.
+Relative rule: a gated metric may not regress by more than
+``--max-regress`` (default 10%) against the committed baseline.  On top
+of the relative gates, two absolute speculation gates lock the win in
+regardless of what the baseline says:
+
+* ``speculation.acceptance_rate`` must be >= ``--spec-accept-floor``;
+* ``speculation.spec_on.iters_per_generated_token`` must be strictly
+  below ``speculation.spec_off.iters_per_generated_token`` — if drafting
+  ever stops beating plain decode, the gate fails even if both numbers
+  match the baseline.
+
+Robustness contract (tested by ``tests/test_check_bench.py``):
+
+* workload descriptor mismatch -> exit 2 (the comparison is meaningless);
+* malformed/unreadable JSON -> exit 2 with the offending file named;
+* a gated metric missing from the FRESH result -> exit 1 (the benchmark
+  stopped reporting something the gate guards);
+* a gated metric missing from the BASELINE -> reported as NEW and skipped
+  (metrics can be introduced without a same-commit baseline chicken/egg).
 
     python scripts/check_bench.py --baseline BENCH_baseline.json \
         --fresh BENCH_serve.json
@@ -24,17 +43,92 @@ import argparse
 import json
 import sys
 
-#: (json path, human name); lower is better for every gated metric
+#: (json path, human name, direction); direction is which way is BETTER
 GATED = [
-    (("chunked_prefill", "iters_per_request"), "engine iters/request"),
-    (("chunked_prefill", "h2d_per_generated_token"), "H2D events/token"),
+    (("chunked_prefill", "iters_per_request"),
+     "engine iters/request", "lower"),
+    (("chunked_prefill", "h2d_per_generated_token"),
+     "H2D events/token", "lower"),
+    (("speculation", "spec_on", "iters_per_generated_token"),
+     "spec iters/generated token", "lower"),
+    (("speculation", "acceptance_rate"),
+     "spec acceptance rate", "higher"),
 ]
+
+SPEC_ACCEPT_FLOOR = 0.25
 
 
 def _dig(d, path):
     for k in path:
         d = d[k]
     return d
+
+
+def _load(path: str, role: str):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"FAIL cannot read {role} result {path!r}: {e}")
+        return None
+
+
+def check_relative(base: dict, fresh: dict, max_regress: float) -> bool:
+    """Direction-aware relative gates.  Returns True iff all pass."""
+    failed = False
+    for path, name, direction in GATED:
+        try:
+            x = float(_dig(fresh, path))
+        except (KeyError, TypeError) as e:
+            print(f"FAIL {name}: missing key {e} in fresh result")
+            failed = True
+            continue
+        try:
+            b = float(_dig(base, path))
+        except (KeyError, TypeError):
+            print(f"NEW  {name}: fresh={x:.4f} (not in baseline; "
+                  f"gated from the next baseline update on)")
+            continue
+        if b:
+            ratio = x / b
+        else:
+            ratio = 1.0 if x == b else float("inf")
+        regressed = ratio > 1.0 + max_regress if direction == "lower" \
+            else ratio < 1.0 - max_regress
+        verdict = "FAIL" if regressed else "OK  "
+        failed |= regressed
+        print(f"{verdict} {name}: baseline={b:.4f} fresh={x:.4f} "
+              f"({ratio - 1.0:+.1%} vs baseline, {direction} is better)")
+    return not failed
+
+
+def check_speculation_absolute(fresh: dict, accept_floor: float) -> bool:
+    """Absolute speculation gates on the fresh result alone."""
+    try:
+        rate = float(_dig(fresh, ("speculation", "acceptance_rate")))
+        on = float(_dig(fresh, ("speculation", "spec_on",
+                                "iters_per_generated_token")))
+        off = float(_dig(fresh, ("speculation", "spec_off",
+                                 "iters_per_generated_token")))
+    except (KeyError, TypeError) as e:
+        print(f"FAIL speculation section incomplete in fresh result: {e}")
+        return False
+    ok = True
+    if rate < accept_floor:
+        print(f"FAIL spec acceptance rate {rate:.3f} below floor "
+              f"{accept_floor:.3f}")
+        ok = False
+    else:
+        print(f"OK   spec acceptance rate {rate:.3f} >= floor "
+              f"{accept_floor:.3f}")
+    if not on < off:
+        print(f"FAIL spec-on iters/token {on:.4f} not strictly below "
+              f"spec-off {off:.4f}")
+        ok = False
+    else:
+        print(f"OK   spec-on iters/token {on:.4f} < spec-off {off:.4f} "
+              f"({off / max(on, 1e-9):.2f}x)")
+    return ok
 
 
 def main(argv=None) -> int:
@@ -45,12 +139,17 @@ def main(argv=None) -> int:
                     help="freshly produced BENCH_serve.json")
     ap.add_argument("--max-regress", type=float, default=0.10,
                     help="maximum tolerated relative regression")
+    ap.add_argument("--spec-accept-floor", type=float,
+                    default=SPEC_ACCEPT_FLOOR,
+                    help="absolute floor on speculation.acceptance_rate")
     args = ap.parse_args(argv)
 
-    with open(args.baseline) as f:
-        base = json.load(f)
-    with open(args.fresh) as f:
-        fresh = json.load(f)
+    base = _load(args.baseline, "baseline")
+    fresh = _load(args.fresh, "fresh")
+    if base is None or fresh is None or not isinstance(base, dict) \
+            or not isinstance(fresh, dict):
+        print("bench gate ERROR (unreadable or non-object input)")
+        return 2
 
     if base.get("workload") != fresh.get("workload"):
         print(f"FAIL workload mismatch — the gate compares nothing useful\n"
@@ -58,28 +157,11 @@ def main(argv=None) -> int:
               f"  fresh:    {fresh.get('workload')}")
         return 2
 
-    failed = False
-    for path, name in GATED:
-        try:
-            b = float(_dig(base, path))
-        except KeyError as e:
-            print(f"FAIL {name}: missing key {e} in baseline result")
-            failed = True
-            continue
-        try:
-            x = float(_dig(fresh, path))
-        except KeyError as e:
-            print(f"FAIL {name}: missing key {e} in fresh result")
-            failed = True
-            continue
-        ratio = x / b if b else (1.0 if x == b else float("inf"))
-        verdict = "OK  "
-        if ratio > 1.0 + args.max_regress:
-            verdict, failed = "FAIL", True
-        print(f"{verdict} {name}: baseline={b:.4f} fresh={x:.4f} "
-              f"({ratio - 1.0:+.1%} vs baseline)")
-    if failed:
-        print(f"bench gate FAILED (>{args.max_regress:.0%} regression)")
+    ok = check_relative(base, fresh, args.max_regress)
+    ok &= check_speculation_absolute(fresh, args.spec_accept_floor)
+    if not ok:
+        print(f"bench gate FAILED (>{args.max_regress:.0%} regression "
+              f"or absolute speculation gate)")
         return 1
     print("bench gate passed")
     return 0

@@ -82,9 +82,14 @@ try:
     sweep = result["cluster_sweep"]
     assert sweep["one_cluster_outputs_match_unsharded"], \
         "sharded engine diverged at 1 cluster"
+    sd = result["speculation"]
+    assert sd["outputs_match"], "speculative decoding changed outputs"
+    assert sd["iters_per_token_reduction"] > 1.0, \
+        "speculation did not reduce engine iterations per token"
     print(f"OK   shared-prefix hit-rate="
           f"{sp['prefix_hit_rate']:.2f} pages_saved={sp['pages_saved']} "
           f"preemption swaps={result['preemption']['swap_out_pages']} "
+          f"spec acceptance={sd['acceptance_rate']:.2f} "
           f"cluster configs={sorted(sweep['configs'])}")
 except Exception as e:
     print(f"FAIL serve_throughput: {e}")

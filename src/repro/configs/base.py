@@ -11,9 +11,8 @@ decides applicability (e.g. ``long_500k`` only for sub-quadratic archs).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Tuple
 
 
 # ---------------------------------------------------------------------------

@@ -121,6 +121,51 @@ def layer2_cluster_balance(events: Iterable[Event],
     }
 
 
+def layer2_speculation(events: Iterable[Event]) -> Dict:
+    """Platform: speculative-decoding efficiency from the event stream.
+
+    SPEC_PROPOSE / SPEC_ACCEPT / SPEC_ROLLBACK all carry (rid, tokens).
+    Returns per-request and aggregate proposed/accepted/rolled-back token
+    counts, the acceptance rate, and ``wasted_verify_tokens`` — positions
+    the verify step scored and then rolled back (the price paid for the
+    iterations saved)."""
+    per: Dict[int, Dict[str, int]] = {}
+
+    def row(rid: int) -> Dict[str, int]:
+        return per.setdefault(rid, {"proposed": 0, "accepted": 0,
+                                    "rolled_back": 0, "verify_rounds": 0})
+
+    for e in events:
+        if e.etype == EventType.SPEC_PROPOSE:
+            r = row(e.a0)
+            r["proposed"] += e.a1
+            r["verify_rounds"] += 1
+        elif e.etype == EventType.SPEC_ACCEPT:
+            row(e.a0)["accepted"] += e.a1
+        elif e.etype == EventType.SPEC_ROLLBACK:
+            row(e.a0)["rolled_back"] += e.a1
+    proposed = sum(r["proposed"] for r in per.values())
+    accepted = sum(r["accepted"] for r in per.values())
+    rolled = sum(r["rolled_back"] for r in per.values())
+    return {
+        "requests": dict(sorted(per.items())),
+        "proposed": proposed,
+        "accepted": accepted,
+        "rolled_back": rolled,
+        "acceptance_rate": accepted / proposed if proposed else 0.0,
+        "wasted_verify_tokens": rolled,
+    }
+
+
+def assert_spec_conserves(events: List[Event]) -> bool:
+    """Per request: accepted + rolled_back == proposed (every drafted
+    token is either confirmed or undone — none vanish, none double)."""
+    for r in layer2_speculation(events)["requests"].values():
+        if r["accepted"] + r["rolled_back"] != r["proposed"]:
+            return False
+    return True
+
+
 def assert_swaps_balanced(events: List[Event]) -> bool:
     """Every page swapped out for a request that eventually finished was
     swapped back in first (no request completes on lost KV state)."""

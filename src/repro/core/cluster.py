@@ -12,9 +12,7 @@ import dataclasses
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 @dataclasses.dataclass(frozen=True)

@@ -215,7 +215,7 @@ class PagedKVPool:
         self.rab = rab
         self.stats = {"prefix_hit_pages": 0, "prefix_hit_tokens": 0,
                       "cow": 0, "cache_evictions": 0, "swapped_out": 0,
-                      "swapped_in": 0}
+                      "swapped_in": 0, "spec_trimmed_pages": 0}
 
     # ------------------------------------------------------------ capacity --
     def available(self) -> int:
@@ -340,6 +340,39 @@ class PagedKVPool:
         engine (which owns the device-side KV arrays) and clear the queue."""
         out, self.pending_cow = self.pending_cow, []
         return out
+
+    def trim(self, seq: int, new_len: int) -> int:
+        """Roll ``seq`` back to ``new_len`` tokens (speculative-decode
+        rollback): pages wholly beyond the kept length are unmapped through
+        the ordinary release path — a trimmed page that other sequences
+        still share merely drops this mapping's refcount, and one that is
+        prefix-indexed parks on the cached-free list — and every page this
+        trim *frees back* is re-credited to ``seq``'s reservation, because
+        the lifetime page budget reserved at admission still has to cover
+        re-appending the rolled-back positions.  Returns pages unmapped.
+
+        Only whole pages are unmapped; a kept page whose tail slots held
+        rejected drafts keeps them in place — they sit beyond ``seq_len``,
+        the attention kernels mask by length, and the next append
+        overwrites them (same contract as the trash-page scatter)."""
+        old = self.seq_len.get(seq, 0)
+        assert 0 <= new_len <= old, (seq, new_len, old)
+        if new_len == old:
+            return 0
+        keep = -(-new_len // self.page_size) if new_len else 0
+        freed = 0
+        for lp in range(keep, -(-old // self.page_size)):
+            if (seq, lp) in self.page_table:
+                self.unmap_page(seq, lp)
+                freed += 1
+        if new_len:
+            self.seq_len[seq] = new_len
+        else:
+            self.seq_len.pop(seq, None)
+        if freed:
+            self.reserved[seq] = self.reserved.get(seq, 0) + freed
+        self.stats["spec_trimmed_pages"] += freed
+        return freed
 
     def release(self, seq: int):
         for (s, lp) in [k for k in self.page_table if k[0] == seq]:

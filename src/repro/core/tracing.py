@@ -68,6 +68,12 @@ class EventType(enum.IntEnum):
     # gather are the observable scheduling events)
     CLUSTER_DISPATCH = 42  # request placed on a cluster: (rid, cluster)
     ALL_GATHER = 43        # cross-cluster token gather: (iter, active clusters)
+    # speculative decoding (HERO §2.2/§2.3: the lightweight host proposes,
+    # the parallel accelerator verifies in bulk; every proposal, acceptance
+    # and rollback is an observable scheduling event)
+    SPEC_PROPOSE = 44      # drafter proposal: (rid, drafted tokens)
+    SPEC_ACCEPT = 45       # verified acceptance: (rid, accepted tokens)
+    SPEC_ROLLBACK = 46     # rejected drafts undone: (rid, rejected tokens)
 
 
 HOST_TRACER_ID = 255

@@ -68,8 +68,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     @pl.when(kk == nk - 1)
     def _flush():
         # rows fully masked (causal upper tiles) have l == 0
-        l = l_ref[...]
-        safe = jnp.where(l == 0.0, 1.0, l)
+        lsum = l_ref[...]
+        safe = jnp.where(lsum == 0.0, 1.0, lsum)
         o_ref[0, ...] = (acc_ref[...] / safe).astype(o_ref.dtype)
 
 

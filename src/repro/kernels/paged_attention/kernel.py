@@ -131,8 +131,8 @@ def _prefill_kernel(bt_ref, cnt_ref, len_ref, start_ref, q_ref, *refs,
 
     @pl.when(j == last_step)
     def _flush():
-        l = l_ref[...]
-        safe = jnp.where(l == 0.0, 1.0, l)
+        lsum = l_ref[...]
+        safe = jnp.where(lsum == 0.0, 1.0, lsum)
         out = acc_ref[...] / safe                      # (C,Kv,G,hd)
         o_ref[0] = out.reshape(o_ref.shape[1:]).astype(o_ref.dtype)
 

@@ -18,8 +18,6 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
-
 from repro.configs import all_cells, get_config, get_shape, SHAPES
 from repro.launch import mesh as mesh_lib
 from repro.launch.hlo_stats import (

@@ -28,13 +28,18 @@ def main():
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--kernel", action="store_true",
                     help="Pallas paged-attention (interpret on CPU)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: n-gram drafter proposes up "
+                         "to K tokens per lane per iteration, verified in "
+                         "one chunked step (0 disables)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     srv = PagedServer(cfg, params, num_pages=args.pages,
                       page_size=args.page_size, max_lanes=args.lanes,
-                      max_pages_per_seq=16, use_kernel=args.kernel)
+                      max_pages_per_seq=16, use_kernel=args.kernel,
+                      spec_k=args.spec_k)
     for rid in range(args.requests):
         srv.submit(Request(rid=rid, prompt=[rid + 1, 3, 5],
                            max_new=args.max_new))
@@ -42,6 +47,11 @@ def main():
     for r in done:
         print(f"req {r.rid}: {r.prompt} -> {r.out}")
     print("RAB:", srv.rab.stats)
+    if args.spec_k:
+        gen = sum(len(r.out) for r in done)
+        print(f"spec: proposed={srv.spec_proposed} "
+              f"accepted={srv.spec_accepted} rejected={srv.spec_rejected} "
+              f"iters/token={srv.iterations / max(gen, 1):.2f}")
     events = layer1_decode(srv.tracer.drain())
     print(f"{len(events)} trace events; "
           f"{len(layer2_tlb_transactions(events))} TLB transactions")

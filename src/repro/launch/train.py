@@ -9,11 +9,9 @@ Cluster posture: on a real fleet this same entrypoint runs per host under
 for the production mesh instead of executing.
 """
 import argparse
-import dataclasses
 import tempfile
 
 from repro.configs import get_config, SHAPES, smoke_shape
-from repro.configs.base import ShapeSpec
 from repro.data import MarkovChainData, SyntheticLMData
 from repro.optim import AdamWConfig
 from repro.runtime import Trainer, TrainerConfig

@@ -224,7 +224,6 @@ def gqa_decode(cfg: ArchConfig, p, x: jax.Array, pos: jax.Array,
     (positions are shared across layers and updated once per step).
     Returns (out, k_cache, v_cache).
     """
-    B = x.shape[0]
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
@@ -309,7 +308,6 @@ def mla_decode(cfg: ArchConfig, p, x: jax.Array, pos: jax.Array,
     v = ctx_c @ W_uv.  This is the deepseek-v2 serving formulation — the KV
     cache is 576 B/token instead of 2*H*128.
     """
-    B = x.shape[0]
     dn = cfg.mla_qk_nope_dim
     q_nope, q_rope = _mla_q(cfg, p, x, pos[:, None])      # (B,1,H,*)
     c_new, kr_new = mla_compress_kv(cfg, p, x, pos[:, None])

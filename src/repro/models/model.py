@@ -158,9 +158,7 @@ def param_pspecs(cfg: ArchConfig, mesh):
 
 def build_cache(f: ParamFactory, cfg: ArchConfig, B: int, T: int):
     """Cache tree for one-token decode with context length T."""
-    dt = _dtype(cfg)
     kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
-    kv_ax = ("dp", None, "tp", None) if True else None  # refined per leaf below
     c: Dict[str, Any] = {}
     if cfg.block_kind == "mlstm":
         n_s = -(-cfg.num_layers // cfg.slstm_every) if cfg.slstm_every else 0

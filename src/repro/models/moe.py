@@ -18,7 +18,6 @@ per-group load > C) drop, the standard capacity trade-off; ``dropless=True``
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
 import jax

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.parallel.sharding import ParamFactory, shard
+from repro.parallel.sharding import ParamFactory
 from repro.models.layers import rms_head_norm
 
 NEG_INF = -1e30

@@ -12,7 +12,7 @@ contract.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,8 +23,7 @@ from repro.models import model as M
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
 from repro.optim.compress import ef_compress_grads, init_residual
 from repro.parallel.sharding import (
-    Axes, ParamFactory, logical_pspec, mesh_context, sharding_profile,
-    tree_pspecs,
+    Axes, logical_pspec, mesh_context, sharding_profile,
 )
 
 
@@ -110,7 +109,8 @@ def init_train_state(cfg: ArchConfig, opt_cfg: AdamWConfig, rng: jax.Array,
 def train_state_specs(cfg: ArchConfig, opt_cfg: AdamWConfig,
                       compress: bool = False) -> Dict[str, Any]:
     p = M.param_specs(cfg)
-    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    def f32(s):
+        return jax.ShapeDtypeStruct(s.shape, jnp.float32)
     opt = {"m": jax.tree.map(f32, p), "v": jax.tree.map(f32, p),
            "step": jax.ShapeDtypeStruct((), jnp.int32)}
     if opt_cfg.use_master:

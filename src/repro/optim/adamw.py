@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +48,8 @@ def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 
 def init_opt_state(params: Any, cfg: AdamWConfig) -> Dict[str, Any]:
-    zeros32 = lambda p: _distinct_zeros(p.shape)
+    def zeros32(p):
+        return _distinct_zeros(p.shape)
     st = {
         "m": jax.tree.map(zeros32, params),
         "v": jax.tree.map(zeros32, params),

@@ -1,6 +1,10 @@
 from repro.runtime.trainer import Trainer, TrainerConfig, FailureInjector
 from repro.runtime.server import PagedServer, Request
 from repro.runtime.sharded_server import ShardedPagedServer
+from repro.runtime.speculative import (
+    Drafter, NGramDrafter, DraftModelDrafter,
+)
 
 __all__ = ["Trainer", "TrainerConfig", "FailureInjector", "PagedServer",
-           "Request", "ShardedPagedServer"]
+           "Request", "ShardedPagedServer", "Drafter", "NGramDrafter",
+           "DraftModelDrafter"]

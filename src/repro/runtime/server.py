@@ -47,6 +47,23 @@ On top of the hot path sit HERO's SVM page *sharing* and *reclamation*
   and swap back H2D on re-admission, with all traffic traced as
   SWAP_OUT/SWAP_IN plus the underlying H2D/D2H events.
 
+**Speculative decoding** (``spec_k > 0``) is the host/accelerator split
+itself: a cheap host-side drafter (``runtime.speculative``) proposes up to
+K tokens per decode lane, the pool appends all K+1 candidate positions
+(pages allocated, CoW applied — exactly the plain append path), and ONE
+chunked verify step (``_paged_spec_step``, the chunk kernel re-used with
+the drafts as the feed) greedily scores every position, counts the
+accepted prefix on device and advances lengths by ``accepted + 1``.  The
+host then *rolls back* the rejected tail: ``PagedKVPool.trim`` unmaps
+pages wholly beyond the kept length (respecting refcounts, CoW copies and
+the prefix index) and re-credits them to the request's reservation.
+Greedy parity is structural — the accepted prefix plus the bonus token is
+the exact greedy continuation.  Per-lane K adapts to recent acceptance
+(full accept grows it, zero accept halves it) and drafting is disabled
+while any request is queued (preemption pressure: waiting work beats
+wider verification).  Proposals, acceptances and rollbacks are traced as
+SPEC_PROPOSE / SPEC_ACCEPT / SPEC_ROLLBACK.
+
 Demo-scale engine for plain-GQA transformer archs (yi/minitron/qwen3/olmoe
 smoke configs).
 """
@@ -71,6 +88,7 @@ from repro.kernels.paged_attention.ops import (
     paged_prefill_fused, page_counts_for,
 )
 from repro.kernels.paged_attention.ref import paged_prefill_ref
+from repro.runtime.speculative import Drafter, NGramDrafter
 
 
 @dataclasses.dataclass
@@ -89,6 +107,10 @@ class Request:
     cluster: int = 0                  # owning PMCA cluster (sharded engine)
     reg_pages: int = 0                # prompt pages published to the index
     swapped: Optional[List[int]] = None   # lpages parked in the backing store
+    spec_k_cur: int = 0               # adaptive per-lane draft depth
+    spec_proposed: int = 0            # drafted tokens sent to verification
+    spec_accepted: int = 0            # drafted tokens the target confirmed
+    spec_rejected: int = 0            # drafted tokens rolled back
 
 
 class PagedServer:
@@ -100,7 +122,9 @@ class PagedServer:
                                                 l2_assoc=4, l2_banks=2),
                  tracer: Optional[TraceBuffer] = None,
                  use_kernel: bool = True,
-                 enable_prefix_cache: bool = True):
+                 enable_prefix_cache: bool = True,
+                 spec_k: int = 0,
+                 drafter: Optional[Drafter] = None):
         assert cfg.block_kind == "transformer" and cfg.attention_kind == "gqa" \
             and not cfg.local_global_period, \
             "paged engine supports plain-GQA transformer archs"
@@ -110,6 +134,10 @@ class PagedServer:
         self.chunk = max(1, chunk)
         self.tracer = tracer or TraceBuffer()
         self.use_kernel = use_kernel
+        # speculative decoding: drafter proposes, the verify step disposes
+        self.spec_k = max(0, spec_k)
+        self.drafter = drafter if drafter is not None else \
+            (NGramDrafter() if self.spec_k else None)
         # overridable construction hooks: the sharded subclass substitutes
         # per-cluster pools and mesh-sharded device state here instead of
         # allocating the unsharded versions only to discard them
@@ -131,6 +159,10 @@ class PagedServer:
         self.preemptions = 0
         self._dirty: set = set()      # lane rows to push before the kernel
         self._arrival = 0
+        self.spec_iterations = 0      # engine iterations that verified drafts
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        self.spec_rejected = 0
 
     # --------------------------------------------------------------- trace --
     def _h2d(self, n: int = 1):
@@ -162,6 +194,10 @@ class PagedServer:
         self._decode_step = jax.jit(functools.partial(
             _paged_decode_step, cfg, self.use_kernel, pages_per_step, itp,
             num_pages))
+        if self.spec_k:
+            self._spec_step = jax.jit(functools.partial(
+                _paged_spec_step, cfg, self.use_kernel, pages_per_step, itp,
+                num_pages))
         # device-resident engine state (HERO SVM: the scheduler and the
         # model share these without per-iteration re-uploads)
         self.bt_dev = jnp.zeros((self.max_lanes, self.max_pages), jnp.int32)
@@ -203,6 +239,8 @@ class PagedServer:
             raise ValueError("request exceeds KV pool capacity")
         req.arrival = self._arrival
         self._arrival += 1
+        if self.spec_k and req.spec_k_cur <= 0:
+            req.spec_k_cur = self.spec_k
         self.queue.append(req)
 
     def _pages_needed(self, req: Request) -> int:
@@ -431,34 +469,11 @@ class PagedServer:
         self.finished.append(req)
 
     # --------------------------------------------------------------- step --
-    def step(self) -> bool:
-        """One engine iteration.  Returns False when fully idle."""
-        self._admit()
-        active = [r for r in self.lanes if r is not None]
-        if not active:
-            return bool(self.queue)
-        self.iterations += 1
-
-        B, C = self.max_lanes, self.chunk
-        n_new = np.zeros((B,), np.int32)
-        feed = np.zeros((B, C), np.int32)
-        use_last = np.zeros((B,), np.int32)
-        decode_only = True
-        for r in active:
-            i = r.lane
-            if r.fed < len(r.prompt):
-                n = min(C, len(r.prompt) - r.fed)
-                feed[i, :n] = r.prompt[r.fed:r.fed + n]
-                n_new[i] = n
-                self.prefill_tokens += n
-                decode_only = False
-            else:
-                n_new[i] = 1
-                use_last[i] = 1     # token is device-resident; no upload
-
-        # host-side page accounting: allocate (through the RAB translate
-        # path) every page the new tokens touch, apply any copy-on-write
-        # remaps, and push only the dirty repeat-padded block-table rows
+    def _account_appends(self, active: List[Request], n_new: np.ndarray):
+        """Host-side page accounting for this iteration's candidate writes:
+        allocate (through the RAB translate path) every page the new tokens
+        touch, apply any copy-on-write remaps, and push only the dirty
+        repeat-padded block-table rows."""
         dirty, self._dirty = self._dirty, set()
         cow_src: List[int] = []
         cow_dst: List[int] = []
@@ -493,6 +508,39 @@ class PagedServer:
                 jnp.asarray(self._bt_host[rows]))
             self._h2d(len(rows))    # one dispatch, len(rows) rows uploaded
 
+    def step(self) -> bool:
+        """One engine iteration.  Returns False when fully idle."""
+        self._admit()
+        active = [r for r in self.lanes if r is not None]
+        if not active:
+            return bool(self.queue)
+        self.iterations += 1
+
+        if self._spec_wanted(active):
+            drafts, n_spec = self._propose(active)
+            if drafts is not None:
+                self._spec_iteration(active, drafts, n_spec)
+                return True
+
+        B, C = self.max_lanes, self.chunk
+        n_new = np.zeros((B,), np.int32)
+        feed = np.zeros((B, C), np.int32)
+        use_last = np.zeros((B,), np.int32)
+        decode_only = True
+        for r in active:
+            i = r.lane
+            if r.fed < len(r.prompt):
+                n = min(C, len(r.prompt) - r.fed)
+                feed[i, :n] = r.prompt[r.fed:r.fed + n]
+                n_new[i] = n
+                self.prefill_tokens += n
+                decode_only = False
+            else:
+                n_new[i] = 1
+                use_last[i] = 1     # token is device-resident; no upload
+
+        self._account_appends(active, n_new)
+
         if decode_only:
             # sync-free: every input already lives on device
             self.last_tok, self.kv_pages, self.len_dev = self._decode_step(
@@ -519,6 +567,100 @@ class PagedServer:
             if len(r.out) >= r.max_new:
                 self._finish(r)
         return True
+
+    # -------------------------------------------------------- speculation --
+    def _spec_wanted(self, active: List[Request]) -> bool:
+        """Draft this iteration?  Only when speculation is configured,
+        every active lane is in the decode phase (mixed prefill iterations
+        keep the plain chunk path), and nothing is waiting for admission —
+        a non-empty queue is preemption pressure: lanes should not widen
+        their verify window while other work is starved."""
+        return (self.spec_k > 0 and not self.queue
+                and all(r.fed >= len(r.prompt) for r in active))
+
+    def _propose(self, active: List[Request]):
+        """Collect per-lane draft proposals into a fixed-width (B, spec_k)
+        matrix (fixed so the verify step compiles once).  A lane's draft
+        depth is its adaptive ``spec_k_cur`` capped by the tokens it still
+        owes (``accepted + 1 <= remaining`` must hold, so at most
+        ``remaining - 1`` drafts).  Returns (None, None) when no lane
+        proposed anything — the plain decode step is strictly cheaper."""
+        drafts = np.zeros((self.max_lanes, self.spec_k), np.int32)
+        n_spec = np.zeros((self.max_lanes,), np.int32)
+        any_draft = False
+        for r in active:
+            rem = r.max_new - len(r.out)
+            cap = min(r.spec_k_cur, rem - 1, self.spec_k)
+            if cap <= 0:
+                continue
+            d = self.drafter.propose(r.prompt + r.out, cap)[:cap]
+            if not d:
+                continue
+            drafts[r.lane, :len(d)] = d
+            n_spec[r.lane] = len(d)
+            any_draft = True
+        return (drafts, n_spec) if any_draft else (None, None)
+
+    def _spec_iteration(self, active: List[Request], drafts: np.ndarray,
+                        n_spec: np.ndarray):
+        """One draft-verify-rollback engine iteration.
+
+        The pool appends all K+1 candidate positions per lane (pages
+        allocated, CoW applied — the ordinary append path), the verify
+        step scores every position and counts the accepted prefix on
+        device, and the host trims each lane back to ``accepted + 1``
+        kept tokens: pages wholly beyond the kept length are unmapped and
+        re-credited to the reservation.  Device lengths and the last
+        sampled token are updated inside the jitted step from the
+        acceptance itself, so the only pull is the one verdict array."""
+        self.spec_iterations += 1
+        lens0 = {r.rid: self._pool(r).seq_len[r.rid] for r in active}
+        n_new = np.zeros((self.max_lanes,), np.int32)
+        for r in active:
+            k_i = int(n_spec[r.lane])
+            n_new[r.lane] = k_i + 1
+            if k_i:
+                self.tracer.record_host(EventType.SPEC_PROPOSE, r.rid, k_i)
+                self.spec_proposed += k_i
+                r.spec_proposed += k_i
+        self._account_appends(active, n_new)
+
+        self._h2d(1)                # the draft feed bundle
+        verdict, self.kv_pages, self.last_tok, self.len_dev = \
+            self._spec_step(self.params, self.kv_pages, self.bt_dev,
+                            self.len_dev, self.active_dev, self.last_tok,
+                            jnp.asarray(drafts), jnp.asarray(n_spec))
+        v = np.asarray(verdict)     # one pull per iteration
+        self._d2h(1)
+
+        K = drafts.shape[1]
+        for r in list(active):
+            i = r.lane
+            k_i = int(n_spec[i])
+            a = int(v[i, K + 1])
+            emitted = [int(t) for t in drafts[i, :a]] + [int(v[i, a])]
+            freed = self._pool(r).trim(r.rid, lens0[r.rid] + a + 1)
+            r.out.extend(emitted)
+            if k_i:
+                self.tracer.record_host(EventType.SPEC_ACCEPT, r.rid, a)
+                self.spec_accepted += a
+                r.spec_accepted += a
+                rej = k_i - a
+                if rej:
+                    self.spec_rejected += rej
+                    r.spec_rejected += rej
+                    self.tracer.record_host(EventType.SPEC_ROLLBACK,
+                                            r.rid, rej)
+                # adaptive depth: full acceptance earns a wider window,
+                # total rejection halves it (never below 1)
+                if a == k_i:
+                    r.spec_k_cur = min(self.spec_k, r.spec_k_cur + 1)
+                elif a == 0:
+                    r.spec_k_cur = max(1, r.spec_k_cur // 2)
+            if freed:
+                self._refresh_row(i, r)
+            if len(r.out) >= r.max_new:
+                self._finish(r)
 
     def run(self, max_iters: int = 10_000):
         it = 0
@@ -570,15 +712,17 @@ def _layer_mlp(cfg, lp, x):
     return x + L.mlp_forward(cfg, lp["mlp"], h)
 
 
-def _paged_chunk_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
-                      interpret: bool, num_pages: int, params, kv_pages,
-                      bt, lens, n_new, feed, last_tok, use_last, *,
-                      axis_name=None):
-    """Consume up to C tokens per lane: prompt chunks from ``feed``, decode
-    lanes (``use_last``) from the device-resident previous sample.
+def _paged_forward_greedy(cfg: ArchConfig, use_kernel: bool,
+                          pages_per_step: int, interpret: bool,
+                          num_pages: int, params, kv_pages, bt, lens, n_new,
+                          feed, last_tok, use_last, *, axis_name=None):
+    """Shared forward for the chunk / decode / spec-verify steps: consume up
+    to C tokens per lane (prompt chunks from ``feed``; lanes with
+    ``use_last`` take the device-resident previous sample at position 0)
+    and return the greedy next token at EVERY fed position.
 
     kv_pages: (L, P+1, 2, page, kv, hd); bt: (B, n_pages) repeat-padded.
-    Returns (sampled_tokens (B,), kv_pages, new_lens).
+    Returns (greedy (B, C), kv_pages).
 
     ``axis_name`` names the tensor-parallel head mesh axis when this runs
     as a ``shard_map`` body (sharded engine): q/k/v/o weights and the pool's
@@ -618,12 +762,62 @@ def _paged_chunk_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
 
     x = L.norm_forward(cfg, params["final_norm"], x)
     logits = L.logits_from_hidden(cfg, params["embed"], x)  # (B,C,V)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), kv_pages
+
+
+def _paged_chunk_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
+                      interpret: bool, num_pages: int, params, kv_pages,
+                      bt, lens, n_new, feed, last_tok, use_last, *,
+                      axis_name=None):
+    """Consume up to C tokens per lane: prompt chunks from ``feed``, decode
+    lanes (``use_last``) from the device-resident previous sample.
+
+    Returns (sampled_tokens (B,), kv_pages, new_lens)."""
+    greedy, kv_pages = _paged_forward_greedy(
+        cfg, use_kernel, pages_per_step, interpret, num_pages, params,
+        kv_pages, bt, lens, n_new, feed, last_tok, use_last,
+        axis_name=axis_name)
     row = jnp.maximum(n_new - 1, 0)
-    last_logits = jnp.take_along_axis(logits, row[:, None, None],
-                                      axis=1)[:, 0]
-    nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    nxt = jnp.take_along_axis(greedy, row[:, None], axis=1)[:, 0]
     nxt = jnp.where(n_new > 0, nxt, last_tok)   # idle lanes keep their token
-    return nxt, kv_pages, new_lens
+    return nxt, kv_pages, lens + n_new
+
+
+def _paged_spec_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
+                     interpret: bool, num_pages: int, params, kv_pages,
+                     bt, lens, active, last_tok, drafts, n_spec, *,
+                     axis_name=None):
+    """Speculative verify step: score all K+1 candidate positions of every
+    lane in ONE chunked forward and count the accepted draft prefix.
+
+    The feed is ``[x0, d_1 .. d_K]`` where x0 is the device-resident
+    previous sample and d_j are host drafts; lane b uses ``n_spec[b]`` of
+    them (the rest are dead weight routed to the trash page by the write
+    coords).  Greedy verification: draft d_{j+1} is accepted iff every
+    earlier draft was and d_{j+1} equals the greedy token after position j
+    — so the accepted prefix plus the bonus token ``greedy[accepted]`` is
+    exactly the plain greedy continuation (parity by construction).
+    Lengths advance by ``accepted + 1`` on device; the host applies the
+    same trim to the pool.
+
+    Returns (verdict (B, K+2), kv_pages, last_tok, new_lens) where
+    ``verdict[:, :K+1]`` is the greedy token at each position and
+    ``verdict[:, K+1]`` the accepted count."""
+    B, K = drafts.shape
+    feed = jnp.concatenate([jnp.zeros((B, 1), jnp.int32), drafts], axis=1)
+    n_new = jnp.where(active == 1, n_spec + 1, 0)
+    greedy, kv_pages = _paged_forward_greedy(
+        cfg, use_kernel, pages_per_step, interpret, num_pages, params,
+        kv_pages, bt, lens, n_new, feed, last_tok, active,
+        axis_name=axis_name)
+    idx = jnp.arange(K, dtype=jnp.int32)[None, :]
+    ok = (drafts == greedy[:, :K]) & (idx < n_spec[:, None])
+    accepted = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+    new_lens = lens + jnp.where(active == 1, accepted + 1, 0)
+    last = jnp.take_along_axis(greedy, accepted[:, None], axis=1)[:, 0]
+    last = jnp.where(active == 1, last, last_tok)
+    verdict = jnp.concatenate([greedy, accepted[:, None]], axis=1)
+    return verdict, kv_pages, last, new_lens
 
 
 def _paged_decode_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,

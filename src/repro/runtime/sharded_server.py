@@ -36,7 +36,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding
 
@@ -48,6 +47,7 @@ from repro.launch.mesh import ClusterMesh, make_serving_mesh
 from repro.parallel.sharding import cluster_engine_specs
 from repro.runtime.server import (
     PagedServer, Request, _paged_chunk_step, _paged_decode_step,
+    _paged_spec_step,
 )
 
 __all__ = ["ShardedPagedServer"]
@@ -73,7 +73,8 @@ class ShardedPagedServer(PagedServer):
                                                 l2_assoc=4, l2_banks=2),
                  tracer: Optional[TraceBuffer] = None,
                  use_kernel: bool = True,
-                 enable_prefix_cache: bool = True):
+                 enable_prefix_cache: bool = True,
+                 spec_k: int = 0, drafter=None):
         cmesh = mesh if mesh is not None else make_serving_mesh(clusters,
                                                                 heads)
         self.cmesh = cmesh
@@ -88,7 +89,8 @@ class ShardedPagedServer(PagedServer):
                          max_pages_per_seq=max_pages_per_seq, chunk=chunk,
                          pages_per_step=pages_per_step, rab_cfg=rab_cfg,
                          tracer=tracer, use_kernel=use_kernel,
-                         enable_prefix_cache=enable_prefix_cache)
+                         enable_prefix_cache=enable_prefix_cache,
+                         spec_k=spec_k, drafter=drafter)
         self.peak_pages = [0] * cmesh.clusters  # per-cluster occupancy peak
         self._fin_mark = 0
         self._parked_len: dict = {}     # rid -> seq_len across preemption
@@ -154,6 +156,20 @@ class ShardedPagedServer(PagedServer):
             in_specs=(specs["params"], specs["kv"], specs["lane2"],
                       specs["lane"], specs["lane"], specs["lane"]),
             out_specs=out_specs, check_rep=False))
+        if self.spec_k:
+            # the speculative verify step is the same shard_map discipline:
+            # drafts/verdicts shard their lane dim over `cluster`, the
+            # acceptance count is computed shard-locally per lane group
+            spec_body = functools.partial(
+                _paged_spec_step, cfg, self.use_kernel, pages_per_step, itp,
+                num_pages, axis_name="head")
+            self._spec_step = jax.jit(shard_map(
+                spec_body, mesh=mesh_,
+                in_specs=(specs["params"], specs["kv"], specs["lane2"],
+                          specs["lane"], specs["lane"], specs["lane"],
+                          specs["lane2"], specs["lane"]),
+                out_specs=(specs["lane2"], specs["kv"], specs["lane"],
+                           specs["lane"]), check_rep=False))
 
     # ---------------------------------------------------------- pool seam --
     def _pool_of(self, cluster: int) -> PagedKVPool:

@@ -1,0 +1,131 @@
+"""Speculative-decoding drafters: the host-side proposers of the
+draft-then-verify split (HERO §2.2's heterogeneity, serving-side).
+
+HERO co-executes a lightweight general-purpose host with a heavy parallel
+accelerator.  Speculative decoding is the serving analogue: a cheap
+*drafter* runs on the host and proposes K continuation tokens per lane,
+and the target model *verifies* all K+1 positions in one batched
+chunked-prefill step on the accelerator — the expensive side never runs
+more iterations, only wider ones.  A lane advances ``accepted + 1`` tokens
+per engine iteration (the ``+ 1`` is the bonus token the verify step
+samples itself), with greedy parity guaranteed: the accepted prefix plus
+the bonus token is exactly the sequence plain greedy decode would emit.
+
+Two drafters:
+
+* :class:`NGramDrafter` — matches the longest recent n-gram suffix of the
+  lane's token history (prompt + generated) against earlier occurrences
+  and proposes the continuation that followed last time.  Zero model
+  cost; strong on the repetitive tails greedy decode produces.
+* :class:`DraftModelDrafter` — a smoke-size draft model (any
+  ``configs/`` arch sharing the target's vocabulary) greedily extended k
+  tokens on the host.  The general mechanism for a learned drafter; at
+  demo scale it re-runs the full context per proposed token.
+
+Both are stateless with respect to the engine: proposals are recomputed
+from the request's token history each iteration, so preemption/resume and
+rollback need no drafter bookkeeping.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Protocol, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class Drafter(Protocol):
+    """Proposes up to ``k`` continuation tokens for a token history."""
+
+    def propose(self, ctx: Sequence[int], k: int) -> List[int]:
+        """Return 0..k draft tokens continuing ``ctx`` (never padded)."""
+        ...
+
+
+class NGramDrafter:
+    """Suffix-match drafter over the lane's own token history.
+
+    For ``n`` from ``max_n`` down to ``min_n``, the last ``n`` tokens of
+    the context are searched for earlier occurrences; the tokens that
+    followed an occurrence are proposed (capped at ``k``).  Longest match
+    wins.  Among occurrences of the winning n-gram, the most recent one
+    with ``k`` tokens of continuation is preferred (recency tracks the
+    short cycles greedy decode settles into); when none has ``k``, the
+    one with the longest continuation is used — so a token *run* still
+    proposes everything history can support.
+    """
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        assert 1 <= min_n <= max_n
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, ctx: Sequence[int], k: int) -> List[int]:
+        L = len(ctx)
+        if k <= 0 or L < self.min_n + 1:
+            return []
+        for n in range(min(self.max_n, L - 1), self.min_n - 1, -1):
+            tail = tuple(ctx[L - n:])
+            best = None         # (continuation length, start) seen so far
+            # scan from the most recent earlier occurrence backwards; the
+            # match may not end at the final position (the tail itself)
+            for i in range(L - n - 1, -1, -1):
+                if tuple(ctx[i:i + n]) == tail:
+                    avail = min(k, L - (i + n))
+                    if avail >= k:
+                        return list(ctx[i + n:i + n + k])
+                    if avail > 0 and (best is None or avail > best[0]):
+                        best = (avail, i)
+            if best is not None:
+                a, i = best
+                return list(ctx[i + n:i + n + a])
+        return []
+
+
+class DraftModelDrafter:
+    """Greedy k-token continuation from a (small) draft model.
+
+    ``cfg``/``params`` come from the same ``configs/`` + ``models``
+    machinery as the target (the draft arch must share the target's
+    vocabulary — asserted against ``target_vocab`` when given).  Context
+    length is right-padded to a bucket so jit compiles once per bucket,
+    not once per length; causal attention makes the padding invisible to
+    the logits at the last real position.
+    """
+
+    def __init__(self, cfg, params, *, target_vocab: Optional[int] = None,
+                 bucket: int = 32):
+        if target_vocab is not None and cfg.vocab_size != target_vocab:
+            raise ValueError(
+                f"draft model vocab {cfg.vocab_size} != target vocab "
+                f"{target_vocab}: draft tokens would be meaningless")
+        self.cfg = cfg
+        self.params = params
+        self.bucket = bucket
+        self._next_tok = jax.jit(functools.partial(_greedy_next, cfg))
+
+    def propose(self, ctx: Sequence[int], k: int) -> List[int]:
+        toks = list(ctx)
+        out: List[int] = []
+        for _ in range(max(k, 0)):
+            pad = -len(toks) % self.bucket or self.bucket
+            arr = jnp.asarray(toks + [0] * pad, jnp.int32)[None, :]
+            nxt = int(self._next_tok(self.params, arr,
+                                     jnp.asarray(len(toks), jnp.int32)))
+            out.append(nxt)
+            toks.append(nxt)
+        return out
+
+
+def _greedy_next(cfg, params, tokens, length):
+    """Greedy next token after position ``length - 1`` of padded ``tokens``
+    (``length`` is traced, so jit compiles once per padding bucket, not
+    once per context length)."""
+    from repro.models import layers as L
+    from repro.models import model as M
+
+    h = M.forward_fullseq(cfg, params, tokens)
+    hl = jax.lax.dynamic_slice_in_dim(h, length - 1, 1, axis=1)
+    logits = L.logits_from_hidden(cfg, params["embed"], hl)
+    return jnp.argmax(logits[0, 0], axis=-1).astype(jnp.int32)

@@ -14,10 +14,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.store import AsyncCheckpointer, latest_step, \
     restore_checkpoint

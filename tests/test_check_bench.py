@@ -1,0 +1,137 @@
+"""The bench-regression gate itself (``scripts/check_bench.py``) — the
+script that guards every PR was previously the only untested code path in
+CI.  Covers: pass-through, relative regressions in both gate directions
+(lower-better and higher-better), improvements, metrics missing from the
+fresh vs the baseline side, workload mismatch, malformed input, and the
+absolute speculation gates (acceptance floor, spec-on < spec-off)."""
+import copy
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "scripts"))
+import check_bench  # noqa: E402
+
+
+def result(**over):
+    """A minimal valid BENCH_serve.json covering every gated path."""
+    r = {
+        "workload": {"requests": 3, "prompt_len": 12, "max_new": 4,
+                     "page_size": 4, "max_lanes": 2},
+        "chunked_prefill": {"iters_per_request": 4.0,
+                            "h2d_per_generated_token": 1.5},
+        "speculation": {
+            "acceptance_rate": 0.6,
+            "spec_off": {"iters_per_generated_token": 0.54},
+            "spec_on": {"iters_per_generated_token": 0.46},
+        },
+    }
+    for k, v in over.items():
+        parts = k.split(".")
+        d = r
+        for p in parts[:-1]:
+            d = d[p]
+        if v is ...:
+            del d[parts[-1]]
+        else:
+            d[parts[-1]] = v
+    return r
+
+
+@pytest.fixture
+def gate(tmp_path):
+    """Write (baseline, fresh) dicts and run the gate, returning its exit
+    code; non-dict payloads are written verbatim (malformed-input cases)."""
+    def run(base, fresh, *extra):
+        bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
+        bp.write_text(base if isinstance(base, str) else json.dumps(base))
+        fp.write_text(fresh if isinstance(fresh, str) else json.dumps(fresh))
+        return check_bench.main(["--baseline", str(bp), "--fresh", str(fp),
+                                 *extra])
+    return run
+
+
+def test_identical_results_pass(gate):
+    assert gate(result(), result()) == 0
+
+
+def test_improvement_passes(gate):
+    fresh = result(**{"chunked_prefill.iters_per_request": 2.0,
+                      "speculation.acceptance_rate": 0.9})
+    assert gate(result(), fresh) == 0
+
+
+def test_lower_better_regression_fails(gate):
+    fresh = result(**{"chunked_prefill.iters_per_request": 4.6})  # +15%
+    assert gate(result(), fresh) == 1
+
+
+def test_higher_better_regression_fails(gate):
+    # acceptance rate DROPPING 15% must fail even though the raw ratio
+    # check for lower-better metrics would wave it through
+    fresh = result(**{"speculation.acceptance_rate": 0.51})
+    assert gate(result(), fresh) == 1
+
+
+def test_within_tolerance_passes(gate):
+    fresh = result(**{"chunked_prefill.iters_per_request": 4.3})   # +7.5%
+    assert gate(result(), fresh) == 0
+
+
+def test_custom_max_regress(gate):
+    fresh = result(**{"chunked_prefill.iters_per_request": 4.3})   # +7.5%
+    assert gate(result(), fresh, "--max-regress", "0.05") == 1
+
+
+def test_metric_missing_from_fresh_fails(gate):
+    fresh = result(**{"chunked_prefill.iters_per_request": ...})
+    assert gate(result(), fresh) == 1
+
+
+def test_new_metric_missing_from_baseline_passes(gate, capsys):
+    # a metric introduced by the current PR has no baseline yet: report it
+    # as NEW, do not fail — otherwise metrics could never be added
+    base = result(**{"chunked_prefill.h2d_per_generated_token": ...})
+    assert gate(base, result()) == 0
+    assert "NEW" in capsys.readouterr().out
+
+
+def test_workload_mismatch_exits_2(gate):
+    fresh = result(**{"workload.max_new": 8})
+    assert gate(result(), fresh) == 2
+
+
+def test_malformed_baseline_exits_2(gate):
+    assert gate("{not json", result()) == 2
+
+
+def test_malformed_fresh_exits_2(gate):
+    assert gate(result(), "[]") == 2
+
+
+def test_missing_baseline_file_exits_2(tmp_path):
+    fp = tmp_path / "fresh.json"
+    fp.write_text(json.dumps(result()))
+    assert check_bench.main(["--baseline", str(tmp_path / "nope.json"),
+                             "--fresh", str(fp)]) == 2
+
+
+def test_acceptance_floor_gates(gate):
+    fresh = result(**{"speculation.acceptance_rate": 0.1})
+    base = copy.deepcopy(fresh)       # relative gate is clean: same values
+    assert gate(base, fresh) == 1     # ... but the absolute floor fails
+    assert gate(base, fresh, "--spec-accept-floor", "0.05") == 0
+
+
+def test_spec_on_must_beat_spec_off(gate):
+    fresh = result(**{"speculation.spec_on.iters_per_generated_token": 0.54})
+    base = copy.deepcopy(fresh)
+    assert gate(base, fresh) == 1
+
+
+def test_speculation_section_missing_fails(gate):
+    fresh = result(**{"speculation": ...})
+    base = result(**{"speculation": ...})
+    assert gate(base, fresh) == 1

@@ -11,7 +11,6 @@ from repro.configs import get_config
 from repro.models import model as M
 from repro.models import ssm as S
 from repro.models import moe as MOE
-from repro.models.layers import mlp_forward
 
 
 def test_mlstm_chunkwise_matches_recurrent(rng):

@@ -1,8 +1,9 @@
 """Pool property tests (hypothesis): random interleavings of
-submit / decode / finish / preempt / resume schedules — driving the pool
-exactly the way ``PagedServer`` does (prefix-hit admission, reservation
-discipline, copy-on-write appends, swap-out page reclamation) — must
-preserve the pool's conservation laws:
+submit / decode / finish / preempt / resume / speculate schedules —
+driving the pool exactly the way ``PagedServer`` does (prefix-hit
+admission, reservation discipline, copy-on-write appends, swap-out page
+reclamation, speculative append + rollback trims) — must preserve the
+pool's conservation laws:
 
 * refcount conservation: sum of refcounts == number of live mappings;
 * free + cached-free + referenced partitions the physical pool (no
@@ -126,6 +127,35 @@ class SchedulerModel:
         self.pool.release(seq)
         del self.live[seq]
 
+    def speculate(self, k, n_draft, acc_sel):
+        """Mirror PagedServer._spec_iteration's pool driving: append the
+        candidate block (x0 + up to ``n_draft`` drafts, capped so writes
+        never exceed the admission-time lifetime budget), then roll back
+        to an arbitrary accepted prefix with ``trim`` — rejected pages go
+        home and their reservation budget is re-credited."""
+        seq = self._running(k)
+        if seq is None:
+            return
+        st_, pool = self.live[seq], self.pool
+        prompt = st_["prompt"]
+        total = len(prompt) + st_["max_new"] - 1
+        cur = pool.seq_len.get(seq, 0)
+        if cur < len(prompt):           # server drafts only in decode phase
+            return
+        if cur >= total:
+            return self.finish(k)
+        kk = min(n_draft, total - cur - 1)   # accepted + 1 <= remaining
+        start = cur
+        for _ in range(kk + 1):              # x0 + the drafts
+            pool.append_token(seq)
+            for (s, lp, src, dst) in pool.drain_cow():
+                assert s == seq and pool.page_table[(s, lp)] == dst
+                assert dst != src
+        accepted = acc_sel % (kk + 1)        # any prefix may be rejected
+        freed = pool.trim(seq, start + accepted + 1)
+        assert pool.seq_len[seq] == start + accepted + 1
+        assert freed >= 0
+
     def preempt(self, k):
         seq = self._running(k)
         if seq is None:
@@ -187,8 +217,10 @@ class SchedulerModel:
 
 
 OPS = st.sampled_from(["submit", "decode", "decode", "decode", "decode",
-                       "finish", "preempt", "resume"])
-SCHEDULE = st.lists(st.tuples(OPS, st.integers(0, 6), st.integers(1, 4)),
+                       "finish", "preempt", "resume", "speculate",
+                       "speculate"])
+SCHEDULE = st.lists(st.tuples(OPS, st.integers(0, 6), st.integers(1, 4),
+                              st.integers(0, 4)),
                     min_size=1, max_size=120)
 
 
@@ -196,7 +228,7 @@ SCHEDULE = st.lists(st.tuples(OPS, st.integers(0, 6), st.integers(1, 4)),
 @given(SCHEDULE)
 def test_pool_invariants_under_random_schedules(schedule):
     m = SchedulerModel()
-    for op, arg, max_new in schedule:
+    for op, arg, max_new, acc in schedule:
         if op == "submit":
             m.submit(arg, max_new)
         elif op == "decode":
@@ -207,6 +239,10 @@ def test_pool_invariants_under_random_schedules(schedule):
             m.preempt(arg)
         elif op == "resume":
             m.resume(arg)
+        elif op == "speculate":
+            # max_new doubles as the draft depth, acc as the accepted-
+            # prefix selector — both arbitrary, so rollback depth is too
+            m.speculate(arg, max_new, acc)
         m.check()
     # drain everything: the pool must return to pristine capacity
     for s in list(m.live):

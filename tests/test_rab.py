@@ -1,11 +1,10 @@
 """RAB unit tests: translation correctness, LRU, miss protocol, paged pool
 invariants.  Property-based coverage (hypothesis) lives in
 ``test_rab_properties.py`` so these run even without hypothesis installed."""
-import numpy as np
 import pytest
 
 from repro.core.rab import RAB, RABConfig, PagedKVPool
-from repro.core.tracing import TraceBuffer, EventType
+from repro.core.tracing import TraceBuffer
 from repro.core.analysis import (
     layer1_decode, assert_hit_under_miss, assert_wake_follows_handle,
 )

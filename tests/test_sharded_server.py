@@ -147,6 +147,11 @@ _MULTI_CLUSTER_SCRIPT = textwrap.dedent("""
         assert len(used) > 1, "workload never spread across clusters"
     out, srv = run(ShardedPagedServer, preempt=True, clusters=2)
     assert out == base and srv.preemptions >= 1
+    # speculative decoding under shard_map: same token stream, fewer or
+    # equal engine iterations, cluster invariants intact every step
+    out, srv = run(ShardedPagedServer, clusters=2, spec_k=4)
+    assert out == base, "2-cluster speculative run diverged"
+    assert srv.spec_proposed >= srv.spec_accepted >= 0
     print("MULTI_CLUSTER_OK")
 """)
 

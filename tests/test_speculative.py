@@ -1,0 +1,314 @@
+"""Speculative decoding on the paged engine: greedy parity (spec-on output
+must be token-for-token identical to spec-off) across page sizes, kernel
+and ref attention paths, under forced mid-decode preemption, and on the
+1-cluster sharded engine; drafter unit behavior; adaptive draft depth;
+the queue-pressure throttle; rollback/trim pool hygiene; and event-stream
+conservation (proposed == accepted + rolled back)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.analysis import (
+    assert_spec_conserves, layer1_decode, layer2_speculation,
+)
+from repro.core.rab import PagedKVPool
+from repro.core.tracing import EventType, TraceBuffer
+from repro.models import model as M
+from repro.runtime import (
+    DraftModelDrafter, NGramDrafter, PagedServer, Request,
+    ShardedPagedServer,
+)
+
+MAX_NEW = 16
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("yi-6b").smoke()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(vocab, seed=0):
+    """Two repetitive prompts (the drafter's bread) + two random ones."""
+    rng = np.random.default_rng(seed)
+    pat = rng.integers(1, vocab, size=4).tolist()
+    return [pat * 3, rng.integers(1, vocab, size=12).tolist(),
+            [5, 6, 7], rng.integers(1, vocab, size=9).tolist()]
+
+
+def _serve(cls, cfg, params, prompts, *, spec_k, page_size=4,
+           use_kernel=False, max_lanes=2, max_new=MAX_NEW, preempt_rid=None,
+           **kw):
+    srv = cls(cfg, params, num_pages=64, page_size=page_size,
+              max_lanes=max_lanes, max_pages_per_seq=16, chunk=8,
+              use_kernel=use_kernel, spec_k=spec_k, **kw)
+    for rid, p in enumerate(prompts):
+        srv.submit(Request(rid=rid, prompt=list(p), max_new=max_new))
+    if preempt_rid is not None:
+        for _ in range(6):          # into mid-decode before preempting
+            srv.step()
+        assert srv.preempt(preempt_rid)
+    done = srv.run()
+    assert len(done) == len(prompts)
+    return {r.rid: list(r.out) for r in done}, srv
+
+
+# --------------------------------------------------------------- drafters --
+
+def test_ngram_drafter_matches_cycle():
+    d = NGramDrafter(max_n=3)
+    # ... 7 8 9 7 8 9 — the trigram (7,8,9) recurs; continuation is 7 8 ...
+    assert d.propose([1, 7, 8, 9, 7, 8, 9], 2) == [7, 8]
+    # a run extends by the longest continuation any occurrence supports
+    assert d.propose([3, 5, 5, 5], 3) == [5]
+    assert d.propose([3, 5, 5, 5, 5, 5], 3) == [5, 5]
+    assert d.propose([3, 5, 5, 5, 5, 5, 5, 5], 3) == [5, 5, 5]
+
+
+def test_ngram_drafter_prefers_longest_match():
+    d = NGramDrafter(max_n=3)
+    # suffix (2, 3): trigram (1, 2, 3) recurs at position 0 -> continuation
+    # 9; the shorter bigram match at position 4 (-> 7) must not win
+    assert d.propose([1, 2, 3, 9, 2, 3, 4, 1, 2, 3], 1) == [9]
+
+
+def test_ngram_drafter_no_match_or_no_continuation():
+    d = NGramDrafter()
+    assert d.propose([1, 2, 3, 4, 5], 4) == []      # no repeated suffix
+    assert d.propose([], 4) == []
+    assert d.propose([1], 4) == []
+    assert d.propose([1, 2, 3], 0) == []            # k=0 never proposes
+
+
+def test_ngram_drafter_caps_at_k():
+    d = NGramDrafter(max_n=2)
+    out = d.propose([4, 4, 4, 4, 4, 4, 4, 4], 3)
+    assert len(out) <= 3 and set(out) == {4}
+
+
+def test_draft_model_drafter_vocab_check(cfg, params):
+    with pytest.raises(ValueError):
+        DraftModelDrafter(cfg, params, target_vocab=cfg.vocab_size + 1)
+
+
+def test_draft_model_drafter_self_draft_fully_accepted(cfg, params):
+    """Drafting with the target model itself must be accepted wholesale
+    (the verify step recomputes exactly the drafter's greedy argmax), so
+    every engine iteration advances spec_k + 1 tokens."""
+    drafter = DraftModelDrafter(cfg, params, target_vocab=cfg.vocab_size)
+    prompts = [_prompts(cfg.vocab_size)[1]]
+    base, _ = _serve(PagedServer, cfg, params, prompts, spec_k=0,
+                     max_lanes=1, max_new=8)
+    out, srv = _serve(PagedServer, cfg, params, prompts, spec_k=2,
+                      max_lanes=1, max_new=8, drafter=drafter)
+    assert out == base
+    assert srv.spec_rejected == 0 and srv.spec_accepted > 0
+
+
+# ----------------------------------------------------------------- parity --
+
+@pytest.mark.parametrize("page_size", [4, 8])
+def test_spec_parity_across_page_sizes(cfg, params, page_size,
+                                       matrix_use_kernel):
+    prompts = _prompts(cfg.vocab_size)
+    base, _ = _serve(PagedServer, cfg, params, prompts, spec_k=0,
+                     page_size=page_size, use_kernel=matrix_use_kernel)
+    out, srv = _serve(PagedServer, cfg, params, prompts, spec_k=4,
+                      page_size=page_size, use_kernel=matrix_use_kernel)
+    assert out == base
+    assert srv.spec_accepted > 0, "workload never accepted a draft"
+    srv.pool.check_invariants()
+    assert srv.pool.free_pages() == 64
+
+
+def test_spec_parity_under_preemption(cfg, params, matrix_page_size,
+                                      matrix_use_kernel):
+    """Forced mid-decode preemption with speculation on: the victim swaps
+    out (possibly with just-verified pages), resumes, and still emits the
+    exact spec-off token stream."""
+    prompts = _prompts(cfg.vocab_size)
+    base, _ = _serve(PagedServer, cfg, params, prompts, spec_k=0,
+                     page_size=matrix_page_size,
+                     use_kernel=matrix_use_kernel)
+    out, srv = _serve(PagedServer, cfg, params, prompts, spec_k=4,
+                      page_size=matrix_page_size,
+                      use_kernel=matrix_use_kernel, preempt_rid=0)
+    assert out == base
+    assert srv.preemptions >= 1
+    srv.pool.check_invariants()
+
+
+def test_spec_parity_sharded_one_cluster(cfg, params, matrix_page_size,
+                                         matrix_use_kernel):
+    """The sharded engine runs the same verify step as a shard_map body;
+    at 1 cluster it must be token-for-token identical to both the
+    unsharded spec-on engine and the plain spec-off stream."""
+    prompts = _prompts(cfg.vocab_size)
+    base, _ = _serve(PagedServer, cfg, params, prompts, spec_k=0,
+                     page_size=matrix_page_size,
+                     use_kernel=matrix_use_kernel)
+    out, srv = _serve(ShardedPagedServer, cfg, params, prompts, spec_k=4,
+                      page_size=matrix_page_size,
+                      use_kernel=matrix_use_kernel, clusters=1, heads=1)
+    assert out == base
+    assert srv.spec_accepted > 0
+    srv.cpool.check_invariants()
+
+
+# ------------------------------------------------- scheduler interactions --
+
+class _WrongDrafter:
+    """Always proposes k in-vocab tokens the target will reject (the
+    verify step's greedy argmax never emits token ids it was fed as
+    off-by-one garbage against the model's actual continuation)."""
+
+    def __init__(self, bad=1):
+        self.bad = bad
+        self.calls = 0
+
+    def propose(self, ctx, k):
+        self.calls += 1
+        # always wrong: the previous greedy token xor'd to a different id
+        return [(ctx[-1] ^ self.bad) & 0xFF or 1] * k
+
+
+def test_all_rejected_still_parity_and_adaptive_shrink(cfg, params):
+    prompts = [_prompts(cfg.vocab_size)[1]]
+    base, _ = _serve(PagedServer, cfg, params, prompts, spec_k=0,
+                     max_lanes=1)
+    drafter = _WrongDrafter()
+    out, srv = _serve(PagedServer, cfg, params, prompts, spec_k=4,
+                      max_lanes=1, drafter=drafter)
+    assert out == base                  # rejected drafts never leak tokens
+    assert srv.spec_accepted == 0
+    assert srv.spec_rejected == srv.spec_proposed > 0
+    # zero acceptance halves the lane's draft depth down to 1
+    assert srv.finished[0].spec_k_cur == 1
+    srv.pool.check_invariants()
+    assert srv.pool.free_pages() == 64  # every rolled-back page went home
+
+
+def test_adaptive_depth_grows_on_full_acceptance(cfg, params):
+    drafter = DraftModelDrafter(cfg, params)      # always fully accepted
+    prompts = [_prompts(cfg.vocab_size)[1]]
+    _, srv = _serve(PagedServer, cfg, params, prompts, spec_k=3,
+                    max_lanes=1, max_new=12, drafter=drafter)
+    r = srv.finished[0]
+    assert r.spec_k_cur == 3 and r.spec_rejected == 0
+
+
+def test_drafting_throttled_while_queue_waits(cfg, params):
+    """One lane, two requests: while request 1 waits in the queue
+    (preemption pressure), request 0 must decode WITHOUT drafting; once
+    the queue drains, request 1 speculates freely."""
+    rng = np.random.default_rng(1)
+    pat = rng.integers(1, cfg.vocab_size, size=3).tolist()
+    prompts = [pat * 4, pat * 4]
+    out, srv = _serve(PagedServer, cfg, params, prompts, spec_k=4,
+                      max_lanes=1)
+    r0 = next(r for r in srv.finished if r.rid == 0)
+    r1 = next(r for r in srv.finished if r.rid == 1)
+    assert r0.spec_proposed == 0, "drafted while the queue was non-empty"
+    assert r1.spec_proposed > 0, "never drafted after the queue drained"
+    base, _ = _serve(PagedServer, cfg, params, prompts, spec_k=0,
+                     max_lanes=1)
+    assert out == base
+
+
+def test_spec_events_conserve_and_match_counters(cfg, params):
+    tracer = TraceBuffer(capacity=1 << 14)
+    prompts = _prompts(cfg.vocab_size)
+    _, srv = _serve(PagedServer, cfg, params, prompts, spec_k=4,
+                    tracer=tracer)
+    events = layer1_decode(tracer.drain())
+    assert assert_spec_conserves(events)
+    sp = layer2_speculation(events)
+    assert sp["proposed"] == srv.spec_proposed
+    assert sp["accepted"] == srv.spec_accepted
+    assert sp["wasted_verify_tokens"] == srv.spec_rejected
+    assert 0.0 <= sp["acceptance_rate"] <= 1.0
+    kinds = [e.etype for e in events]
+    assert EventType.SPEC_PROPOSE in kinds
+    assert EventType.SPEC_ACCEPT in kinds
+
+
+def test_spec_respects_max_new_budget(cfg, params):
+    """accepted + 1 can never overshoot max_new: the per-lane draft cap is
+    remaining - 1, so the last token of every request is engine-sampled."""
+    prompts = _prompts(cfg.vocab_size)
+    for max_new in (1, 2, 5):
+        out, srv = _serve(PagedServer, cfg, params, prompts, spec_k=4,
+                          max_new=max_new)
+        assert all(len(o) == max_new for o in out.values())
+        srv.pool.check_invariants()
+
+
+# ------------------------------------------------------------ pool rollback --
+
+def test_pool_trim_rolls_back_pages_and_credits_reservation():
+    pool = PagedKVPool(num_pages=8, page_size=2, max_pages_per_seq=8)
+    pool.reserve(0, 4)
+    for _ in range(7):                  # 4 pages: 3 full + 1 partial
+        pool.append_token(0)
+    assert pool.reserved[0] == 0
+    pool.check_invariants()
+    freed = pool.trim(0, 3)             # keep 2 pages (3 tokens)
+    assert freed == 2
+    assert pool.seq_len[0] == 3
+    assert pool.reserved[0] == 2        # budget restored for re-append
+    pool.check_invariants()
+    # re-appending after the rollback walks the same reservation
+    for _ in range(4):
+        pool.append_token(0)
+    assert pool.seq_len[0] == 7 and pool.reserved[0] == 0
+    pool.check_invariants()
+    pool.release(0)
+    assert pool.free_pages() == 8
+
+
+def test_pool_trim_within_page_frees_nothing():
+    pool = PagedKVPool(num_pages=4, page_size=4, max_pages_per_seq=4)
+    pool.reserve(1, 1)
+    for _ in range(3):
+        pool.append_token(1)
+    assert pool.trim(1, 2) == 0         # same page, no unmap
+    assert pool.seq_len[1] == 2
+    pool.check_invariants()
+
+
+def test_pool_trim_to_zero_clears_sequence():
+    pool = PagedKVPool(num_pages=4, page_size=2, max_pages_per_seq=4)
+    pool.reserve(2, 2)
+    for _ in range(3):
+        pool.append_token(2)
+    assert pool.trim(2, 0) == 2
+    assert 2 not in pool.seq_len
+    assert pool.reserved[2] == 2
+    pool.release(2)
+    pool.check_invariants()
+    assert pool.free_pages() == 4
+
+
+def test_pool_trim_shared_page_drops_only_this_mapping():
+    """Trimming a page another sequence still shares must only drop this
+    sequence's refcount — the sharer keeps the page and its content."""
+    pool = PagedKVPool(num_pages=6, page_size=2, max_pages_per_seq=4)
+    pool.reserve(0, 2)
+    for _ in range(4):
+        pool.append_token(0)
+    pool.register_page(0, 0, [1, 2, 3, 4])
+    pool.register_page(0, 1, [1, 2, 3, 4])
+    pool.share_page(7, 0, pool.page_table[(0, 0)])
+    pool.share_page(7, 1, pool.page_table[(0, 1)])
+    pool.seq_len[7] = 4
+    shared = pool.page_table[(7, 1)]
+    assert pool.refcount[shared] == 2
+    assert pool.trim(7, 2) == 1         # drops (7,1) only
+    assert pool.refcount[shared] == 1
+    assert pool.page_table[(0, 1)] == shared
+    pool.check_invariants()

@@ -1,7 +1,6 @@
 """End-to-end system behaviour: offload semantics, fault-tolerant training,
 checkpoint round-trip + elastic resharding, paged serving engine, config
 matrix, sharding rules."""
-import dataclasses
 import os
 import shutil
 import subprocess
@@ -13,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, smoke_shape, SHAPES
+from repro.configs import get_config, smoke_shape
 from repro.core import (
     OffloadTarget, SVMSpace, AddressCollision, ConfigGraph, hero_test_matrix,
     TraceBuffer, EventType,
@@ -24,7 +23,6 @@ from repro.checkpoint import (
 )
 from repro.data import MarkovChainData, SyntheticLMData, Prefetcher
 from repro.models import model as M
-from repro.models import steps as ST
 from repro.runtime import Trainer, TrainerConfig, FailureInjector, \
     PagedServer, Request
 

@@ -2,7 +2,6 @@
 host/device domains merge, analysis layers decode."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.tracing import TraceBuffer, EventType, HOST_TRACER_ID
 from repro.core.analysis import layer1_decode, layer2_per_core, \
