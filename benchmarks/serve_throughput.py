@@ -1,7 +1,10 @@
 """Serving hot-path benchmark: chunked prefill, shared-prefix KV caching,
-and preemptive scheduling.
+preemptive scheduling, speculative decoding, sampled decoding, and the
+multi-cluster sweep — all driven through the unified generation API
+(``EngineConfig`` + ``GenerationRequest``/``SamplingParams`` +
+``make_engine``).
 
-Three workloads, all emitted into ``BENCH_serve.json``:
+Workloads, all emitted into ``BENCH_serve.json``:
 
 * chunked prefill vs token-by-token admission (``chunk=1`` reproduces the
   pre-chunked-prefill engine's iteration structure) — tokens/s, engine
@@ -22,7 +25,13 @@ Three workloads, all emitted into ``BENCH_serve.json``:
 * a speculative-decoding workload (repeated-suffix prompts, one request
   per lane so drafting is never throttled) served with ``spec_k`` off vs
   on — engine iterations per generated token (the gated win), acceptance
-  rate, wasted verify tokens, and token-for-token parity asserted.
+  rate, wasted verify tokens, and token-for-token parity asserted;
+* a sampled-decoding workload: the same prompts served greedy
+  (temperature 0 — the gated iters/generated-token path) and at
+  temperature/top-p with per-request seeds — seed-reproducibility is
+  asserted (two identical sampled runs must match token-for-token), and a
+  stop-token request demonstrates the ``finish_reason="stop"`` early
+  exit.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py            # full
     PYTHONPATH=src python benchmarks/serve_throughput.py --smoke    # CI-sized
@@ -56,7 +65,9 @@ from repro.core.analysis import (
 )
 from repro.core.tracing import EventType, TraceBuffer
 from repro.models import model as M
-from repro.runtime import PagedServer, Request, ShardedPagedServer
+from repro.runtime import (
+    EngineConfig, GenerationRequest, SamplingParams, make_engine,
+)
 
 
 def _make_prompts(n: int, length: int, vocab: int, seed: int = 0):
@@ -67,35 +78,31 @@ def _make_prompts(n: int, length: int, vocab: int, seed: int = 0):
 def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
                max_lanes, max_pages_per_seq, use_kernel,
                enable_prefix_cache=True, clusters=None, heads=1,
-               keep_events=None, spec_k=0) -> dict:
-    """One engine run.  ``clusters=None`` -> the unsharded ``PagedServer``;
-    an int -> ``ShardedPagedServer`` over a (clusters, heads) mesh, with
-    per-cluster occupancy and dispatch balance added to the result.
-    ``spec_k > 0`` enables speculative decoding (n-gram drafter) and adds
-    acceptance metrics to the result."""
+               keep_events=None, spec_k=0, sampling_for=None) -> dict:
+    """One engine run through ``make_engine``.  ``clusters=None`` -> the
+    unsharded ``PagedServer``; an int -> ``ShardedPagedServer`` over a
+    (clusters, heads) mesh, with per-cluster occupancy and dispatch
+    balance added to the result.  ``spec_k > 0`` enables speculative
+    decoding (n-gram drafter) and adds acceptance metrics.
+    ``sampling_for`` maps a request index to its ``SamplingParams``
+    (default: greedy with ``max_new``)."""
     tracer = TraceBuffer(capacity=1 << 16)
-    if clusters is None:
-        srv = PagedServer(cfg, params, num_pages=num_pages,
-                          page_size=page_size, max_lanes=max_lanes,
-                          max_pages_per_seq=max_pages_per_seq,
-                          chunk=chunk, use_kernel=use_kernel, tracer=tracer,
-                          enable_prefix_cache=enable_prefix_cache,
-                          spec_k=spec_k)
-    else:
-        srv = ShardedPagedServer(cfg, params, clusters=clusters, heads=heads,
-                                 num_pages=num_pages, page_size=page_size,
-                                 max_lanes=max_lanes,
-                                 max_pages_per_seq=max_pages_per_seq,
-                                 chunk=chunk, use_kernel=use_kernel,
-                                 tracer=tracer,
-                                 enable_prefix_cache=enable_prefix_cache,
-                                 spec_k=spec_k)
-    reqs = [Request(rid=rid, prompt=list(p), max_new=max_new)
-            for rid, p in enumerate(prompts)]
-    for r in reqs:
-        srv.submit(r)
+    engine_cfg = EngineConfig(
+        num_pages=num_pages, page_size=page_size, max_lanes=max_lanes,
+        max_pages_per_seq=max_pages_per_seq, chunk=chunk,
+        use_kernel=use_kernel, enable_prefix_cache=enable_prefix_cache,
+        spec_k=spec_k, clusters=clusters or 1, heads=heads,
+        sharded=clusters is not None)
+    srv = make_engine(cfg, params, engine_cfg, tracer=tracer)
+    if sampling_for is None:
+        def sampling_for(rid):
+            return SamplingParams(max_new=max_new)
+    for rid, p in enumerate(prompts):
+        srv.submit(GenerationRequest(rid=rid, prompt=tuple(p),
+                                     sampling=sampling_for(rid)))
     srv.step()                       # warmup iteration triggers jit compile
-    warm_gen = sum(len(r.out) for r in reqs)
+    warm_gen = sum(len(s.out) for s in srv.lanes if s is not None) + \
+        sum(len(r.tokens) for r in srv.finished)
     t0 = time.perf_counter()
     done = srv.run()
     jax.block_until_ready(srv.last_tok)
@@ -104,7 +111,7 @@ def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
     events = tracer.drain()
     h2d = int(sum(e[3] for e in events if e[2] == EventType.H2D))
     d2h = int(sum(e[3] for e in events if e[2] == EventType.D2H))
-    gen = sum(len(r.out) for r in done)
+    gen = sum(len(r.tokens) for r in done)
     # tokens/s only counts tokens produced inside the timed window, so the
     # untimed warmup iteration (which for a chunked run is the expensive
     # full-prefill step and may itself emit tokens) doesn't bias the ratio
@@ -132,6 +139,9 @@ def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
             acceptance_rate=sp["acceptance_rate"],
             wasted_verify_tokens=sp["wasted_verify_tokens"],
         )
+    reasons: dict = {}
+    for r in done:
+        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
     return {
         **extra,
         "chunk": chunk,
@@ -150,7 +160,8 @@ def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
         "prefix_hit_rate": hit_tokens / max(prompt_tokens, 1),
         "pages_saved": srv.pool.stats["prefix_hit_pages"],
         "cow_pages": srv.pool.stats["cow"],
-        "outputs": {r.rid: list(r.out) for r in done},
+        "finish_reasons": reasons,
+        "outputs": {r.rid: list(r.tokens) for r in done},
     }
 
 
@@ -219,6 +230,66 @@ def run_spec_workload(cfg, params, *, spec_k, max_new, page_size, max_lanes,
     }
 
 
+def run_sampling_workload(cfg, params, *, max_new, page_size, max_lanes,
+                          use_kernel, requests=4, prompt_len=10, chunk=8,
+                          temperature=0.8, top_p=0.9) -> dict:
+    """The same prompts served greedy vs sampled through ``SamplingParams``.
+
+    The greedy run is the gated baseline (``iters_per_generated_token``
+    must not regress — temperature 0 rides the exact argmax path the
+    engine always had); the sampled run draws on device with per-request
+    seeds and must be *reproducible*: a second identical run has to match
+    token-for-token.  A final request carries a stop token harvested from
+    the greedy output, demonstrating the ``finish_reason="stop"`` early
+    exit."""
+    prompts = _make_prompts(requests, prompt_len, cfg.vocab_size, seed=11)
+    per_seq = -(-(prompt_len + max_new) // page_size) + 1
+    common = dict(chunk=chunk, max_new=max_new,
+                  num_pages=per_seq * max_lanes + 8, page_size=page_size,
+                  max_lanes=max_lanes, max_pages_per_seq=per_seq,
+                  use_kernel=use_kernel)
+
+    def sampled_params(rid):
+        return SamplingParams(temperature=temperature, top_p=top_p,
+                              seed=100 + rid, max_new=max_new)
+
+    greedy = run_engine(cfg, params, prompts, **common)
+    sampled = run_engine(cfg, params, prompts, sampling_for=sampled_params,
+                         **common)
+    sampled_again = run_engine(cfg, params, prompts,
+                               sampling_for=sampled_params, **common)
+    reproducible = sampled["outputs"] == sampled_again.pop("outputs")
+    diverged = sampled["outputs"] != greedy["outputs"]
+
+    # stop-token early exit: stop on the first greedy continuation token
+    # whose first occurrence is not at position 0 (so >= 1 token survives)
+    g0 = greedy["outputs"][0]
+    stop_tok = next((t for i, t in enumerate(g0)
+                     if i > 0 and g0.index(t) == i), g0[-1])
+    stop = run_engine(
+        cfg, params, [prompts[0]],
+        sampling_for=lambda rid: SamplingParams(
+            max_new=max_new, stop_tokens=(stop_tok,)), **common)
+    stop_out = stop.pop("outputs")[0]
+    stop_early = (stop["finish_reasons"].get("stop") == 1
+                  and stop_out == g0[:len(stop_out)]
+                  and len(stop_out) <= len(g0))
+
+    greedy.pop("outputs")
+    sampled.pop("outputs")
+    return {
+        "workload": {"requests": requests, "prompt_len": prompt_len,
+                     "max_new": max_new, "temperature": temperature,
+                     "top_p": top_p},
+        "greedy": greedy,
+        "sampled": sampled,
+        "sampled_reproducible": reproducible,
+        "sampled_diverges_from_greedy": diverged,
+        "stop_token_early_exit": stop_early,
+        "stop_tokens_generated": len(stop_out),
+    }
+
+
 def run_preemption_probe(cfg, params, *, page_size, max_new, use_kernel,
                          prompt_len=8, chunk=4) -> dict:
     """Tight pool: a high-priority arrival must preempt the running
@@ -231,17 +302,19 @@ def run_preemption_probe(cfg, params, *, page_size, max_new, use_kernel,
 
     def run(num_pages):
         tracer = TraceBuffer(capacity=1 << 16)
-        srv = PagedServer(cfg, params, num_pages=num_pages,
-                          page_size=page_size, max_lanes=2,
-                          max_pages_per_seq=per_seq + 1, chunk=chunk,
-                          use_kernel=use_kernel, enable_prefix_cache=False,
-                          tracer=tracer)
-        srv.submit(Request(rid=0, prompt=list(prompts[0]), max_new=max_new,
-                           priority=0))
+        srv = make_engine(cfg, params, EngineConfig(
+            num_pages=num_pages, page_size=page_size, max_lanes=2,
+            max_pages_per_seq=per_seq + 1, chunk=chunk,
+            use_kernel=use_kernel, enable_prefix_cache=False),
+            tracer=tracer)
+        srv.submit(GenerationRequest(
+            rid=0, prompt=tuple(prompts[0]), priority=0,
+            sampling=SamplingParams(max_new=max_new)))
         srv.step()
         srv.step()
-        srv.submit(Request(rid=1, prompt=list(prompts[1]), max_new=max_new,
-                           priority=5))
+        srv.submit(GenerationRequest(
+            rid=1, prompt=tuple(prompts[1]), priority=5,
+            sampling=SamplingParams(max_new=max_new)))
         while srv.step():
             pass
         events = tracer.drain()
@@ -249,7 +322,7 @@ def run_preemption_probe(cfg, params, *, page_size, max_new, use_kernel,
         swap_out = int(sum(e[4] for e in events
                            if e[2] == EventType.SWAP_OUT))
         swap_in = int(sum(e[4] for e in events if e[2] == EventType.SWAP_IN))
-        return ({r.rid: list(r.out) for r in srv.finished}, srv,
+        return ({r.rid: list(r.tokens) for r in srv.finished}, srv,
                 swap_out, swap_in)
 
     ref_out, _, _, _ = run(4 * per_seq)          # uncontended reference
@@ -332,9 +405,11 @@ def main(argv=None) -> dict:
         args.chunk, args.page_size, args.max_lanes = 8, 4, 2
         k_prefixes, m_per_prefix, sys_len, user_len = 2, 3, 8, 3
         spec_max_new, spec_reps = 12, 3
+        sample_reqs, sample_max_new = 3, 6
     else:
         k_prefixes, m_per_prefix, sys_len, user_len = 4, 8, 64, 16
         spec_max_new, spec_reps = 32, 6
+        sample_reqs, sample_max_new = 8, 16
 
     cfg = get_config(args.arch).smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -380,6 +455,12 @@ def main(argv=None) -> dict:
                                     max_lanes=args.max_lanes,
                                     use_kernel=use_kernel)
 
+    sampling = run_sampling_workload(cfg, params, max_new=sample_max_new,
+                                     page_size=args.page_size,
+                                     max_lanes=args.max_lanes,
+                                     use_kernel=use_kernel,
+                                     requests=sample_reqs)
+
     trace_events = {} if args.trace_out else None
     sweep = run_cluster_sweep(
         cfg, params, prompts, max_clusters=args.clusters, heads=args.heads,
@@ -421,6 +502,7 @@ def main(argv=None) -> dict:
         },
         "preemption": preemption,
         "speculation": speculation,
+        "sampling": sampling,
         "cluster_sweep": sweep,
     }
     with open(args.out, "w") as f:
@@ -463,6 +545,16 @@ def main(argv=None) -> dict:
           f"acceptance={sd['acceptance_rate']:.2f}  "
           f"wasted verify tokens={sd['wasted_verify_tokens']}  "
           f"outputs match={sd['outputs_match']}")
+    sa = result["sampling"]
+    print(f"sampling (T={sa['workload']['temperature']}, "
+          f"top-p={sa['workload']['top_p']}): "
+          f"greedy iters/token="
+          f"{sa['greedy']['iters_per_generated_token']:.3f}  "
+          f"sampled iters/token="
+          f"{sa['sampled']['iters_per_generated_token']:.3f}  "
+          f"reproducible={sa['sampled_reproducible']}  "
+          f"stop-token early exit={sa['stop_token_early_exit']} "
+          f"({sa['stop_tokens_generated']} tok)")
     for C, r in sweep["configs"].items():
         print(f"clusters={C:>2s} (x{sweep['heads']} heads): "
               f"iters/req={r['iters_per_request']:6.1f}  "
@@ -478,6 +570,9 @@ def main(argv=None) -> dict:
     assert sd["spec_on"]["iters_per_generated_token"] < \
         sd["spec_off"]["iters_per_generated_token"], \
         "speculation did not reduce engine iterations per token"
+    assert sa["sampled_reproducible"], \
+        "seeded sampled decoding was not reproducible"
+    assert sa["stop_token_early_exit"], "stop token did not end the request"
     assert sweep["one_cluster_outputs_match_unsharded"] is not False, \
         "1-cluster sharded engine diverged from the unsharded engine"
     print(f"wrote {args.out}")

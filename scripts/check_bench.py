@@ -12,7 +12,10 @@ fixed workload (unlike wall-clock tokens/s on shared CI runners):
 * ``speculation.spec_on.iters_per_generated_token`` — engine iterations
   per generated token with speculative decoding (lower is better);
 * ``speculation.acceptance_rate`` — drafted tokens the verify step
-  confirmed (HIGHER is better — the gate is direction-aware).
+  confirmed (HIGHER is better — the gate is direction-aware);
+* ``sampling.greedy.iters_per_generated_token`` — the temperature-0 path
+  of the sampled-decoding workload: the unified-API sampler must keep the
+  greedy hot path's iteration structure intact (lower is better).
 
 Relative rule: a gated metric may not regress by more than
 ``--max-regress`` (default 10%) against the committed baseline.  On top
@@ -53,6 +56,8 @@ GATED = [
      "spec iters/generated token", "lower"),
     (("speculation", "acceptance_rate"),
      "spec acceptance rate", "higher"),
+    (("sampling", "greedy", "iters_per_generated_token"),
+     "greedy-path iters/generated token", "lower"),
 ]
 
 SPEC_ACCEPT_FLOOR = 0.25

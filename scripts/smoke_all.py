@@ -64,6 +64,28 @@ for name in ARCHS:
         traceback.print_exc()
         failures.append(name)
 
+# the streaming serving example end-to-end: exercises the unified
+# generation API (EngineConfig / SamplingParams / generate() deltas) the
+# way a user would — it asserts internally that the streamed deltas
+# concatenate to the final results
+try:
+    import subprocess
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo, "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    r = subprocess.run(
+        [sys.executable, os.path.join(repo, "examples", "serve_paged.py"),
+         "--requests", "4"],
+        capture_output=True, text=True, env=env, cwd=repo, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "served 5 requests" in r.stdout, r.stdout
+    print("OK   examples/serve_paged.py (streaming API demo)")
+except Exception as e:
+    print(f"FAIL serve_paged example: {e}")
+    traceback.print_exc()
+    failures.append("serve_paged_example")
+
 # serving hot path: chunked prefill vs token-by-token, the shared-prefix
 # KV-cache workload (hit rate must be real), the preemption probe, and the
 # sharded-engine cluster sweep (1-cluster parity is asserted inside main)
@@ -86,10 +108,14 @@ try:
     assert sd["outputs_match"], "speculative decoding changed outputs"
     assert sd["iters_per_token_reduction"] > 1.0, \
         "speculation did not reduce engine iterations per token"
+    sa = result["sampling"]
+    assert sa["sampled_reproducible"], "seeded sampling not reproducible"
+    assert sa["stop_token_early_exit"], "stop token did not end a request"
     print(f"OK   shared-prefix hit-rate="
           f"{sp['prefix_hit_rate']:.2f} pages_saved={sp['pages_saved']} "
           f"preemption swaps={result['preemption']['swap_out_pages']} "
           f"spec acceptance={sd['acceptance_rate']:.2f} "
+          f"sampling reproducible={sa['sampled_reproducible']} "
           f"cluster configs={sorted(sweep['configs'])}")
 except Exception as e:
     print(f"FAIL serve_throughput: {e}")

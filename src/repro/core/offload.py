@@ -81,6 +81,12 @@ class HostBackingStore:
         self.bytes_in += arr.nbytes
         return arr
 
+    def discard(self, seq: int):
+        """Drop every parked page of ``seq`` without counting swap-in
+        traffic (the abort path: payload is released, never restored)."""
+        for k in [k for k in self._pages if k[0] == seq]:
+            del self._pages[k]
+
     def __len__(self) -> int:
         return len(self._pages)
 

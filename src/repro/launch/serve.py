@@ -1,12 +1,14 @@
-"""Serving launcher: the paged continuous-batching engine.
+"""Serving launcher: the paged continuous-batching engine behind the
+unified generation API.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b \
-        --requests 8 --max-new 8 [--kernel]
+        --requests 8 --max-new 8 [--kernel] [--temperature 0.8 --top-p 0.9 \
+        --top-k 40 --seed 7 --stop 13 --stop 17]
 
 Runs the smoke-sized model (this container is CPU); the engine itself —
-RAB translation, paged pool, continuous batching, tracing — is the
-production control path, and the decode math is the `serve`-profile
-sharding proven by the decode_32k dry-run cells.
+RAB translation, paged pool, continuous batching, on-device sampling,
+tracing — is the production control path, and the decode math is the
+`serve`-profile sharding proven by the decode_32k dry-run cells.
 """
 import argparse
 
@@ -15,7 +17,9 @@ import jax
 from repro.configs import get_config
 from repro.core.analysis import layer1_decode, layer2_tlb_transactions
 from repro.models import model as M
-from repro.runtime import PagedServer, Request
+from repro.runtime import (
+    EngineConfig, GenerationRequest, SamplingParams, make_engine,
+)
 
 
 def main():
@@ -31,24 +35,45 @@ def main():
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: n-gram drafter proposes up "
                          "to K tokens per lane per iteration, verified in "
-                         "one chunked step (0 disables)")
+                         "one chunked step (0 disables; greedy lanes only)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy argmax; > 0 samples on device with a "
+                         "per-request PRNG key folded by position")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 disables)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus truncation mass (1.0 disables)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="per-request sampling seed (request i uses "
+                         "seed + i so lanes differ but stay reproducible)")
+    ap.add_argument("--stop", type=int, action="append", default=None,
+                    help="stop token id; repeatable — any of them ends a "
+                         "request with finish_reason='stop'")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    srv = PagedServer(cfg, params, num_pages=args.pages,
-                      page_size=args.page_size, max_lanes=args.lanes,
-                      max_pages_per_seq=16, use_kernel=args.kernel,
-                      spec_k=args.spec_k)
-    for rid in range(args.requests):
-        srv.submit(Request(rid=rid, prompt=[rid + 1, 3, 5],
-                           max_new=args.max_new))
-    done = srv.run()
-    for r in done:
-        print(f"req {r.rid}: {r.prompt} -> {r.out}")
+    engine_cfg = EngineConfig(num_pages=args.pages, page_size=args.page_size,
+                              max_lanes=args.lanes, max_pages_per_seq=16,
+                              use_kernel=args.kernel, spec_k=args.spec_k)
+    srv = make_engine(cfg, params, engine_cfg)
+    requests = [
+        GenerationRequest(
+            rid=rid, prompt=(rid + 1, 3, 5),
+            sampling=SamplingParams(
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p, seed=args.seed + rid,
+                stop_tokens=tuple(args.stop or ()), max_new=args.max_new))
+        for rid in range(args.requests)
+    ]
+    for _ in srv.generate(requests):
+        pass                        # drain the stream; results accumulate
+    for r in srv.finished:
+        print(f"req {r.rid}: {list(r.prompt)} -> {list(r.tokens)} "
+              f"[{r.finish_reason}]")
     print("RAB:", srv.rab.stats)
     if args.spec_k:
-        gen = sum(len(r.out) for r in done)
+        gen = sum(len(r.tokens) for r in srv.finished)
         print(f"spec: proposed={srv.spec_proposed} "
               f"accepted={srv.spec_accepted} rejected={srv.spec_rejected} "
               f"iters/token={srv.iterations / max(gen, 1):.2f}")

@@ -1,10 +1,18 @@
 from repro.runtime.trainer import Trainer, TrainerConfig, FailureInjector
-from repro.runtime.server import PagedServer, Request
+from repro.runtime.api import (
+    EngineConfig, GenerationRequest, GenerationResult, SamplingParams,
+    TokenDelta, make_engine, Request,
+    FINISH_STOP, FINISH_LENGTH, FINISH_ABORTED,
+)
+from repro.runtime.server import PagedServer
 from repro.runtime.sharded_server import ShardedPagedServer
 from repro.runtime.speculative import (
     Drafter, NGramDrafter, DraftModelDrafter,
 )
 
 __all__ = ["Trainer", "TrainerConfig", "FailureInjector", "PagedServer",
-           "Request", "ShardedPagedServer", "Drafter", "NGramDrafter",
-           "DraftModelDrafter"]
+           "ShardedPagedServer", "Drafter", "NGramDrafter",
+           "DraftModelDrafter", "EngineConfig", "GenerationRequest",
+           "GenerationResult", "SamplingParams", "TokenDelta",
+           "make_engine", "Request", "FINISH_STOP", "FINISH_LENGTH",
+           "FINISH_ABORTED"]

@@ -1,0 +1,208 @@
+"""Unified generation API for the paged serving engines.
+
+HERO's value is a *platform*: a stable host-side API over a configurable
+PMCA, so new workloads run without touching engine internals (§2.2; HEROv2
+doubles down on exactly this full-stack programmability).  This module is
+the serving-side front door in that spirit — every knob and every request
+flows through four small frozen dataclasses plus one factory:
+
+* :class:`EngineConfig` — every pool / scheduler / kernel / speculation /
+  mesh knob in one spec.  Both :class:`~repro.runtime.PagedServer` and
+  :class:`~repro.runtime.ShardedPagedServer` consume it (their old
+  keyword sprawl survives one more PR behind a ``DeprecationWarning``
+  shim), and :func:`make_engine` picks the engine class from the spec.
+* :class:`SamplingParams` — per-request decoding policy: temperature,
+  top-k, top-p nucleus truncation, PRNG seed, stop tokens and the token
+  budget.  ``temperature == 0`` is exact greedy argmax (byte-identical to
+  the pre-sampling engine); ``temperature > 0`` samples **on device**
+  inside the jitted steps, with a per-lane PRNG key folded by absolute
+  sequence position — so a request's stream is reproducible from its seed
+  alone, independent of chunking, scheduling, preemption or sharding.
+* :class:`GenerationRequest` / :class:`GenerationResult` — the immutable
+  user-facing request/result pair.  Results carry a ``finish_reason``
+  (``"stop"`` / ``"length"`` / ``"aborted"``); scheduler-internal mutable
+  state lives in the private ``SeqState`` and never leaks to callers.
+* :class:`TokenDelta` — the streaming unit: ``engine.generate(requests)``
+  yields one delta per request-visible step (new tokens, prefix-cache
+  hits, preemptions, speculation verdicts), and the concatenation of a
+  request's token deltas is exactly its final result's token tuple.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Iterable, Optional, Tuple
+
+from repro.core.rab import RABConfig
+
+__all__ = [
+    "EngineConfig", "SamplingParams", "GenerationRequest",
+    "GenerationResult", "TokenDelta", "make_engine", "Request",
+    "FINISH_STOP", "FINISH_LENGTH", "FINISH_ABORTED",
+]
+
+#: finish reasons a GenerationResult can carry
+FINISH_STOP = "stop"          # a stop token was emitted
+FINISH_LENGTH = "length"      # max_new tokens generated
+FINISH_ABORTED = "aborted"    # run() hit its iteration cap first
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding policy, applied on device.
+
+    ``temperature == 0`` selects exact greedy argmax — the historical
+    engine behaviour, byte-identical, and the only mode speculative
+    drafting engages for (greedy verification is what makes the PR 4
+    parity guarantee structural).  ``temperature > 0`` divides the logits
+    by the temperature, applies top-k then top-p truncation, and samples
+    with a per-lane PRNG key derived as
+    ``fold_in(PRNGKey(seed), position)`` — deterministic per (seed,
+    position) no matter how the scheduler interleaves, chunks, preempts
+    or shards the request.
+    """
+    temperature: float = 0.0    # 0 = greedy argmax
+    top_k: int = 0              # 0 disables top-k truncation
+    top_p: float = 1.0          # 1.0 disables nucleus truncation
+    seed: int = 0               # per-request PRNG seed
+    stop_tokens: Tuple[int, ...] = ()   # any of these ends the request
+    max_new: int = 16           # generated-token budget
+
+    def __post_init__(self):
+        object.__setattr__(self, "stop_tokens", tuple(self.stop_tokens))
+        if self.temperature < 0:
+            raise ValueError("temperature must be >= 0")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0")
+        if self.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationRequest:
+    """What a caller submits: prompt + policy.  Immutable — the engine
+    keeps its mutable bookkeeping in a private ``SeqState``."""
+    rid: int
+    prompt: Tuple[int, ...]
+    sampling: SamplingParams = SamplingParams()
+    priority: int = 0           # scheduler class; higher preempts lower
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt", tuple(self.prompt))
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationResult:
+    """What a caller gets back: tokens + why generation ended + the
+    request's scheduler/speculation statistics."""
+    rid: int
+    prompt: Tuple[int, ...]
+    tokens: Tuple[int, ...]
+    finish_reason: str          # FINISH_STOP / FINISH_LENGTH / FINISH_ABORTED
+    prefix_hit_tokens: int = 0
+    preemptions: int = 0
+    cluster: int = 0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+    spec_rejected: int = 0
+    spec_k_final: int = 0       # adaptive draft depth when the request ended
+
+    @property
+    def out(self):
+        """Token list, matching the old mutable ``Request.out`` shape."""
+        return list(self.tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenDelta:
+    """One streamed increment from ``engine.generate()``.
+
+    ``event`` is ``"token"`` (plain decode/prefill emission), ``"spec"``
+    (a draft-verify iteration; ``data`` = accepted draft count),
+    ``"prefix_hit"`` (``data`` = prompt tokens served from the cache),
+    ``"preempt"`` (``data`` = pages swapped out) or ``"abort"``.
+    ``finish_reason`` is set on the delta that ends the request; the
+    concatenation of a request's ``tokens`` across its deltas equals the
+    final :class:`GenerationResult.tokens`.
+    """
+    rid: int
+    tokens: Tuple[int, ...] = ()
+    event: str = "token"
+    data: int = 0
+    finish_reason: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Every engine knob in one spec (HERO: one platform configuration
+    drives the whole PMCA instantiation).
+
+    ``clusters`` / ``heads`` / ``mesh`` / ``sharded`` select the engine
+    class through :func:`make_engine`: any multi-cluster, head-sharded or
+    explicitly ``sharded`` spec builds a ``ShardedPagedServer`` (where
+    ``num_pages`` and ``max_lanes`` are per cluster), everything else the
+    plain ``PagedServer``.
+    """
+    # pool
+    num_pages: int = 64
+    page_size: int = 8
+    max_pages_per_seq: int = 16
+    rab_cfg: RABConfig = RABConfig(l1_entries=8, l2_entries=32,
+                                   l2_assoc=4, l2_banks=2)
+    enable_prefix_cache: bool = True
+    # scheduler
+    max_lanes: int = 4
+    chunk: int = 16
+    # kernels
+    use_kernel: bool = True
+    pages_per_step: int = 2
+    # speculation
+    spec_k: int = 0
+    drafter: Optional[object] = None    # runtime.speculative.Drafter
+    # mesh (sharded engine only)
+    clusters: int = 1
+    heads: int = 1
+    mesh: Optional[object] = None       # launch.mesh.ClusterMesh
+    sharded: bool = False               # force ShardedPagedServer at C=H=1
+
+    @property
+    def wants_sharded(self) -> bool:
+        return (self.sharded or self.clusters > 1 or self.heads > 1
+                or self.mesh is not None)
+
+
+def make_engine(cfg, params, engine_cfg: Optional[EngineConfig] = None, *,
+                tracer=None):
+    """Build the right engine for ``engine_cfg`` (default spec if None).
+
+    One factory, both engines: a spec with ``clusters > 1``, ``heads > 1``,
+    an explicit ``mesh`` or ``sharded=True`` returns a
+    ``ShardedPagedServer``; anything else the unsharded ``PagedServer``.
+    """
+    from repro.runtime.server import PagedServer
+    from repro.runtime.sharded_server import ShardedPagedServer
+
+    engine_cfg = engine_cfg or EngineConfig()
+    cls = ShardedPagedServer if engine_cfg.wants_sharded else PagedServer
+    return cls(cfg, params, engine_cfg, tracer=tracer)
+
+
+def Request(rid: int, prompt: Iterable[int], max_new: int = 8,
+            priority: int = 0, **kw) -> GenerationRequest:
+    """Deprecated constructor-shaped shim for the pre-API ``Request``.
+
+    Returns a greedy :class:`GenerationRequest`; new code should build
+    ``GenerationRequest(rid, prompt, SamplingParams(...), priority)``.
+    """
+    warnings.warn(
+        "runtime.Request is deprecated; submit a GenerationRequest with "
+        "SamplingParams instead", DeprecationWarning, stacklevel=2)
+    return GenerationRequest(
+        rid=rid, prompt=tuple(prompt),
+        sampling=SamplingParams(max_new=max_new), priority=priority, **kw)

@@ -8,6 +8,21 @@ scalar-prefetched block table; page allocation happens on the RAB miss path;
 admit/finish/alloc/release are all traced (C4) so Fig.6-style timelines can
 be reconstructed from a run.
 
+The engine is driven through the unified generation API (``runtime.api``):
+callers build an :class:`~repro.runtime.EngineConfig` (one spec for every
+pool/scheduler/kernel/speculation knob — ``make_engine`` picks this class
+or the sharded one from it) and submit frozen
+:class:`~repro.runtime.GenerationRequest` objects whose
+:class:`~repro.runtime.SamplingParams` carry the per-request decoding
+policy.  Scheduler-internal mutable state (``fed``, ``lane``, ``swapped``,
+``spec_*``) lives in the private :class:`SeqState`; what comes back is a
+frozen :class:`~repro.runtime.GenerationResult` with a ``finish_reason``
+(``stop`` / ``length`` / ``aborted``).  ``engine.generate(requests)``
+streams :class:`~repro.runtime.TokenDelta` increments per iteration —
+``run()`` is just the drained generator, and when its iteration cap is hit
+it *aborts* (and surfaces) all still-queued/running work instead of
+silently dropping it.
+
 The hot path follows HERO's "keep the accelerator fed" discipline (Fig. 5 —
 DMA double-buffering + zero-copy SVM so the host never serializes on the
 data path):
@@ -16,8 +31,13 @@ data path):
   ``chunk`` tokens per engine iteration in one ``paged_prefill`` kernel
   launch (not token-by-token through the decode path);
 * the decode step runs entirely from device-resident state — block tables,
-  lengths, the active-lane mask, and the previously sampled token all live
-  on device, greedy sampling is on-device, and the only per-iteration
+  lengths, the active-lane mask, the previously sampled token AND the
+  per-lane sampling policy (temperature / top-k / top-p / PRNG seed) all
+  live on device; token selection is on-device (exact greedy argmax for
+  ``temperature == 0`` lanes, batched temperature/top-k/top-p sampling
+  otherwise, each lane's PRNG key folded by absolute sequence position so
+  a request's stream is reproducible from its seed alone, independent of
+  chunking, scheduling, preemption or sharding); the only per-iteration
   transfer is a single device->host pull of the sampled tokens;
 * K and V for all new tokens of all lanes are written into the fused
   ``(L, P+1, 2, page, Kv, hd)`` pool with ONE scatter per layer (invalid
@@ -58,11 +78,15 @@ host then *rolls back* the rejected tail: ``PagedKVPool.trim`` unmaps
 pages wholly beyond the kept length (respecting refcounts, CoW copies and
 the prefix index) and re-credits them to the request's reservation.
 Greedy parity is structural — the accepted prefix plus the bonus token is
-the exact greedy continuation.  Per-lane K adapts to recent acceptance
-(full accept grows it, zero accept halves it) and drafting is disabled
-while any request is queued (preemption pressure: waiting work beats
-wider verification).  Proposals, acceptances and rollbacks are traced as
-SPEC_PROPOSE / SPEC_ACCEPT / SPEC_ROLLBACK.
+the exact greedy continuation — and therefore drafting is auto-restricted
+to ``temperature == 0`` lanes: sampled lanes never propose drafts, but
+they ride along in a verify iteration (their bonus token is drawn by the
+same position-folded sampler the plain decode step uses, so their stream
+is unchanged).  Per-lane K adapts to recent acceptance (full accept grows
+it, zero accept halves it) and drafting is disabled while any request is
+queued (preemption pressure: waiting work beats wider verification).
+Proposals, acceptances and rollbacks are traced as SPEC_PROPOSE /
+SPEC_ACCEPT / SPEC_ROLLBACK.
 
 Demo-scale engine for plain-GQA transformer archs (yi/minitron/qwen3/olmoe
 smoke configs).
@@ -71,7 +95,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional
+import warnings
+from typing import Iterable, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -88,19 +113,31 @@ from repro.kernels.paged_attention.ops import (
     paged_prefill_fused, page_counts_for,
 )
 from repro.kernels.paged_attention.ref import paged_prefill_ref
-from repro.runtime.speculative import Drafter, NGramDrafter
+from repro.runtime.api import (
+    EngineConfig, GenerationRequest, GenerationResult, SamplingParams,
+    TokenDelta, FINISH_ABORTED, FINISH_LENGTH, FINISH_STOP,
+)
+from repro.runtime.speculative import NGramDrafter
 
 
 @dataclasses.dataclass
-class Request:
+class SeqState:
+    """Scheduler-internal mutable state for one admitted request.
+
+    This is deliberately NOT part of the public API: callers see the
+    frozen ``GenerationRequest`` going in and the frozen
+    ``GenerationResult`` coming out; everything the scheduler mutates
+    mid-flight (``fed``, ``lane``, ``swapped``, the ``spec_*`` counters)
+    stays private to the engine."""
     rid: int
     prompt: List[int]
-    max_new: int = 8
+    sampling: SamplingParams
     priority: int = 0                 # scheduler class; higher preempts lower
     out: List[int] = dataclasses.field(default_factory=list)
     fed: int = 0                      # prompt tokens already consumed
     lane: int = -1
     done: bool = False
+    finish_reason: Optional[str] = None
     prefix_hit_tokens: int = 0        # prompt tokens reused from the cache
     preemptions: int = 0
     arrival: int = -1                 # FIFO tiebreak, assigned by submit()
@@ -112,53 +149,61 @@ class Request:
     spec_accepted: int = 0            # drafted tokens the target confirmed
     spec_rejected: int = 0            # drafted tokens rolled back
 
+    @property
+    def max_new(self) -> int:
+        return self.sampling.max_new
+
 
 class PagedServer:
-    def __init__(self, cfg: ArchConfig, params, *, num_pages: int = 64,
-                 page_size: int = 8, max_lanes: int = 4,
-                 max_pages_per_seq: int = 16, chunk: int = 16,
-                 pages_per_step: int = 2,
-                 rab_cfg: RABConfig = RABConfig(l1_entries=8, l2_entries=32,
-                                                l2_assoc=4, l2_banks=2),
-                 tracer: Optional[TraceBuffer] = None,
-                 use_kernel: bool = True,
-                 enable_prefix_cache: bool = True,
-                 spec_k: int = 0,
-                 drafter: Optional[Drafter] = None):
+    def __init__(self, cfg: ArchConfig, params,
+                 engine: Optional[EngineConfig] = None, *,
+                 tracer: Optional[TraceBuffer] = None, **legacy):
+        if legacy:
+            # one-PR migration shim: the old kwargs sprawl still works but
+            # warns; every knob now lives on EngineConfig
+            warnings.warn(
+                "PagedServer(**kwargs) is deprecated — pass an EngineConfig "
+                f"(legacy kwargs: {sorted(legacy)})",
+                DeprecationWarning, stacklevel=2)
+            engine = dataclasses.replace(engine or EngineConfig(), **legacy)
+        elif engine is None:
+            engine = EngineConfig()
         assert cfg.block_kind == "transformer" and cfg.attention_kind == "gqa" \
             and not cfg.local_global_period, \
             "paged engine supports plain-GQA transformer archs"
+        self.engine_cfg = engine
         self.cfg, self.params = cfg, params
-        self.page_size, self.max_lanes = page_size, max_lanes
-        self.max_pages = max_pages_per_seq
-        self.chunk = max(1, chunk)
+        self.page_size, self.max_lanes = engine.page_size, engine.max_lanes
+        self.max_pages = engine.max_pages_per_seq
+        self.chunk = max(1, engine.chunk)
         self.tracer = tracer or TraceBuffer()
-        self.use_kernel = use_kernel
+        self.use_kernel = engine.use_kernel
         # speculative decoding: drafter proposes, the verify step disposes
-        self.spec_k = max(0, spec_k)
-        self.drafter = drafter if drafter is not None else \
+        self.spec_k = max(0, engine.spec_k)
+        self.drafter = engine.drafter if engine.drafter is not None else \
             (NGramDrafter() if self.spec_k else None)
         # overridable construction hooks: the sharded subclass substitutes
         # per-cluster pools and mesh-sharded device state here instead of
         # allocating the unsharded versions only to discard them
-        self._build_pool(num_pages, rab_cfg)
-        self._build_device_state(num_pages, pages_per_step)
-        self._bt_host = np.zeros((self.max_lanes, max_pages_per_seq),
+        self._build_pool(engine.num_pages, engine.rab_cfg)
+        self._build_device_state(engine.num_pages, engine.pages_per_step)
+        self._bt_host = np.zeros((self.max_lanes, self.max_pages),
                                  np.int32)
-        self.lanes: List[Optional[Request]] = [None] * max_lanes
-        self.queue: List[Request] = []
-        self.finished: List[Request] = []
+        self.lanes: List[Optional[SeqState]] = [None] * self.max_lanes
+        self.queue: List[SeqState] = []
+        self.finished: List[GenerationResult] = []
         self.iterations = 0
         self.prefill_tokens = 0       # prompt tokens run through prefill
         self.h2d_events = 0
         self.d2h_events = 0
         # shared-prefix caching + preemption (HERO SVM page sharing and
         # reclamation on the serving path)
-        self.enable_prefix_cache = enable_prefix_cache
+        self.enable_prefix_cache = engine.enable_prefix_cache
         self.backing = HostBackingStore()
         self.preemptions = 0
         self._dirty: set = set()      # lane rows to push before the kernel
         self._arrival = 0
+        self._deltas: List[TokenDelta] = []   # streamed by generate()
         self.spec_iterations = 0      # engine iterations that verified drafts
         self.spec_proposed = 0
         self.spec_accepted = 0
@@ -172,6 +217,12 @@ class PagedServer:
     def _d2h(self, n: int = 1):
         self.d2h_events += n
         self.tracer.record_host(EventType.D2H, n, 0)
+
+    def _delta(self, rid: int, tokens=(), event: str = "token", data: int = 0,
+               reason: Optional[str] = None):
+        self._deltas.append(TokenDelta(rid=rid, tokens=tuple(tokens),
+                                       event=event, data=data,
+                                       finish_reason=reason))
 
     # ------------------------------------------------------ construction --
     def _build_pool(self, num_pages: int, rab_cfg: RABConfig):
@@ -188,22 +239,32 @@ class PagedServer:
         self.kv_pages = jnp.zeros(
             (L_, num_pages + 1, 2, self.page_size, kv, hd), dt)
         itp = jax.default_backend() != "tpu"
-        self._chunk_step = jax.jit(functools.partial(
-            _paged_chunk_step, cfg, self.use_kernel, pages_per_step, itp,
-            num_pages))
-        self._decode_step = jax.jit(functools.partial(
-            _paged_decode_step, cfg, self.use_kernel, pages_per_step, itp,
-            num_pages))
+
+        # two variants per step, keyed by "does any active lane sample?":
+        # the all-greedy variant compiles without the sampler (no per-lane
+        # sorts/softmax whose results a where() would discard), so the
+        # historical greedy hot path pays nothing for the sampling API;
+        # jit is lazy, so greedy-only workloads never compile the other
+        def mk(step_fn):
+            return {s: jax.jit(functools.partial(
+                step_fn, cfg, self.use_kernel, pages_per_step, itp,
+                num_pages, sample=s)) for s in (False, True)}
+
+        self._chunk_step = mk(_paged_chunk_step)
+        self._decode_step = mk(_paged_decode_step)
         if self.spec_k:
-            self._spec_step = jax.jit(functools.partial(
-                _paged_spec_step, cfg, self.use_kernel, pages_per_step, itp,
-                num_pages))
+            self._spec_step = mk(_paged_spec_step)
         # device-resident engine state (HERO SVM: the scheduler and the
-        # model share these without per-iteration re-uploads)
+        # model share these without per-iteration re-uploads); the four
+        # sampling-policy rows ride with the lane like lengths do
         self.bt_dev = jnp.zeros((self.max_lanes, self.max_pages), jnp.int32)
         self.len_dev = jnp.zeros((self.max_lanes,), jnp.int32)
         self.active_dev = jnp.zeros((self.max_lanes,), jnp.int32)
         self.last_tok = jnp.zeros((self.max_lanes,), jnp.int32)
+        self.seed_dev = jnp.zeros((self.max_lanes,), jnp.uint32)
+        self.temp_dev = jnp.zeros((self.max_lanes,), jnp.float32)
+        self.topk_dev = jnp.zeros((self.max_lanes,), jnp.int32)
+        self.topp_dev = jnp.ones((self.max_lanes,), jnp.float32)
 
     # ---------------------------------------------------------- pool seam --
     # Every pool access for a placed request routes through these, so the
@@ -212,45 +273,50 @@ class PagedServer:
     def _pool_of(self, cluster: int) -> PagedKVPool:
         return self.pool
 
-    def _pool(self, req: Request) -> PagedKVPool:
+    def _pool(self, req: SeqState) -> PagedKVPool:
         return self._pool_of(req.cluster)
 
     def _capacity_pages(self) -> int:
         """Page capacity one request can draw from (per cluster)."""
         return self.pool.num_pages
 
-    def _gpage(self, req: Request, p: int) -> int:
+    def _gpage(self, req: SeqState, p: int) -> int:
         """Pool-local physical page -> index into self.kv_pages."""
         return p
 
     # ------------------------------------------------------------- admin --
-    def submit(self, req: Request):
+    def submit(self, req: GenerationRequest):
         # real exceptions, not asserts: an unplaceable request at the queue
         # head would otherwise spin _admit forever (and -O strips asserts)
         if not req.prompt:
             # an empty prompt would enter decode seeded by whatever token
             # the lane's previous occupant left in last_tok
             raise ValueError("empty prompt")
-        if len(req.prompt) + req.max_new - 1 > \
+        sp = req.sampling
+        if len(req.prompt) + sp.max_new - 1 > \
                 self.max_pages * self.page_size:
             raise ValueError("request exceeds max_pages_per_seq")
-        if self._pages_needed(req) + self._cow_budget(req) > \
+        seq = SeqState(rid=req.rid, prompt=list(req.prompt), sampling=sp,
+                       priority=req.priority)
+        if self._pages_needed(seq) + self._cow_budget(seq) > \
                 self._capacity_pages():
             raise ValueError("request exceeds KV pool capacity")
-        req.arrival = self._arrival
+        seq.arrival = self._arrival
         self._arrival += 1
-        if self.spec_k and req.spec_k_cur <= 0:
-            req.spec_k_cur = self.spec_k
-        self.queue.append(req)
+        if self.spec_k and sp.greedy:
+            # drafting is greedy-lane-only: verification is greedy argmax,
+            # so a sampled lane's drafts could never be parity-accepted
+            seq.spec_k_cur = self.spec_k
+        self.queue.append(seq)
 
-    def _pages_needed(self, req: Request) -> int:
+    def _pages_needed(self, req: SeqState) -> int:
         # every token the engine will *write* K/V for: the prompt plus all
         # generated tokens except the last (sampled but never fed back)
         total = len(req.prompt) + req.max_new - 1
         return int(page_counts_for(total, self.page_size))
 
     # --------------------------------------------------------- scheduler --
-    def _cow_budget(self, req: Request) -> int:
+    def _cow_budget(self, req: SeqState) -> int:
         """One extra reserved page for a request whose prompt tail is
         partial: once that tail is *registered* in the prefix index, a
         later admission may share it, and this request's own next append
@@ -260,7 +326,7 @@ class PagedServer:
         return 1 if (self.enable_prefix_cache and req.max_new > 1
                      and len(req.prompt) % self.page_size) else 0
 
-    def _plan(self, req: Request, cluster: int = 0) -> dict:
+    def _plan(self, req: SeqState, cluster: int = 0) -> dict:
         """Admission plan against ``cluster``'s pool: which prefix-cache
         pages to map and how many pages to reserve.  ``need`` excludes only
         *stable* shared pages (fully written, never appended again); a
@@ -303,7 +369,7 @@ class PagedServer:
         return self._pool_of(plan["cluster"]).available() >= \
             plan["need"] + plan["cached_hits"]
 
-    def _victim(self, head: Request) -> Optional[Request]:
+    def _victim(self, head: SeqState) -> Optional[SeqState]:
         """Lowest-priority running request (youngest within a class) —
         preemptable only by a strictly higher-priority waiter, so equal
         classes never churn each other."""
@@ -331,7 +397,7 @@ class PagedServer:
             self.queue.pop(0)
             self._place(head, lane, plan)
 
-    def _place(self, req: Request, lane: int, plan: dict):
+    def _place(self, req: SeqState, lane: int, plan: dict):
         rid = req.rid
         req.lane = lane
         req.cluster = plan["cluster"]
@@ -354,17 +420,23 @@ class PagedServer:
             req.reg_pages = plan["usable"] // self.page_size
             self.tracer.record_host(EventType.PREFIX_HIT, rid,
                                     plan["usable"])
+            self._delta(rid, event="prefix_hit", data=plan["usable"])
         self._refresh_row(lane, req)
+        sp = req.sampling
         self.active_dev = self.active_dev.at[lane].set(1)
         self.len_dev = self.len_dev.at[lane].set(
             pool.seq_len.get(rid, 0))
+        self.seed_dev = self.seed_dev.at[lane].set(sp.seed & 0xFFFFFFFF)
+        self.temp_dev = self.temp_dev.at[lane].set(sp.temperature)
+        self.topk_dev = self.topk_dev.at[lane].set(sp.top_k)
+        self.topp_dev = self.topp_dev.at[lane].set(sp.top_p)
         if plan["resume"] and req.fed >= len(req.prompt) and req.out:
             # mid-decode resume: re-seed the device-resident last sample
             self.last_tok = self.last_tok.at[lane].set(req.out[-1])
         self._h2d(1)
         self.tracer.record_host(EventType.REQUEST_ADMIT, rid, lane)
 
-    def _preempt(self, req: Request):
+    def _preempt(self, req: SeqState):
         """Reclaim a running lane: every mapped page's payload goes D2H
         into the host backing store and the mapping drops.  Non-shared
         pages are thereby freed immediately; shared pages merely lose this
@@ -395,6 +467,7 @@ class PagedServer:
         pool.stats["swapped_out"] += len(mapped)
         self.tracer.record_host(EventType.SWAP_OUT, rid, len(mapped))
         self.tracer.record_host(EventType.REQUEST_PREEMPT, rid, len(mapped))
+        self._delta(rid, event="preempt", data=len(mapped))
         self.queue.append(req)
 
     def preempt(self, rid: int) -> bool:
@@ -406,7 +479,7 @@ class PagedServer:
                 return True
         return False
 
-    def _swap_in(self, req: Request):
+    def _swap_in(self, req: SeqState):
         """Restore a preempted request's swapped pages: fresh physical
         pages, one batched H2D payload upload, mappings re-established."""
         rid = req.rid
@@ -423,7 +496,7 @@ class PagedServer:
         pool.stats["swapped_in"] += len(lps)
         self.tracer.record_host(EventType.SWAP_IN, rid, len(lps))
 
-    def _refresh_row(self, lane: int, req: Request):
+    def _refresh_row(self, lane: int, req: SeqState):
         """Rebuild a lane's repeat-padded host block-table row from the
         pool (through the RAB translate path) and mark it for upload."""
         pool, rid = self._pool(req), req.rid
@@ -436,7 +509,7 @@ class PagedServer:
         self._bt_host[lane, n_pages:] = last
         self._dirty.add(lane)
 
-    def _register_prompt_pages(self, active: List[Request],
+    def _register_prompt_pages(self, active: List[SeqState],
                                n_new: np.ndarray):
         """Publish prompt-prefix pages completed this iteration into the
         prefix index (full pages as they fill; the partial tail page once
@@ -456,8 +529,41 @@ class PagedServer:
             if written == len(r.prompt) and written % ps:
                 pool.register_page(r.rid, written // ps, r.prompt)
 
-    def _finish(self, req: Request):
+    # ------------------------------------------------------------- finish --
+    def _emit(self, req: SeqState, toks) -> tuple:
+        """Append generated tokens to ``req``, honouring stop tokens and
+        the token budget.  Returns (kept tokens, finish_reason or None);
+        a stop token IS included in the output (like an EOS) and wins over
+        the length bound when both trigger on the same token."""
+        kept: List[int] = []
+        reason = None
+        stop = req.sampling.stop_tokens
+        for t in toks:
+            t = int(t)
+            req.out.append(t)
+            kept.append(t)
+            if t in stop:
+                reason = FINISH_STOP
+                break
+            if len(req.out) >= req.max_new:
+                reason = FINISH_LENGTH
+                break
+        return kept, reason
+
+    def _result(self, req: SeqState) -> GenerationResult:
+        return GenerationResult(
+            rid=req.rid, prompt=tuple(req.prompt), tokens=tuple(req.out),
+            finish_reason=req.finish_reason or FINISH_LENGTH,
+            prefix_hit_tokens=req.prefix_hit_tokens,
+            preemptions=req.preemptions, cluster=req.cluster,
+            spec_proposed=req.spec_proposed,
+            spec_accepted=req.spec_accepted,
+            spec_rejected=req.spec_rejected,
+            spec_k_final=req.spec_k_cur)
+
+    def _finish(self, req: SeqState, reason: str):
         req.done = True
+        req.finish_reason = reason
         self.tracer.record_host(EventType.REQUEST_FINISH, req.rid,
                                 len(req.out))
         self._pool(req).release(req.rid)
@@ -466,10 +572,39 @@ class PagedServer:
         self.active_dev = self.active_dev.at[req.lane].set(0)
         self.len_dev = self.len_dev.at[req.lane].set(0)
         self._h2d(1)
-        self.finished.append(req)
+        self.finished.append(self._result(req))
+
+    def _abort(self, req: SeqState) -> TokenDelta:
+        """Release a still-queued/running request at the iteration cap and
+        surface it as a finished-with-``aborted`` result instead of
+        silently dropping it."""
+        req.done = True
+        req.finish_reason = FINISH_ABORTED
+        self._pool(req).release(req.rid)
+        if req.lane >= 0:
+            self.lanes[req.lane] = None
+            self.active_dev = self.active_dev.at[req.lane].set(0)
+            self.len_dev = self.len_dev.at[req.lane].set(0)
+            req.lane = -1
+            self._h2d(1)
+        if req.swapped:
+            # parked payload is dropped, not restored — no swap-in traffic
+            self.backing.discard(req.rid)
+            req.swapped = None
+        self.tracer.record_host(EventType.REQUEST_FINISH, req.rid,
+                                len(req.out))
+        self.tracer.record_host(EventType.PAGE_RELEASE, req.rid, 0)
+        self.finished.append(self._result(req))
+        return TokenDelta(rid=req.rid, event="abort",
+                          finish_reason=FINISH_ABORTED)
+
+    def _abort_all(self) -> List[TokenDelta]:
+        pending = [r for r in self.lanes if r is not None] + self.queue
+        self.queue = []
+        return [self._abort(r) for r in pending]
 
     # --------------------------------------------------------------- step --
-    def _account_appends(self, active: List[Request], n_new: np.ndarray):
+    def _account_appends(self, active: List[SeqState], n_new: np.ndarray):
         """Host-side page accounting for this iteration's candidate writes:
         allocate (through the RAB translate path) every page the new tokens
         touch, apply any copy-on-write remaps, and push only the dirty
@@ -509,7 +644,12 @@ class PagedServer:
             self._h2d(len(rows))    # one dispatch, len(rows) rows uploaded
 
     def step(self) -> bool:
-        """One engine iteration.  Returns False when fully idle."""
+        """One engine iteration.  Returns False when fully idle.
+
+        Deltas accumulate on ``self._deltas`` (drained by ``generate()``
+        after every step) rather than being cleared here, so events
+        recorded *between* iterations — a ``preempt()`` or ``submit()``
+        from the caller's generate-loop body — still reach the stream."""
         self._admit()
         active = [r for r in self.lanes if r is not None]
         if not active:
@@ -541,54 +681,71 @@ class PagedServer:
 
         self._account_appends(active, n_new)
 
+        smp = any(not r.sampling.greedy for r in active)
         if decode_only:
             # sync-free: every input already lives on device
-            self.last_tok, self.kv_pages, self.len_dev = self._decode_step(
-                self.params, self.kv_pages, self.bt_dev, self.len_dev,
-                self.active_dev, self.last_tok)
+            self.last_tok, self.kv_pages, self.len_dev = \
+                self._decode_step[smp](
+                    self.params, self.kv_pages, self.bt_dev, self.len_dev,
+                    self.active_dev, self.last_tok, self.seed_dev,
+                    self.temp_dev, self.topk_dev, self.topp_dev)
         else:
             self._h2d(1)            # the prompt-chunk feed bundle
-            self.last_tok, self.kv_pages, self.len_dev = self._chunk_step(
-                self.params, self.kv_pages, self.bt_dev, self.len_dev,
-                jnp.asarray(n_new), jnp.asarray(feed), self.last_tok,
-                jnp.asarray(use_last))
+            self.last_tok, self.kv_pages, self.len_dev = \
+                self._chunk_step[smp](
+                    self.params, self.kv_pages, self.bt_dev, self.len_dev,
+                    jnp.asarray(n_new), jnp.asarray(feed), self.last_tok,
+                    jnp.asarray(use_last), self.seed_dev, self.temp_dev,
+                    self.topk_dev, self.topp_dev)
 
         tok = np.asarray(self.last_tok)     # one pull per iteration
         self._d2h(1)
 
         for r in list(active):
             i = r.lane
+            reason = None
+            kept: List[int] = []
             if r.fed < len(r.prompt):
                 r.fed += int(n_new[i])
                 if r.fed == len(r.prompt):
-                    r.out.append(int(tok[i]))
+                    kept, reason = self._emit(r, [int(tok[i])])
             else:
-                r.out.append(int(tok[i]))
-            if len(r.out) >= r.max_new:
-                self._finish(r)
+                kept, reason = self._emit(r, [int(tok[i])])
+            if kept or reason:
+                self._delta(r.rid, kept, reason=reason)
+            if reason:
+                self._finish(r, reason)
         return True
 
     # -------------------------------------------------------- speculation --
-    def _spec_wanted(self, active: List[Request]) -> bool:
+    def _spec_wanted(self, active: List[SeqState]) -> bool:
         """Draft this iteration?  Only when speculation is configured,
         every active lane is in the decode phase (mixed prefill iterations
-        keep the plain chunk path), and nothing is waiting for admission —
-        a non-empty queue is preemption pressure: lanes should not widen
-        their verify window while other work is starved."""
+        keep the plain chunk path), at least one lane decodes greedily
+        (sampled lanes never draft — greedy verification could not accept
+        their drafts — but they ride along in the verify step, whose
+        bonus-token sampler matches the plain decode step exactly), and
+        nothing is waiting for admission — a non-empty queue is preemption
+        pressure: lanes should not widen their verify window while other
+        work is starved."""
         return (self.spec_k > 0 and not self.queue
-                and all(r.fed >= len(r.prompt) for r in active))
+                and all(r.fed >= len(r.prompt) for r in active)
+                and any(r.sampling.greedy for r in active))
 
-    def _propose(self, active: List[Request]):
+    def _propose(self, active: List[SeqState]):
         """Collect per-lane draft proposals into a fixed-width (B, spec_k)
-        matrix (fixed so the verify step compiles once).  A lane's draft
-        depth is its adaptive ``spec_k_cur`` capped by the tokens it still
-        owes (``accepted + 1 <= remaining`` must hold, so at most
+        matrix (fixed so the verify step compiles once).  Sampled lanes
+        never propose; a greedy lane's draft depth is its adaptive
+        ``spec_k_cur`` capped by the tokens it still owes
+        (``accepted + 1 <= remaining`` must hold, so at most
         ``remaining - 1`` drafts).  Returns (None, None) when no lane
         proposed anything — the plain decode step is strictly cheaper."""
         drafts = np.zeros((self.max_lanes, self.spec_k), np.int32)
         n_spec = np.zeros((self.max_lanes,), np.int32)
         any_draft = False
         for r in active:
+            if not r.sampling.greedy:
+                continue
             rem = r.max_new - len(r.out)
             cap = min(r.spec_k_cur, rem - 1, self.spec_k)
             if cap <= 0:
@@ -601,7 +758,7 @@ class PagedServer:
             any_draft = True
         return (drafts, n_spec) if any_draft else (None, None)
 
-    def _spec_iteration(self, active: List[Request], drafts: np.ndarray,
+    def _spec_iteration(self, active: List[SeqState], drafts: np.ndarray,
                         n_spec: np.ndarray):
         """One draft-verify-rollback engine iteration.
 
@@ -612,7 +769,9 @@ class PagedServer:
         kept tokens: pages wholly beyond the kept length are unmapped and
         re-credited to the reservation.  Device lengths and the last
         sampled token are updated inside the jitted step from the
-        acceptance itself, so the only pull is the one verdict array."""
+        acceptance itself, so the only pull is the one verdict array.
+        Sampled lanes participate with zero drafts: they advance exactly
+        one position-folded sampled token, unchanged from plain decode."""
         self.spec_iterations += 1
         lens0 = {r.rid: self._pool(r).seq_len[r.rid] for r in active}
         n_new = np.zeros((self.max_lanes,), np.int32)
@@ -626,10 +785,13 @@ class PagedServer:
         self._account_appends(active, n_new)
 
         self._h2d(1)                # the draft feed bundle
+        smp = any(not r.sampling.greedy for r in active)
         verdict, self.kv_pages, self.last_tok, self.len_dev = \
-            self._spec_step(self.params, self.kv_pages, self.bt_dev,
-                            self.len_dev, self.active_dev, self.last_tok,
-                            jnp.asarray(drafts), jnp.asarray(n_spec))
+            self._spec_step[smp](
+                self.params, self.kv_pages, self.bt_dev, self.len_dev,
+                self.active_dev, self.last_tok, jnp.asarray(drafts),
+                jnp.asarray(n_spec), self.seed_dev, self.temp_dev,
+                self.topk_dev, self.topp_dev)
         v = np.asarray(verdict)     # one pull per iteration
         self._d2h(1)
 
@@ -640,7 +802,9 @@ class PagedServer:
             a = int(v[i, K + 1])
             emitted = [int(t) for t in drafts[i, :a]] + [int(v[i, a])]
             freed = self._pool(r).trim(r.rid, lens0[r.rid] + a + 1)
-            r.out.extend(emitted)
+            kept, reason = self._emit(r, emitted)
+            self._delta(r.rid, kept, event="spec" if k_i else "token",
+                        data=a, reason=reason)
             if k_i:
                 self.tracer.record_host(EventType.SPEC_ACCEPT, r.rid, a)
                 self.spec_accepted += a
@@ -659,15 +823,41 @@ class PagedServer:
                     r.spec_k_cur = max(1, r.spec_k_cur // 2)
             if freed:
                 self._refresh_row(i, r)
-            if len(r.out) >= r.max_new:
-                self._finish(r)
+            if reason:
+                self._finish(r, reason)
 
-    def run(self, max_iters: int = 10_000):
+    # ---------------------------------------------------------- frontend --
+    def generate(self, requests: Iterable[GenerationRequest] = (),
+                 max_iters: Optional[int] = None) -> Iterator[TokenDelta]:
+        """Submit ``requests`` and stream the engine: yields a
+        :class:`TokenDelta` for every request-visible increment (new
+        tokens, prefix-cache hits, preemptions, speculation verdicts) as
+        each engine iteration completes, instead of making callers poll
+        ``finished``.  The concatenation of a request's token deltas is
+        exactly its final ``GenerationResult.tokens``.  When ``max_iters``
+        is hit, still-queued/running requests are aborted (surfaced with
+        ``finish_reason="aborted"``), never silently dropped."""
+        for q in requests:
+            self.submit(q)
         it = 0
-        while self.step():
+        while True:
+            busy = self.step()
+            # yield from the live list: deltas the caller's loop body
+            # triggers mid-yield (submit/preempt) are picked up too
+            yield from self._deltas
+            self._deltas = []
+            if not busy:
+                return
             it += 1
-            if it >= max_iters:
-                break
+            if max_iters is not None and it >= max_iters:
+                yield from self._abort_all()
+                return
+
+    def run(self, max_iters: int = 10_000) -> List[GenerationResult]:
+        """Drain the engine (``generate`` with nobody watching the stream)
+        and return every result this engine has produced."""
+        for _ in self.generate(max_iters=max_iters):
+            pass
         return self.finished
 
 
@@ -712,17 +902,49 @@ def _layer_mlp(cfg, lp, x):
     return x + L.mlp_forward(cfg, lp["mlp"], h)
 
 
-def _paged_forward_greedy(cfg: ArchConfig, use_kernel: bool,
-                          pages_per_step: int, interpret: bool,
-                          num_pages: int, params, kv_pages, bt, lens, n_new,
-                          feed, last_tok, use_last, *, axis_name=None):
+def _sample_tokens(logits, seeds, pos, temps, top_ks, top_ps):
+    """Per-lane token selection from (B, V) logits.
+
+    Temperature-0 lanes take exact greedy argmax (the historical engine
+    path, byte-identical); sampled lanes divide by temperature, apply
+    top-k then top-p truncation and draw categorically with
+    ``fold_in(PRNGKey(seed), pos)`` — ``pos`` is the token's absolute
+    sequence position, so a lane's draw is reproducible from (seed,
+    position) alone no matter how the scheduler chunked, preempted or
+    sharded the request."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(lg, seed, p, t, tk, tp):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), p)
+        V = lg.shape[-1]
+        lg = lg / jnp.maximum(t, 1e-6)
+        desc = jnp.sort(lg)[::-1]
+        kth = desc[jnp.clip(tk - 1, 0, V - 1)]
+        lg = jnp.where((tk > 0) & (lg < kth), -jnp.inf, lg)
+        probs = jax.nn.softmax(lg)
+        sp = jnp.sort(probs)[::-1]
+        # nucleus: keep the smallest prefix of descending probs whose mass
+        # reaches tp (the mass of strictly-larger probs must be < tp)
+        keep = (jnp.cumsum(sp) - sp) < tp
+        thresh = jnp.min(jnp.where(keep, sp, jnp.inf))
+        lg = jnp.where(probs >= thresh, lg, -jnp.inf)
+        return jax.random.categorical(key, lg).astype(jnp.int32)
+
+    sampled = jax.vmap(one)(logits, seeds, pos, temps, top_ks, top_ps)
+    return jnp.where(temps > 0.0, sampled, greedy)
+
+
+def _paged_forward(cfg: ArchConfig, use_kernel: bool,
+                   pages_per_step: int, interpret: bool,
+                   num_pages: int, params, kv_pages, bt, lens, n_new,
+                   feed, last_tok, use_last, *, axis_name=None):
     """Shared forward for the chunk / decode / spec-verify steps: consume up
     to C tokens per lane (prompt chunks from ``feed``; lanes with
     ``use_last`` take the device-resident previous sample at position 0)
-    and return the greedy next token at EVERY fed position.
+    and return the logits at EVERY fed position.
 
     kv_pages: (L, P+1, 2, page, kv, hd); bt: (B, n_pages) repeat-padded.
-    Returns (greedy (B, C), kv_pages).
+    Returns (logits (B, C, V), kv_pages).
 
     ``axis_name`` names the tensor-parallel head mesh axis when this runs
     as a ``shard_map`` body (sharded engine): q/k/v/o weights and the pool's
@@ -762,31 +984,46 @@ def _paged_forward_greedy(cfg: ArchConfig, use_kernel: bool,
 
     x = L.norm_forward(cfg, params["final_norm"], x)
     logits = L.logits_from_hidden(cfg, params["embed"], x)  # (B,C,V)
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32), kv_pages
+    return logits, kv_pages
 
 
 def _paged_chunk_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
                       interpret: bool, num_pages: int, params, kv_pages,
-                      bt, lens, n_new, feed, last_tok, use_last, *,
-                      axis_name=None):
+                      bt, lens, n_new, feed, last_tok, use_last, seeds,
+                      temps, top_ks, top_ps, *, axis_name=None,
+                      sample=True):
     """Consume up to C tokens per lane: prompt chunks from ``feed``, decode
-    lanes (``use_last``) from the device-resident previous sample.
+    lanes (``use_last``) from the device-resident previous sample; the next
+    token is selected at the last fed position by the per-lane sampling
+    policy (greedy argmax for temperature-0 lanes).  ``sample`` is a
+    compile-time flag: the host dispatches the False variant when every
+    active lane is greedy, so the historical hot path never traces the
+    sampler at all.
 
     Returns (sampled_tokens (B,), kv_pages, new_lens)."""
-    greedy, kv_pages = _paged_forward_greedy(
+    logits, kv_pages = _paged_forward(
         cfg, use_kernel, pages_per_step, interpret, num_pages, params,
         kv_pages, bt, lens, n_new, feed, last_tok, use_last,
         axis_name=axis_name)
     row = jnp.maximum(n_new - 1, 0)
-    nxt = jnp.take_along_axis(greedy, row[:, None], axis=1)[:, 0]
+    last_logits = jnp.take_along_axis(
+        logits, row[:, None, None], axis=1)[:, 0]           # (B,V)
+    if sample:
+        # the sampled token's absolute position is new_lens: fold there so
+        # the draw is chunking/scheduling-independent
+        nxt = _sample_tokens(last_logits, seeds, lens + n_new, temps,
+                             top_ks, top_ps)
+    else:
+        nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
     nxt = jnp.where(n_new > 0, nxt, last_tok)   # idle lanes keep their token
     return nxt, kv_pages, lens + n_new
 
 
 def _paged_spec_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
                      interpret: bool, num_pages: int, params, kv_pages,
-                     bt, lens, active, last_tok, drafts, n_spec, *,
-                     axis_name=None):
+                     bt, lens, active, last_tok, drafts, n_spec, seeds,
+                     temps, top_ks, top_ps, *, axis_name=None,
+                     sample=True):
     """Speculative verify step: score all K+1 candidate positions of every
     lane in ONE chunked forward and count the accepted draft prefix.
 
@@ -795,34 +1032,48 @@ def _paged_spec_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
     them (the rest are dead weight routed to the trash page by the write
     coords).  Greedy verification: draft d_{j+1} is accepted iff every
     earlier draft was and d_{j+1} equals the greedy token after position j
-    — so the accepted prefix plus the bonus token ``greedy[accepted]`` is
-    exactly the plain greedy continuation (parity by construction).
-    Lengths advance by ``accepted + 1`` on device; the host applies the
-    same trim to the pool.
+    — so the accepted prefix plus the bonus token is exactly the plain
+    greedy continuation (parity by construction).  The bonus token at
+    position ``accepted`` goes through the same position-folded sampler
+    the chunk step uses: for the greedy lanes that drafted it IS the
+    greedy token, and for sampled lanes riding along with zero drafts it
+    is the identical draw plain decode would have made.  Lengths advance
+    by ``accepted + 1`` on device; the host applies the same trim to the
+    pool.
 
     Returns (verdict (B, K+2), kv_pages, last_tok, new_lens) where
-    ``verdict[:, :K+1]`` is the greedy token at each position and
-    ``verdict[:, K+1]`` the accepted count."""
+    ``verdict[:, :K+1]`` holds the per-position verify tokens (with the
+    bonus token at column ``accepted``) and ``verdict[:, K+1]`` the
+    accepted count."""
     B, K = drafts.shape
     feed = jnp.concatenate([jnp.zeros((B, 1), jnp.int32), drafts], axis=1)
     n_new = jnp.where(active == 1, n_spec + 1, 0)
-    greedy, kv_pages = _paged_forward_greedy(
+    logits, kv_pages = _paged_forward(
         cfg, use_kernel, pages_per_step, interpret, num_pages, params,
         kv_pages, bt, lens, n_new, feed, last_tok, active,
         axis_name=axis_name)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     idx = jnp.arange(K, dtype=jnp.int32)[None, :]
     ok = (drafts == greedy[:, :K]) & (idx < n_spec[:, None])
     accepted = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
     new_lens = lens + jnp.where(active == 1, accepted + 1, 0)
-    last = jnp.take_along_axis(greedy, accepted[:, None], axis=1)[:, 0]
-    last = jnp.where(active == 1, last, last_tok)
-    verdict = jnp.concatenate([greedy, accepted[:, None]], axis=1)
+    bonus_logits = jnp.take_along_axis(
+        logits, accepted[:, None, None], axis=1)[:, 0]      # (B,V)
+    if sample:
+        bonus = _sample_tokens(bonus_logits, seeds, lens + accepted + 1,
+                               temps, top_ks, top_ps)
+    else:       # all-greedy batch: the bonus token IS the greedy token
+        bonus = jnp.argmax(bonus_logits, axis=-1).astype(jnp.int32)
+    last = jnp.where(active == 1, bonus, last_tok)
+    toks = greedy.at[jnp.arange(B), accepted].set(last)
+    verdict = jnp.concatenate([toks, accepted[:, None]], axis=1)
     return verdict, kv_pages, last, new_lens
 
 
 def _paged_decode_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
                        interpret: bool, num_pages: int, params, kv_pages,
-                       bt, lens, active, last_tok, *, axis_name=None):
+                       bt, lens, active, last_tok, seeds, temps, top_ks,
+                       top_ps, *, axis_name=None, sample=True):
     """One decode token for every active lane, entirely from device state —
     the C=1 case of the chunk step (mirroring paged_decode_fwd, which is the
     C=1 case of the prefill kernel), with every lane fed its device-resident
@@ -833,4 +1084,5 @@ def _paged_decode_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
     return _paged_chunk_step(
         cfg, use_kernel, pages_per_step, interpret, num_pages, params,
         kv_pages, bt, lens, active, jnp.zeros((B, 1), jnp.int32), last_tok,
-        jnp.ones((B,), jnp.int32), axis_name=axis_name)
+        jnp.ones((B,), jnp.int32), seeds, temps, top_ks, top_ps,
+        axis_name=axis_name, sample=sample)

@@ -21,32 +21,42 @@ Mapping back to the paper:
 * **one program, C clusters** (§3.2's shard_map discipline) — the jitted
   chunk/decode steps of ``runtime.server`` run unchanged as ``shard_map``
   bodies; lanes and their device-resident state (block tables, lengths,
-  sampled tokens) shard over ``cluster``, attention heads GQA-aware over
-  ``head`` (the only collective is one psum of the attention output per
-  layer); with C = H = 1 the engine is token-for-token identical to the
-  unsharded ``PagedServer``;
+  sampled tokens, per-lane sampling policy) shard over ``cluster``,
+  attention heads GQA-aware over ``head`` (the only collective is one psum
+  of the attention output per layer); with C = H = 1 the engine is
+  token-for-token identical to the unsharded ``PagedServer`` — including
+  sampled lanes, whose PRNG keys fold by (seed, position) and therefore
+  never see the mesh;
 * **tracing** (§2.3.1) — placement and the per-iteration cross-cluster
   token gather emit ``CLUSTER_DISPATCH`` / ``ALL_GATHER`` events, analyzed
   by ``core.analysis.layer2_cluster_balance``.
+
+Configuration flows through the same :class:`~repro.runtime.EngineConfig`
+as the unsharded engine (``clusters`` / ``heads`` / ``mesh`` select the
+mesh; ``make_engine`` picks this class whenever the spec wants one); the
+old keyword sprawl survives one more PR behind a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import warnings
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding
+import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.rab import ClusterPagedPool, PagedKVPool, RABConfig
 from repro.core.tracing import EventType, TraceBuffer
 from repro.kernels.paged_attention.ops import validate_head_sharding
-from repro.launch.mesh import ClusterMesh, make_serving_mesh
+from repro.launch.mesh import make_serving_mesh
 from repro.parallel.sharding import cluster_engine_specs
+from repro.runtime.api import EngineConfig, TokenDelta
 from repro.runtime.server import (
-    PagedServer, Request, _paged_chunk_step, _paged_decode_step,
+    PagedServer, SeqState, _paged_chunk_step, _paged_decode_step,
     _paged_spec_step,
 )
 
@@ -56,41 +66,38 @@ __all__ = ["ShardedPagedServer"]
 class ShardedPagedServer(PagedServer):
     """``PagedServer`` sharded over a ``("cluster", "head")`` device mesh.
 
-    ``num_pages`` and ``max_lanes`` are *per cluster* (so a 1-cluster
-    sharded engine is configured exactly like the unsharded one); the
-    fused device slab holds ``C * (num_pages + 1)`` pages — each cluster's
-    contiguous block ends with its own trash page — sharded over the
-    ``cluster`` axis, kv heads over ``head``.
+    ``EngineConfig.num_pages`` and ``EngineConfig.max_lanes`` are *per
+    cluster* (so a 1-cluster sharded engine is configured exactly like the
+    unsharded one); the fused device slab holds ``C * (num_pages + 1)``
+    pages — each cluster's contiguous block ends with its own trash page —
+    sharded over the ``cluster`` axis, kv heads over ``head``.
     """
 
-    def __init__(self, cfg: ArchConfig, params, *,
-                 mesh: Optional[ClusterMesh] = None,
-                 clusters: int = 1, heads: int = 1,
-                 num_pages: int = 64, page_size: int = 8, max_lanes: int = 4,
-                 max_pages_per_seq: int = 16, chunk: int = 16,
-                 pages_per_step: int = 2,
-                 rab_cfg: RABConfig = RABConfig(l1_entries=8, l2_entries=32,
-                                                l2_assoc=4, l2_banks=2),
-                 tracer: Optional[TraceBuffer] = None,
-                 use_kernel: bool = True,
-                 enable_prefix_cache: bool = True,
-                 spec_k: int = 0, drafter=None):
-        cmesh = mesh if mesh is not None else make_serving_mesh(clusters,
-                                                                heads)
+    def __init__(self, cfg: ArchConfig, params,
+                 engine: Optional[EngineConfig] = None, *,
+                 tracer: Optional[TraceBuffer] = None, **legacy):
+        if legacy:
+            warnings.warn(
+                "ShardedPagedServer(**kwargs) is deprecated — pass an "
+                f"EngineConfig (legacy kwargs: {sorted(legacy)})",
+                DeprecationWarning, stacklevel=2)
+            engine = dataclasses.replace(engine or EngineConfig(), **legacy)
+        elif engine is None:
+            engine = EngineConfig()
+        cmesh = engine.mesh if engine.mesh is not None else \
+            make_serving_mesh(engine.clusters, engine.heads)
         self.cmesh = cmesh
         self.clusters = cmesh.clusters
         self.heads = cmesh.heads
-        self.lanes_per_cluster = max_lanes
-        self._local_pages = num_pages
+        self.lanes_per_cluster = engine.max_lanes
+        self._local_pages = engine.num_pages
         validate_head_sharding(cfg.num_heads, cfg.num_kv_heads, cmesh.heads)
-        super().__init__(cfg, params, num_pages=num_pages,
-                         page_size=page_size,
-                         max_lanes=max_lanes * cmesh.clusters,
-                         max_pages_per_seq=max_pages_per_seq, chunk=chunk,
-                         pages_per_step=pages_per_step, rab_cfg=rab_cfg,
-                         tracer=tracer, use_kernel=use_kernel,
-                         enable_prefix_cache=enable_prefix_cache,
-                         spec_k=spec_k, drafter=drafter)
+        super().__init__(
+            cfg, params,
+            dataclasses.replace(engine,
+                                max_lanes=engine.max_lanes * cmesh.clusters),
+            tracer=tracer)
+        self.engine_cfg = engine        # the per-cluster spec, as given
         self.peak_pages = [0] * cmesh.clusters  # per-cluster occupancy peak
         self._fin_mark = 0
         self._parked_len: dict = {}     # rid -> seq_len across preemption
@@ -110,7 +117,8 @@ class ShardedPagedServer(PagedServer):
     def _build_device_state(self, num_pages: int, pages_per_step: int):
         # the fused slab, re-laid-out: C contiguous (num_pages + 1) blocks
         # (trash page per cluster), pages sharded over `cluster`, kv heads
-        # over `head`; lane state shards its batch dim over `cluster`
+        # over `head`; lane state (incl. the sampling-policy rows) shards
+        # its batch dim over `cluster`
         cfg, C = self.cfg, self.clusters
         L_, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
         dt = jnp.dtype(cfg.param_dtype)
@@ -129,6 +137,14 @@ class ShardedPagedServer(PagedServer):
                                          ns(specs["lane"]))
         self.last_tok = jax.device_put(jnp.zeros((B,), jnp.int32),
                                        ns(specs["lane"]))
+        self.seed_dev = jax.device_put(jnp.zeros((B,), jnp.uint32),
+                                       ns(specs["lane"]))
+        self.temp_dev = jax.device_put(jnp.zeros((B,), jnp.float32),
+                                       ns(specs["lane"]))
+        self.topk_dev = jax.device_put(jnp.zeros((B,), jnp.int32),
+                                       ns(specs["lane"]))
+        self.topp_dev = jax.device_put(jnp.ones((B,), jnp.float32),
+                                       ns(specs["lane"]))
         self.params = jax.tree.map(
             lambda x, s: jax.device_put(x, ns(s)), self.params,
             specs["params"])
@@ -138,38 +154,41 @@ class ShardedPagedServer(PagedServer):
         # page block and local heads — HERO's "the per-cluster body is
         # literally the single-cluster program" discipline
         itp = jax.default_backend() != "tpu"
-        chunk_body = functools.partial(
-            _paged_chunk_step, cfg, self.use_kernel, pages_per_step, itp,
-            num_pages, axis_name="head")
-        decode_body = functools.partial(
-            _paged_decode_step, cfg, self.use_kernel, pages_per_step, itp,
-            num_pages, axis_name="head")
         out_specs = (specs["lane"], specs["kv"], specs["lane"])
-        self._chunk_step = jax.jit(shard_map(
-            chunk_body, mesh=mesh_,
-            in_specs=(specs["params"], specs["kv"], specs["lane2"],
-                      specs["lane"], specs["lane"], specs["lane2"],
-                      specs["lane"], specs["lane"]),
-            out_specs=out_specs, check_rep=False))
-        self._decode_step = jax.jit(shard_map(
-            decode_body, mesh=mesh_,
-            in_specs=(specs["params"], specs["kv"], specs["lane2"],
-                      specs["lane"], specs["lane"], specs["lane"]),
-            out_specs=out_specs, check_rep=False))
+        sampling_specs = (specs["lane"],) * 4   # seeds, temps, topk, topp
+
+        # the same two-variant dispatch as the unsharded engine (all-greedy
+        # batches never trace the sampler), each variant the shard_map'd
+        # single-cluster program; jit is lazy, so only used variants compile
+        def mk(step_fn, in_specs, outs):
+            def one(s):
+                body = functools.partial(
+                    step_fn, cfg, self.use_kernel, pages_per_step, itp,
+                    num_pages, axis_name="head", sample=s)
+                return jax.jit(shard_map(body, mesh=mesh_,
+                                         in_specs=in_specs, out_specs=outs,
+                                         check_rep=False))
+            return {s: one(s) for s in (False, True)}
+
+        self._chunk_step = mk(
+            _paged_chunk_step,
+            (specs["params"], specs["kv"], specs["lane2"], specs["lane"],
+             specs["lane"], specs["lane2"], specs["lane"],
+             specs["lane"]) + sampling_specs, out_specs)
+        self._decode_step = mk(
+            _paged_decode_step,
+            (specs["params"], specs["kv"], specs["lane2"], specs["lane"],
+             specs["lane"], specs["lane"]) + sampling_specs, out_specs)
         if self.spec_k:
             # the speculative verify step is the same shard_map discipline:
             # drafts/verdicts shard their lane dim over `cluster`, the
             # acceptance count is computed shard-locally per lane group
-            spec_body = functools.partial(
-                _paged_spec_step, cfg, self.use_kernel, pages_per_step, itp,
-                num_pages, axis_name="head")
-            self._spec_step = jax.jit(shard_map(
-                spec_body, mesh=mesh_,
-                in_specs=(specs["params"], specs["kv"], specs["lane2"],
-                          specs["lane"], specs["lane"], specs["lane"],
-                          specs["lane2"], specs["lane"]),
-                out_specs=(specs["lane2"], specs["kv"], specs["lane"],
-                           specs["lane"]), check_rep=False))
+            self._spec_step = mk(
+                _paged_spec_step,
+                (specs["params"], specs["kv"], specs["lane2"], specs["lane"],
+                 specs["lane"], specs["lane"], specs["lane2"],
+                 specs["lane"]) + sampling_specs,
+                (specs["lane2"], specs["kv"], specs["lane"], specs["lane"]))
 
     # ---------------------------------------------------------- pool seam --
     def _pool_of(self, cluster: int) -> PagedKVPool:
@@ -178,7 +197,7 @@ class ShardedPagedServer(PagedServer):
     def _capacity_pages(self) -> int:
         return self._local_pages
 
-    def _gpage(self, req: Request, p: int) -> int:
+    def _gpage(self, req: SeqState, p: int) -> int:
         return self.cpool.global_page(req.cluster, p)
 
     # --------------------------------------------------------- scheduler --
@@ -219,7 +238,7 @@ class ShardedPagedServer(PagedServer):
             self.queue.pop(0)
             self._place(head, best[1], best[2])
 
-    def _place(self, req: Request, lane: int, plan: dict):
+    def _place(self, req: SeqState, lane: int, plan: dict):
         self.cpool.place(req.rid, plan["cluster"])
         self.tracer.record_host(EventType.CLUSTER_DISPATCH, req.rid,
                                 plan["cluster"])
@@ -230,7 +249,7 @@ class ShardedPagedServer(PagedServer):
                 self._parked_len.pop(req.rid)
         super()._place(req, lane, plan)
 
-    def _preempt(self, req: Request):
+    def _preempt(self, req: SeqState):
         pool = self._pool(req)
         super()._preempt(req)
         # the victim may be re-placed on ANY cluster (its KV payload is
@@ -239,9 +258,15 @@ class ShardedPagedServer(PagedServer):
         self._parked_len[req.rid] = pool.seq_len.pop(req.rid, 0)
         self.cpool.forget(req.rid)
 
-    def _finish(self, req: Request):
-        super()._finish(req)
+    def _finish(self, req: SeqState, reason: str):
+        super()._finish(req, reason)
         self.cpool.forget(req.rid)
+
+    def _abort(self, req: SeqState) -> TokenDelta:
+        delta = super()._abort(req)
+        self._parked_len.pop(req.rid, None)
+        self.cpool.forget(req.rid)
+        return delta
 
     # --------------------------------------------------------------- step --
     def step(self) -> bool:

@@ -25,6 +25,13 @@ Two drafters:
 Both are stateless with respect to the engine: proposals are recomputed
 from the request's token history each iteration, so preemption/resume and
 rollback need no drafter bookkeeping.
+
+Under the unified generation API, drafting is **greedy-lane-only**: the
+verify step accepts a draft iff it equals the greedy argmax at its
+position, so a ``SamplingParams(temperature > 0)`` lane's drafts could
+never be parity-accepted — the engine simply never asks the drafter for
+such lanes (they ride along in verify iterations with zero drafts,
+advancing by their ordinary position-folded sampled token).
 """
 from __future__ import annotations
 

@@ -27,6 +27,9 @@ def result(**over):
             "spec_off": {"iters_per_generated_token": 0.54},
             "spec_on": {"iters_per_generated_token": 0.46},
         },
+        "sampling": {
+            "greedy": {"iters_per_generated_token": 0.78},
+        },
     }
     for k, v in over.items():
         parts = k.split(".")
@@ -135,3 +138,18 @@ def test_speculation_section_missing_fails(gate):
     fresh = result(**{"speculation": ...})
     base = result(**{"speculation": ...})
     assert gate(base, fresh) == 1
+
+
+def test_sampling_greedy_path_regression_fails(gate):
+    # the unified-API sampler must not inflate the greedy hot path's
+    # iteration structure: +15% on the temperature-0 workload fails
+    fresh = result(**{"sampling.greedy.iters_per_generated_token": 0.9})
+    assert gate(result(), fresh) == 1
+
+
+def test_sampling_metric_new_in_baseline_passes(gate, capsys):
+    # baselines committed before the sampling workload existed must not
+    # chicken/egg-block the PR that introduces it
+    base = result(**{"sampling": ...})
+    assert gate(base, result()) == 0
+    assert "NEW" in capsys.readouterr().out

@@ -1,8 +1,9 @@
-"""Sharded serving engine: 1-cluster parity with the unsharded PR 2 engine
+"""Sharded serving engine: 1-cluster parity with the unsharded engine
 (token-for-token, across page sizes), cluster dispatch tracing/balance,
 GQA head-shard validation, and — in a subprocess with forced virtual
 devices — multi-cluster + head-sharded parity with cluster-local pool
-invariants checked every step."""
+invariants checked every step.  All runs go through the unified
+generation API (``EngineConfig`` + ``make_engine``)."""
 import os
 import subprocess
 import sys
@@ -16,34 +17,47 @@ from repro.core.analysis import layer1_decode, layer2_cluster_balance
 from repro.core.tracing import EventType, TraceBuffer
 from repro.kernels.paged_attention.ops import validate_head_sharding
 from repro.models import model as M
-from repro.runtime import PagedServer, Request, ShardedPagedServer
+from repro.runtime import (
+    EngineConfig, GenerationRequest, SamplingParams, ShardedPagedServer,
+    make_engine,
+)
 
 PROMPTS = [[5, 6, 7, 8, 9, 10, 11], [3, 1, 4, 1, 5], [2, 7], [9, 9, 8]]
 
 
-def _run(cls, cfg, params, *, page_size, use_kernel, tracer=None, **kw):
-    srv = cls(cfg, params, num_pages=32, page_size=page_size, max_lanes=2,
-              max_pages_per_seq=8, chunk=4, use_kernel=use_kernel,
-              tracer=tracer, **kw)
+def _req(rid, prompt, max_new=4, **sampling):
+    return GenerationRequest(rid=rid, prompt=tuple(prompt),
+                             sampling=SamplingParams(max_new=max_new,
+                                                     **sampling))
+
+
+def _run(cfg, params, *, page_size, use_kernel, tracer=None, sharded=False,
+         **kw):
+    srv = make_engine(cfg, params, EngineConfig(
+        num_pages=32, page_size=page_size, max_lanes=2, max_pages_per_seq=8,
+        chunk=4, use_kernel=use_kernel, sharded=sharded, **kw),
+        tracer=tracer)
     for rid, p in enumerate(PROMPTS):
-        srv.submit(Request(rid=rid, prompt=list(p), max_new=4))
+        srv.submit(_req(rid, p, max_new=4))
     done = srv.run()
     assert len(done) == len(PROMPTS)
-    return {r.rid: r.out for r in done}, srv
+    return {r.rid: r.tokens for r in done}, srv
 
 
 @pytest.mark.parametrize("page_size", [4, 8])
 def test_one_cluster_parity_with_unsharded_engine(page_size,
                                                   matrix_use_kernel):
     """The 1-cluster sharded engine must be token-for-token identical to
-    the unsharded PR 2 engine — same scheduling, same kernels, the mesh
+    the unsharded engine — same scheduling, same kernels, the mesh
     collapsed to a single device."""
     cfg = get_config("yi-6b").smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    base, _ = _run(PagedServer, cfg, params, page_size=page_size,
+    base, _ = _run(cfg, params, page_size=page_size,
                    use_kernel=matrix_use_kernel)
-    shard, srv = _run(ShardedPagedServer, cfg, params, page_size=page_size,
-                      use_kernel=matrix_use_kernel, clusters=1, heads=1)
+    shard, srv = _run(cfg, params, page_size=page_size,
+                      use_kernel=matrix_use_kernel, sharded=True,
+                      clusters=1, heads=1)
+    assert isinstance(srv, ShardedPagedServer)
     assert shard == base
     srv.cpool.check_invariants()
     assert srv.pool.free_pages() == 32
@@ -57,13 +71,13 @@ def test_matrix_engine_combination(matrix_page_size, matrix_use_kernel):
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
     def run(chunk):
-        srv = PagedServer(cfg, params, num_pages=32,
-                          page_size=matrix_page_size, max_lanes=2,
-                          max_pages_per_seq=8, chunk=chunk,
-                          use_kernel=matrix_use_kernel)
+        srv = make_engine(cfg, params, EngineConfig(
+            num_pages=32, page_size=matrix_page_size, max_lanes=2,
+            max_pages_per_seq=8, chunk=chunk,
+            use_kernel=matrix_use_kernel))
         for rid, p in enumerate(PROMPTS):
-            srv.submit(Request(rid=rid, prompt=list(p), max_new=3))
-        return {r.rid: r.out for r in srv.run()}
+            srv.submit(_req(rid, p, max_new=3))
+        return {r.rid: r.tokens for r in srv.run()}
 
     assert run(1) == run(4)
 
@@ -73,9 +87,9 @@ def test_cluster_dispatch_tracing_and_balance(matrix_page_size,
     cfg = get_config("yi-6b").smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     tracer = TraceBuffer(capacity=1 << 14)
-    out, srv = _run(ShardedPagedServer, cfg, params,
-                    page_size=matrix_page_size, use_kernel=matrix_use_kernel,
-                    tracer=tracer, clusters=1)
+    out, srv = _run(cfg, params, page_size=matrix_page_size,
+                    use_kernel=matrix_use_kernel, tracer=tracer,
+                    sharded=True, clusters=1)
     events = layer1_decode(tracer.drain())
     kinds = [e.etype for e in events]
     assert kinds.count(EventType.CLUSTER_DISPATCH) == len(PROMPTS)
@@ -105,10 +119,9 @@ def test_head_axis_must_divide_kv_heads():
     cfg = get_config("yi-6b").smoke()       # Kv = 2
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     with pytest.raises(ValueError):
-        ShardedPagedServer(cfg, params, clusters=1,
-                           heads=max(3, len(jax.devices())),
-                           num_pages=8, page_size=4, max_lanes=1,
-                           max_pages_per_seq=4)
+        ShardedPagedServer(cfg, params, EngineConfig(
+            clusters=1, heads=max(3, len(jax.devices())), num_pages=8,
+            page_size=4, max_lanes=1, max_pages_per_seq=4))
 
 
 _MULTI_CLUSTER_SCRIPT = textwrap.dedent("""
@@ -117,17 +130,22 @@ _MULTI_CLUSTER_SCRIPT = textwrap.dedent("""
     assert len(jax.devices()) >= 8, jax.devices()
     from repro.configs import get_config
     from repro.models import model as M
-    from repro.runtime import PagedServer, Request, ShardedPagedServer
+    from repro.runtime import (EngineConfig, GenerationRequest,
+                               SamplingParams, make_engine)
 
     cfg = get_config("yi-6b").smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     prompts = [[5, 6, 7, 8, 9, 10, 11], [3, 1, 4, 1, 5], [2, 7], [9, 9, 8]]
 
-    def run(cls, preempt=False, **kw):
-        srv = cls(cfg, params, num_pages=16, page_size=4, max_lanes=2,
-                  max_pages_per_seq=8, chunk=4, use_kernel=False, **kw)
+    def run(preempt=False, sampled_rid=None, **kw):
+        srv = make_engine(cfg, params, EngineConfig(
+            num_pages=16, page_size=4, max_lanes=2, max_pages_per_seq=8,
+            chunk=4, use_kernel=False, **kw))
         for rid, p in enumerate(prompts):
-            srv.submit(Request(rid=rid, prompt=list(p), max_new=3))
+            sp = SamplingParams(max_new=3) if rid != sampled_rid else \\
+                SamplingParams(max_new=3, temperature=0.8, seed=13)
+            srv.submit(GenerationRequest(rid=rid, prompt=tuple(p),
+                                         sampling=sp))
         if preempt:
             srv.step()
             assert srv.preempt(0)      # forced mid-flight preemption
@@ -137,30 +155,38 @@ _MULTI_CLUSTER_SCRIPT = textwrap.dedent("""
             assert it < 300
             if hasattr(srv, "cpool"):
                 srv.cpool.check_invariants()
-        return {r.rid: r.out for r in srv.finished}, srv
+        return {r.rid: r.tokens for r in srv.finished}, srv
 
-    base, _ = run(PagedServer)
+    base, _ = run()
     for C, H in [(2, 1), (4, 1), (2, 2)]:
-        out, srv = run(ShardedPagedServer, clusters=C, heads=H)
+        out, srv = run(sharded=True, clusters=C, heads=H)
         assert out == base, (C, H)
         used = {r.cluster for r in srv.finished}
         assert len(used) > 1, "workload never spread across clusters"
-    out, srv = run(ShardedPagedServer, preempt=True, clusters=2)
+    out, srv = run(preempt=True, sharded=True, clusters=2)
     assert out == base and srv.preemptions >= 1
     # speculative decoding under shard_map: same token stream, fewer or
     # equal engine iterations, cluster invariants intact every step
-    out, srv = run(ShardedPagedServer, clusters=2, spec_k=4)
+    out, srv = run(sharded=True, clusters=2, spec_k=4)
     assert out == base, "2-cluster speculative run diverged"
     assert srv.spec_proposed >= srv.spec_accepted >= 0
+    # a sampled lane on a 2-cluster mesh: greedy lanes unchanged, and the
+    # sampled stream matches the unsharded engine (position-folded keys
+    # never see the mesh)
+    sbase, _ = run(sampled_rid=1)
+    sout, _ = run(sampled_rid=1, sharded=True, clusters=2)
+    assert sout == sbase, "sampled lane diverged across the mesh"
+    assert all(sout[r] == base[r] for r in (0, 2, 3)), \\
+        "a greedy lane changed because another lane sampled"
     print("MULTI_CLUSTER_OK")
 """)
 
 
 def test_multi_cluster_parity_subprocess():
     """2- and 4-cluster (and 2x2 head-sharded) engines match the unsharded
-    engine token-for-token, including across a forced preemption — run in
-    a subprocess because the virtual device count must be fixed before the
-    first jax import."""
+    engine token-for-token, including across a forced preemption and with
+    a sampled lane in the mix — run in a subprocess because the virtual
+    device count must be fixed before the first jax import."""
     env = dict(os.environ,
                PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH",
                                                               ""),

@@ -2,7 +2,8 @@
 must be token-for-token identical to spec-off) across page sizes, kernel
 and ref attention paths, under forced mid-decode preemption, and on the
 1-cluster sharded engine; drafter unit behavior; adaptive draft depth;
-the queue-pressure throttle; rollback/trim pool hygiene; and event-stream
+the queue-pressure throttle; the greedy-lane-only drafting restriction
+under the sampling API; rollback/trim pool hygiene; and event-stream
 conservation (proposed == accepted + rolled back)."""
 import jax
 import numpy as np
@@ -16,8 +17,8 @@ from repro.core.rab import PagedKVPool
 from repro.core.tracing import EventType, TraceBuffer
 from repro.models import model as M
 from repro.runtime import (
-    DraftModelDrafter, NGramDrafter, PagedServer, Request,
-    ShardedPagedServer,
+    DraftModelDrafter, EngineConfig, GenerationRequest, NGramDrafter,
+    SamplingParams, make_engine,
 )
 
 MAX_NEW = 16
@@ -41,21 +42,24 @@ def _prompts(vocab, seed=0):
             [5, 6, 7], rng.integers(1, vocab, size=9).tolist()]
 
 
-def _serve(cls, cfg, params, prompts, *, spec_k, page_size=4,
-           use_kernel=False, max_lanes=2, max_new=MAX_NEW, preempt_rid=None,
-           **kw):
-    srv = cls(cfg, params, num_pages=64, page_size=page_size,
-              max_lanes=max_lanes, max_pages_per_seq=16, chunk=8,
-              use_kernel=use_kernel, spec_k=spec_k, **kw)
+def _serve(cfg, params, prompts, *, spec_k, page_size=4, use_kernel=False,
+           max_lanes=2, max_new=MAX_NEW, preempt_rid=None, tracer=None,
+           sampling_for=None, **kw):
+    srv = make_engine(cfg, params, EngineConfig(
+        num_pages=64, page_size=page_size, max_lanes=max_lanes,
+        max_pages_per_seq=16, chunk=8, use_kernel=use_kernel,
+        spec_k=spec_k, **kw), tracer=tracer)
     for rid, p in enumerate(prompts):
-        srv.submit(Request(rid=rid, prompt=list(p), max_new=max_new))
+        sp = sampling_for(rid) if sampling_for is not None else \
+            SamplingParams(max_new=max_new)
+        srv.submit(GenerationRequest(rid=rid, prompt=tuple(p), sampling=sp))
     if preempt_rid is not None:
         for _ in range(6):          # into mid-decode before preempting
             srv.step()
         assert srv.preempt(preempt_rid)
     done = srv.run()
     assert len(done) == len(prompts)
-    return {r.rid: list(r.out) for r in done}, srv
+    return {r.rid: r.tokens for r in done}, srv
 
 
 # --------------------------------------------------------------- drafters --
@@ -102,10 +106,9 @@ def test_draft_model_drafter_self_draft_fully_accepted(cfg, params):
     every engine iteration advances spec_k + 1 tokens."""
     drafter = DraftModelDrafter(cfg, params, target_vocab=cfg.vocab_size)
     prompts = [_prompts(cfg.vocab_size)[1]]
-    base, _ = _serve(PagedServer, cfg, params, prompts, spec_k=0,
-                     max_lanes=1, max_new=8)
-    out, srv = _serve(PagedServer, cfg, params, prompts, spec_k=2,
-                      max_lanes=1, max_new=8, drafter=drafter)
+    base, _ = _serve(cfg, params, prompts, spec_k=0, max_lanes=1, max_new=8)
+    out, srv = _serve(cfg, params, prompts, spec_k=2, max_lanes=1,
+                      max_new=8, drafter=drafter)
     assert out == base
     assert srv.spec_rejected == 0 and srv.spec_accepted > 0
 
@@ -116,10 +119,10 @@ def test_draft_model_drafter_self_draft_fully_accepted(cfg, params):
 def test_spec_parity_across_page_sizes(cfg, params, page_size,
                                        matrix_use_kernel):
     prompts = _prompts(cfg.vocab_size)
-    base, _ = _serve(PagedServer, cfg, params, prompts, spec_k=0,
-                     page_size=page_size, use_kernel=matrix_use_kernel)
-    out, srv = _serve(PagedServer, cfg, params, prompts, spec_k=4,
-                      page_size=page_size, use_kernel=matrix_use_kernel)
+    base, _ = _serve(cfg, params, prompts, spec_k=0, page_size=page_size,
+                     use_kernel=matrix_use_kernel)
+    out, srv = _serve(cfg, params, prompts, spec_k=4, page_size=page_size,
+                      use_kernel=matrix_use_kernel)
     assert out == base
     assert srv.spec_accepted > 0, "workload never accepted a draft"
     srv.pool.check_invariants()
@@ -132,10 +135,10 @@ def test_spec_parity_under_preemption(cfg, params, matrix_page_size,
     out (possibly with just-verified pages), resumes, and still emits the
     exact spec-off token stream."""
     prompts = _prompts(cfg.vocab_size)
-    base, _ = _serve(PagedServer, cfg, params, prompts, spec_k=0,
+    base, _ = _serve(cfg, params, prompts, spec_k=0,
                      page_size=matrix_page_size,
                      use_kernel=matrix_use_kernel)
-    out, srv = _serve(PagedServer, cfg, params, prompts, spec_k=4,
+    out, srv = _serve(cfg, params, prompts, spec_k=4,
                       page_size=matrix_page_size,
                       use_kernel=matrix_use_kernel, preempt_rid=0)
     assert out == base
@@ -149,12 +152,13 @@ def test_spec_parity_sharded_one_cluster(cfg, params, matrix_page_size,
     at 1 cluster it must be token-for-token identical to both the
     unsharded spec-on engine and the plain spec-off stream."""
     prompts = _prompts(cfg.vocab_size)
-    base, _ = _serve(PagedServer, cfg, params, prompts, spec_k=0,
+    base, _ = _serve(cfg, params, prompts, spec_k=0,
                      page_size=matrix_page_size,
                      use_kernel=matrix_use_kernel)
-    out, srv = _serve(ShardedPagedServer, cfg, params, prompts, spec_k=4,
+    out, srv = _serve(cfg, params, prompts, spec_k=4,
                       page_size=matrix_page_size,
-                      use_kernel=matrix_use_kernel, clusters=1, heads=1)
+                      use_kernel=matrix_use_kernel, sharded=True,
+                      clusters=1, heads=1)
     assert out == base
     assert srv.spec_accepted > 0
     srv.cpool.check_invariants()
@@ -179,16 +183,15 @@ class _WrongDrafter:
 
 def test_all_rejected_still_parity_and_adaptive_shrink(cfg, params):
     prompts = [_prompts(cfg.vocab_size)[1]]
-    base, _ = _serve(PagedServer, cfg, params, prompts, spec_k=0,
-                     max_lanes=1)
+    base, _ = _serve(cfg, params, prompts, spec_k=0, max_lanes=1)
     drafter = _WrongDrafter()
-    out, srv = _serve(PagedServer, cfg, params, prompts, spec_k=4,
-                      max_lanes=1, drafter=drafter)
+    out, srv = _serve(cfg, params, prompts, spec_k=4, max_lanes=1,
+                      drafter=drafter)
     assert out == base                  # rejected drafts never leak tokens
     assert srv.spec_accepted == 0
     assert srv.spec_rejected == srv.spec_proposed > 0
     # zero acceptance halves the lane's draft depth down to 1
-    assert srv.finished[0].spec_k_cur == 1
+    assert srv.finished[0].spec_k_final == 1
     srv.pool.check_invariants()
     assert srv.pool.free_pages() == 64  # every rolled-back page went home
 
@@ -196,10 +199,11 @@ def test_all_rejected_still_parity_and_adaptive_shrink(cfg, params):
 def test_adaptive_depth_grows_on_full_acceptance(cfg, params):
     drafter = DraftModelDrafter(cfg, params)      # always fully accepted
     prompts = [_prompts(cfg.vocab_size)[1]]
-    _, srv = _serve(PagedServer, cfg, params, prompts, spec_k=3,
-                    max_lanes=1, max_new=12, drafter=drafter)
+    _, srv = _serve(cfg, params, prompts, spec_k=3, max_lanes=1,
+                    max_new=12, drafter=drafter)
     r = srv.finished[0]
-    assert r.spec_k_cur == 3 and r.spec_rejected == 0
+    assert r.spec_k_final == 3 and r.spec_rejected == 0
+    assert r.spec_accepted > 0
 
 
 def test_drafting_throttled_while_queue_waits(cfg, params):
@@ -209,22 +213,43 @@ def test_drafting_throttled_while_queue_waits(cfg, params):
     rng = np.random.default_rng(1)
     pat = rng.integers(1, cfg.vocab_size, size=3).tolist()
     prompts = [pat * 4, pat * 4]
-    out, srv = _serve(PagedServer, cfg, params, prompts, spec_k=4,
-                      max_lanes=1)
+    out, srv = _serve(cfg, params, prompts, spec_k=4, max_lanes=1)
     r0 = next(r for r in srv.finished if r.rid == 0)
     r1 = next(r for r in srv.finished if r.rid == 1)
     assert r0.spec_proposed == 0, "drafted while the queue was non-empty"
     assert r1.spec_proposed > 0, "never drafted after the queue drained"
-    base, _ = _serve(PagedServer, cfg, params, prompts, spec_k=0,
-                     max_lanes=1)
+    base, _ = _serve(cfg, params, prompts, spec_k=0, max_lanes=1)
     assert out == base
+
+
+def test_sampled_lanes_never_draft_but_ride_along(cfg, params):
+    """The greedy-lane-only restriction: with a sampled request sharing
+    the batch, greedy lanes keep drafting (their stream unchanged from
+    spec-off) and the sampled lane advances by exactly its plain-decode
+    sampled stream — the verify step's bonus-token sampler is
+    position-folded just like the decode step's."""
+    prompts = _prompts(cfg.vocab_size)
+
+    def sampling_for(rid):
+        if rid == 1:
+            return SamplingParams(temperature=0.8, seed=21, max_new=MAX_NEW)
+        return SamplingParams(max_new=MAX_NEW)
+
+    base, _ = _serve(cfg, params, prompts, spec_k=0,
+                     sampling_for=sampling_for)
+    out, srv = _serve(cfg, params, prompts, spec_k=4,
+                      sampling_for=sampling_for)
+    assert out == base
+    sampled = next(r for r in srv.finished if r.rid == 1)
+    assert sampled.spec_proposed == 0, "a sampled lane proposed drafts"
+    assert srv.spec_accepted > 0, "greedy lanes stopped drafting"
+    srv.pool.check_invariants()
 
 
 def test_spec_events_conserve_and_match_counters(cfg, params):
     tracer = TraceBuffer(capacity=1 << 14)
     prompts = _prompts(cfg.vocab_size)
-    _, srv = _serve(PagedServer, cfg, params, prompts, spec_k=4,
-                    tracer=tracer)
+    _, srv = _serve(cfg, params, prompts, spec_k=4, tracer=tracer)
     events = layer1_decode(tracer.drain())
     assert assert_spec_conserves(events)
     sp = layer2_speculation(events)
@@ -242,10 +267,31 @@ def test_spec_respects_max_new_budget(cfg, params):
     remaining - 1, so the last token of every request is engine-sampled."""
     prompts = _prompts(cfg.vocab_size)
     for max_new in (1, 2, 5):
-        out, srv = _serve(PagedServer, cfg, params, prompts, spec_k=4,
-                          max_new=max_new)
+        out, srv = _serve(cfg, params, prompts, spec_k=4, max_new=max_new)
         assert all(len(o) == max_new for o in out.values())
+        assert all(r.finish_reason == "length" for r in srv.finished)
         srv.pool.check_invariants()
+
+
+def test_spec_stop_token_truncates_verified_run(cfg, params):
+    """A stop token emitted inside an accepted draft run must end the
+    request there: later accepted drafts are discarded from the output
+    and the finish_reason is 'stop'."""
+    prompts = [_prompts(cfg.vocab_size)[0]]     # repetitive: drafts accept
+    base, _ = _serve(cfg, params, prompts, spec_k=4, max_lanes=1)
+    tokens = base[0]
+    stop_tok = tokens[min(2, len(tokens) - 1)]
+    cut = tokens.index(stop_tok) + 1
+
+    def sampling_for(rid):
+        return SamplingParams(max_new=MAX_NEW, stop_tokens=(stop_tok,))
+
+    out, srv = _serve(cfg, params, prompts, spec_k=4, max_lanes=1,
+                      sampling_for=sampling_for)
+    assert out[0] == tokens[:cut]
+    assert srv.finished[0].finish_reason == "stop"
+    srv.pool.check_invariants()
+    assert srv.pool.free_pages() == 64
 
 
 # ------------------------------------------------------------ pool rollback --

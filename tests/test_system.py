@@ -24,7 +24,15 @@ from repro.checkpoint import (
 from repro.data import MarkovChainData, SyntheticLMData, Prefetcher
 from repro.models import model as M
 from repro.runtime import Trainer, TrainerConfig, FailureInjector, \
-    PagedServer, Request
+    PagedServer, EngineConfig, GenerationRequest, SamplingParams, \
+    make_engine
+
+
+def _req(rid, prompt, max_new=8, priority=0, **sampling):
+    return GenerationRequest(rid=rid, prompt=tuple(prompt),
+                             sampling=SamplingParams(max_new=max_new,
+                                                     **sampling),
+                             priority=priority)
 
 
 # ---------------------------------------------------------------------------
@@ -196,16 +204,40 @@ def test_elastic_reshard_across_meshes():
 def test_paged_server_continuous_batching():
     cfg = get_config("yi-6b").smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    srv = PagedServer(cfg, params, num_pages=32, page_size=4, max_lanes=2,
-                      max_pages_per_seq=8, use_kernel=False)
+    srv = make_engine(cfg, params, EngineConfig(
+        num_pages=32, page_size=4, max_lanes=2, max_pages_per_seq=8,
+        use_kernel=False))
     for rid in range(4):
-        srv.submit(Request(rid=rid, prompt=[rid + 1, 2, 3], max_new=3))
+        srv.submit(_req(rid, [rid + 1, 2, 3], max_new=3))
     done = srv.run()
     assert len(done) == 4
-    assert all(len(r.out) == 3 for r in done)
+    assert all(len(r.tokens) == 3 for r in done)
+    assert all(r.finish_reason == "length" for r in done)
     # all pages returned (prefix-indexed ones park on the cached-free list)
     assert srv.pool.free_pages() == 32
     assert srv.rab.stats["l1_hits"] + srv.rab.stats["misses"] > 0
+
+
+def test_paged_server_legacy_kwargs_shim():
+    """The pre-EngineConfig kwargs sprawl still works for one PR — same
+    tokens, but under a DeprecationWarning."""
+    from repro.runtime import Request
+
+    cfg = get_config("yi-6b").smoke()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    srv = make_engine(cfg, params, EngineConfig(
+        num_pages=32, page_size=4, max_lanes=2, max_pages_per_seq=8,
+        use_kernel=False))
+    srv.submit(_req(0, [5, 6, 7], max_new=4))
+    base = srv.run()[0].tokens
+    with pytest.warns(DeprecationWarning):
+        legacy = PagedServer(cfg, params, num_pages=32, page_size=4,
+                             max_lanes=2, max_pages_per_seq=8,
+                             use_kernel=False)
+    with pytest.warns(DeprecationWarning):
+        legacy.submit(Request(rid=0, prompt=[5, 6, 7], max_new=4))
+    r = legacy.run()[0]
+    assert tuple(r.out) == base      # .out property mirrors the old field
 
 
 def test_paged_server_kernel_matches_ref():
@@ -213,11 +245,11 @@ def test_paged_server_kernel_matches_ref():
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
     def run(use_kernel):
-        srv = PagedServer(cfg, params, num_pages=32, page_size=4,
-                          max_lanes=2, max_pages_per_seq=8,
-                          use_kernel=use_kernel)
-        srv.submit(Request(rid=0, prompt=[5, 6, 7], max_new=4))
-        return srv.run()[0].out
+        srv = make_engine(cfg, params, EngineConfig(
+            num_pages=32, page_size=4, max_lanes=2, max_pages_per_seq=8,
+            use_kernel=use_kernel))
+        srv.submit(_req(0, [5, 6, 7], max_new=4))
+        return srv.run()[0].tokens
 
     assert run(False) == run(True)
 
@@ -230,20 +262,44 @@ def test_paged_server_chunked_prefill_matches_token_by_token():
     prompts = [[5, 6, 7, 8, 9, 10, 11], [3, 1, 4, 1, 5], [2, 7]]
 
     def run(chunk):
-        srv = PagedServer(cfg, params, num_pages=32, page_size=4,
-                          max_lanes=2, max_pages_per_seq=8, chunk=chunk,
-                          use_kernel=False)
+        srv = make_engine(cfg, params, EngineConfig(
+            num_pages=32, page_size=4, max_lanes=2, max_pages_per_seq=8,
+            chunk=chunk, use_kernel=False))
         for rid, p in enumerate(prompts):
-            srv.submit(Request(rid=rid, prompt=list(p), max_new=3))
+            srv.submit(_req(rid, p, max_new=3))
         done = srv.run()
         assert srv.pool.free_pages() == 32
-        return {r.rid: r.out for r in done}, srv.iterations
+        return {r.rid: r.tokens for r in done}, srv.iterations
 
     base, base_iters = run(1)
     for chunk in (3, 4, 16):
         outs, iters = run(chunk)
         assert outs == base, chunk
         assert iters < base_iters
+
+
+def test_run_iteration_cap_aborts_pending_requests():
+    """Regression: ``run(max_iters)`` used to exit at the cap silently
+    abandoning queued/running requests — they must surface as finished
+    results with ``finish_reason='aborted'`` and leave the pool clean."""
+    cfg = get_config("yi-6b").smoke()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    srv = make_engine(cfg, params, EngineConfig(
+        num_pages=32, page_size=4, max_lanes=2, max_pages_per_seq=8,
+        chunk=4, use_kernel=False))
+    for rid in range(4):        # 4 requests, 2 lanes: two stay queued
+        srv.submit(_req(rid, [rid + 1, 2, 3, 4, 5], max_new=8))
+    done = srv.run(max_iters=3)
+    assert len(done) == 4, "requests were dropped at the iteration cap"
+    reasons = {r.rid: r.finish_reason for r in done}
+    assert all(v == "aborted" for v in reasons.values()), reasons
+    # aborted mid-prefill/queued requests release everything they held
+    assert srv.pool.free_pages() == 32
+    assert len(srv.backing) == 0
+    assert not srv.queue and all(x is None for x in srv.lanes)
+    # and a fresh submission still serves normally afterwards
+    srv.submit(_req(9, [7, 7, 7], max_new=2))
+    assert srv.run()[-1].finish_reason == "length"
 
 
 @pytest.mark.parametrize("page_size", [4, 8])
@@ -260,16 +316,15 @@ def test_prefix_cache_parity_and_forced_preemption(page_size):
 
     def run(enable, preempt_rid=None):
         tracer = TraceBuffer()
-        srv = PagedServer(cfg, params, num_pages=32, page_size=page_size,
-                          max_lanes=2, max_pages_per_seq=8, chunk=4,
-                          use_kernel=False, enable_prefix_cache=enable,
-                          tracer=tracer)
-        srv.submit(Request(rid=0, prompt=list(prompts[0]), max_new=4))
+        srv = make_engine(cfg, params, EngineConfig(
+            num_pages=32, page_size=page_size, max_lanes=2,
+            max_pages_per_seq=8, chunk=4, use_kernel=False,
+            enable_prefix_cache=enable), tracer=tracer)
+        srv.submit(_req(0, prompts[0], max_new=4))
         srv.step()
         srv.step()       # rid 0 reaches decode; its prefix pages published
         for rid in (1, 2):
-            srv.submit(Request(rid=rid, prompt=list(prompts[rid]),
-                               max_new=4))
+            srv.submit(_req(rid, prompts[rid], max_new=4))
         if preempt_rid is not None:
             srv.step()
             assert srv.preempt(preempt_rid)
@@ -280,7 +335,7 @@ def test_prefix_cache_parity_and_forced_preemption(page_size):
             assert it < 500, "engine did not drain"
         srv.pool.check_invariants()
         assert srv.pool.free_pages() == 32
-        return {r.rid: r.out for r in srv.finished}, srv, tracer.drain()
+        return {r.rid: r.tokens for r in srv.finished}, srv, tracer.drain()
 
     base, _, _ = run(False)
     cached, csrv, _ = run(True)
@@ -302,15 +357,16 @@ def test_prefix_cache_never_starves_admission():
     instead of queueing the request forever."""
     cfg = get_config("yi-6b").smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    srv = PagedServer(cfg, params, num_pages=3, page_size=4, max_lanes=2,
-                      max_pages_per_seq=4, chunk=8, use_kernel=False)
-    srv.submit(Request(rid=0, prompt=[1, 2, 3, 4, 5, 6], max_new=1))
+    srv = make_engine(cfg, params, EngineConfig(
+        num_pages=3, page_size=4, max_lanes=2, max_pages_per_seq=4,
+        chunk=8, use_kernel=False))
+    srv.submit(_req(0, [1, 2, 3, 4, 5, 6], max_new=1))
     it = 0
     while srv.step():
         it += 1
         assert it < 100
     assert len(srv.pool.cached_free) > 0    # donor parked indexed pages
-    srv.submit(Request(rid=1, prompt=[1, 2, 3, 4, 5, 6], max_new=3))
+    srv.submit(_req(1, [1, 2, 3, 4, 5, 6], max_new=3))
     while srv.step():
         srv.pool.check_invariants()
         it += 1
@@ -326,21 +382,22 @@ def test_priority_preemption_under_pool_pressure():
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
     def run(num_pages):
-        srv = PagedServer(cfg, params, num_pages=num_pages, page_size=4,
-                          max_lanes=2, max_pages_per_seq=8, chunk=4,
-                          use_kernel=False, enable_prefix_cache=False)
-        srv.submit(Request(rid=0, prompt=[3, 1, 4, 1, 5, 9, 2, 6],
-                           max_new=10, priority=0))
+        srv = make_engine(cfg, params, EngineConfig(
+            num_pages=num_pages, page_size=4, max_lanes=2,
+            max_pages_per_seq=8, chunk=4, use_kernel=False,
+            enable_prefix_cache=False))
+        srv.submit(_req(0, [3, 1, 4, 1, 5, 9, 2, 6], max_new=10,
+                        priority=0))
         srv.step()
         srv.step()
-        srv.submit(Request(rid=1, prompt=[2, 7, 1, 8, 2, 8, 1, 8],
-                           max_new=10, priority=5))
+        srv.submit(_req(1, [2, 7, 1, 8, 2, 8, 1, 8], max_new=10,
+                        priority=5))
         it = 0
         while srv.step():
             srv.pool.check_invariants()
             it += 1
             assert it < 500
-        return {r.rid: r.out for r in srv.finished}, srv
+        return {r.rid: r.tokens for r in srv.finished}, srv
 
     base, _ = run(32)            # ample pool: no preemption needed
     out, srv = run(8)            # each request needs 5 pages; 8 force a swap
