@@ -31,7 +31,16 @@ Workloads, all emitted into ``BENCH_serve.json``:
   temperature/top-p with per-request seeds — seed-reproducibility is
   asserted (two identical sampled runs must match token-for-token), and a
   stop-token request demonstrates the ``finish_reason="stop"`` early
-  exit.
+  exit;
+* a seeded fault storm (the ``degradation`` section): the same engine
+  under injected backing-store faults (transient I/O errors retried with
+  backoff, planted payload corruption caught by checksum at swap-in), a
+  tight deadline, a mid-stream cancel, a forced preemption and
+  admission-time load shedding — goodput, completed-within-deadline
+  fraction, recovery counters, survivor token parity vs the fault-free
+  reference, and a zero unhandled-exception count, all CI-gated.
+  Deadlines here are ``deadline_iters`` only: wall-clock ``deadline_s``
+  would make the committed baseline nondeterministic.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py            # full
     PYTHONPATH=src python benchmarks/serve_throughput.py --smoke    # CI-sized
@@ -61,12 +70,14 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.analysis import (
-    layer1_decode, layer2_cluster_balance, layer2_speculation,
+    assert_faults_contained, layer1_decode, layer2_cluster_balance,
+    layer2_fault_recovery, layer2_speculation,
 )
 from repro.core.tracing import EventType, TraceBuffer
 from repro.models import model as M
 from repro.runtime import (
-    EngineConfig, GenerationRequest, SamplingParams, make_engine,
+    EngineConfig, FaultInjector, FaultSpec, GenerationRequest,
+    SamplingParams, make_engine,
 )
 
 
@@ -338,6 +349,138 @@ def run_preemption_probe(cfg, params, *, page_size, max_new, use_kernel,
     }
 
 
+def run_fault_storm(cfg, params, *, page_size, max_lanes, use_kernel,
+                    requests=8, prompt_len=10, max_new=6, chunk=4,
+                    rate=0.4, seed=23) -> dict:
+    """Seeded fault storm: the graceful-degradation workload.
+
+    A fault-free reference run over a generous pool pins down the
+    canonical greedy outputs.  The storm run then serves the same
+    prompts through a deliberately hostile configuration:
+
+    * a tight pool + mixed priorities + one forced mid-stream
+      preemption, so pages actually travel through the backing store
+      where the ``FaultInjector`` lives;
+    * transient I/O faults at ``rate`` (seeded — the whole storm is
+      deterministic) recovered by bounded retry, plus two *planted*
+      corruption faults on the first swap-out, caught by checksum at
+      swap-in and demoting exactly that request to ``"error"``;
+    * one request with a deadline it cannot meet (``deadline_iters`` —
+      never wall-clock ``deadline_s``, which would be nondeterministic),
+      one cancelled from the streaming loop body, and a queue depth one
+      short of the workload so the lowest-priority newest arrival is
+      shed at admission.
+
+    Everything the gate needs comes back: goodput (completed/submitted),
+    completed-within-deadline fraction, retry/recovery counters, the
+    layer-2 fault-recovery report, survivor token parity against the
+    reference, fault containment, pool invariants, and the
+    unhandled-exception count (must be zero — faults demote requests,
+    they never escape the engine)."""
+    prompts = _make_prompts(requests, prompt_len, cfg.vocab_size, seed=29)
+    per_seq = -(-(prompt_len + max_new) // page_size) + 1
+    ref = run_engine(cfg, params, prompts, chunk=chunk, max_new=max_new,
+                     num_pages=per_seq * requests + 8, page_size=page_size,
+                     max_lanes=max_lanes, max_pages_per_seq=per_seq,
+                     use_kernel=use_kernel, enable_prefix_cache=False)
+    ref_outputs = ref.pop("outputs")
+
+    inj = FaultInjector(
+        seed=seed, rate=rate, kinds=(FaultSpec("io"),),
+        plan={0: FaultSpec("corrupt", op="put"),
+              1: FaultSpec("corrupt", op="put")})
+    tracer = TraceBuffer(capacity=1 << 16)
+    srv = make_engine(cfg, params, EngineConfig(
+        num_pages=per_seq * max_lanes + max(per_seq // 2, 1),
+        page_size=page_size, max_lanes=max_lanes, max_pages_per_seq=per_seq,
+        chunk=chunk, use_kernel=use_kernel, enable_prefix_cache=False,
+        fault_injector=inj, swap_retries=3, retry_backoff_s=0.0,
+        max_queue_depth=requests - 1, watchdog_iters=256), tracer=tracer)
+
+    unhandled = 0
+    unhandled_detail = []
+    deltas = preempts = 0
+    did_cancel = False
+    t0 = time.perf_counter()
+    try:
+        for rid, p in enumerate(prompts):
+            srv.submit(GenerationRequest(
+                rid=rid, prompt=tuple(p), priority=rid % 3,
+                sampling=SamplingParams(max_new=max_new),
+                deadline_iters=3 if rid == 1 else 500))
+        for _ in srv.generate():
+            deltas += 1
+            # all requests arrive up front, so the scheduler alone never
+            # preempts (the highest-priority lanes are already running) —
+            # force checkpoint/restore traffic through the faulty backing
+            # store on a fixed cadence instead
+            if preempts < 4 and deltas % 4 == 2:
+                victim = next((r for r in srv.lanes if r is not None
+                               and not r.done and r.rid not in (1, 2)),
+                              None)
+                if victim is not None:
+                    srv.preempt(victim.rid)
+                    preempts += 1
+            if not did_cancel and deltas >= 5:
+                did_cancel = srv.cancel(2)
+    except Exception as e:        # noqa: BLE001 — the property under test
+        unhandled += 1
+        unhandled_detail.append(f"{type(e).__name__}: {e}")
+    dt = time.perf_counter() - t0
+
+    res = {r.rid: r for r in srv.finished}
+    reasons: dict = {}
+    for r in res.values():
+        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+    survivors = {rid: list(r.tokens) for rid, r in res.items()
+                 if r.finish_reason in ("stop", "length")}
+    parity = all(toks == ref_outputs[rid]
+                 for rid, toks in survivors.items())
+    events = layer1_decode(tracer.drain())
+    recovery = layer2_fault_recovery(events)
+    invariants_ok = True
+    try:
+        srv.pool.check_invariants()
+    except AssertionError as e:
+        invariants_ok = False
+        unhandled_detail.append(f"pool invariants: {e}")
+    return {
+        "workload": {"requests": requests, "prompt_len": prompt_len,
+                     "max_new": max_new, "chunk": chunk,
+                     "fault_rate": rate, "fault_seed": seed,
+                     "tight_deadline_rid": 1, "cancel_rid": 2,
+                     "max_queue_depth": requests - 1},
+        "reference_tokens_per_s": ref["tokens_per_s"],
+        "storm_wall_s": dt,
+        "iterations": srv.iterations,
+        "finish_reasons": reasons,
+        "submitted": requests,
+        "completed": len(survivors),
+        "goodput": len(survivors) / requests,
+        # of the requests the engine actually attempted (not shed at
+        # admission, not cancelled by the client), the fraction that met
+        # their deadline and completed
+        "within_deadline_fraction":
+            len(survivors) / max(requests - srv.shed_count -
+                                 srv.cancelled, 1),
+        "survivor_parity": parity,
+        "unhandled_exceptions": unhandled,
+        "unhandled_detail": unhandled_detail,
+        "faults_injected": inj.report(),
+        "fault_retries": srv.fault_retries,
+        "recovered_faults": srv.recovered_faults,
+        "timeouts": srv.timeouts,
+        "cancelled": srv.cancelled,
+        "errors": srv.errors,
+        "shed": srv.shed_count,
+        "degrades": srv.degrades,
+        "recovery": {k: v for k, v in recovery.items() if k != "requests"},
+        "faults_contained": assert_faults_contained(events),
+        "pool_invariants_ok": invariants_ok,
+        "backing_store_empty": len(srv.backing) == 0,
+    }
+
+
 def run_cluster_sweep(cfg, params, prompts, *, max_clusters, heads, common,
                       unsharded_outputs, trace_events=None) -> dict:
     """Serve the same workload on the sharded engine at 1..max_clusters
@@ -406,10 +549,12 @@ def main(argv=None) -> dict:
         k_prefixes, m_per_prefix, sys_len, user_len = 2, 3, 8, 3
         spec_max_new, spec_reps = 12, 3
         sample_reqs, sample_max_new = 3, 6
+        storm_reqs, storm_max_new = 8, 6
     else:
         k_prefixes, m_per_prefix, sys_len, user_len = 4, 8, 64, 16
         spec_max_new, spec_reps = 32, 6
         sample_reqs, sample_max_new = 8, 16
+        storm_reqs, storm_max_new = 12, 8
 
     cfg = get_config(args.arch).smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -461,6 +606,12 @@ def main(argv=None) -> dict:
                                      use_kernel=use_kernel,
                                      requests=sample_reqs)
 
+    degradation = run_fault_storm(cfg, params, page_size=args.page_size,
+                                  max_lanes=args.max_lanes,
+                                  use_kernel=use_kernel,
+                                  requests=storm_reqs,
+                                  max_new=storm_max_new)
+
     trace_events = {} if args.trace_out else None
     sweep = run_cluster_sweep(
         cfg, params, prompts, max_clusters=args.clusters, heads=args.heads,
@@ -503,6 +654,7 @@ def main(argv=None) -> dict:
         "preemption": preemption,
         "speculation": speculation,
         "sampling": sampling,
+        "degradation": degradation,
         "cluster_sweep": sweep,
     }
     with open(args.out, "w") as f:
@@ -555,6 +707,19 @@ def main(argv=None) -> dict:
           f"reproducible={sa['sampled_reproducible']}  "
           f"stop-token early exit={sa['stop_token_early_exit']} "
           f"({sa['stop_tokens_generated']} tok)")
+    dg = result["degradation"]
+    print(f"fault storm (rate={dg['workload']['fault_rate']}, "
+          f"seed={dg['workload']['fault_seed']}): "
+          f"goodput={dg['goodput']:.2f}  "
+          f"within-deadline={dg['within_deadline_fraction']:.2f}  "
+          f"faults={dg['faults_injected']['injected']} "
+          f"retries={dg['fault_retries']} "
+          f"recovered={dg['recovered_faults']}  "
+          f"timeouts={dg['timeouts']} cancelled={dg['cancelled']} "
+          f"errors={dg['errors']} shed={dg['shed']}  "
+          f"parity={dg['survivor_parity']} "
+          f"contained={dg['faults_contained']} "
+          f"unhandled={dg['unhandled_exceptions']}")
     for C, r in sweep["configs"].items():
         print(f"clusters={C:>2s} (x{sweep['heads']} heads): "
               f"iters/req={r['iters_per_request']:6.1f}  "
@@ -573,6 +738,14 @@ def main(argv=None) -> dict:
     assert sa["sampled_reproducible"], \
         "seeded sampled decoding was not reproducible"
     assert sa["stop_token_early_exit"], "stop token did not end the request"
+    assert dg["unhandled_exceptions"] == 0, \
+        f"fault storm escaped the engine: {dg['unhandled_detail']}"
+    assert dg["survivor_parity"], \
+        "fault-storm survivors diverged from the fault-free reference"
+    assert dg["faults_contained"], \
+        "a faulted request never reached REQUEST_FINISH"
+    assert dg["pool_invariants_ok"] and dg["backing_store_empty"], \
+        "fault storm leaked pool or backing-store state"
     assert sweep["one_cluster_outputs_match_unsharded"] is not False, \
         "1-cluster sharded engine diverged from the unsharded engine"
     print(f"wrote {args.out}")

@@ -15,7 +15,12 @@ fixed workload (unlike wall-clock tokens/s on shared CI runners):
   confirmed (HIGHER is better — the gate is direction-aware);
 * ``sampling.greedy.iters_per_generated_token`` — the temperature-0 path
   of the sampled-decoding workload: the unified-API sampler must keep the
-  greedy hot path's iteration structure intact (lower is better).
+  greedy hot path's iteration structure intact (lower is better);
+* ``degradation.goodput`` — completed/submitted under the seeded fault
+  storm (HIGHER is better);
+* ``degradation.within_deadline_fraction`` — of the requests the engine
+  attempted, the fraction that completed within deadline (HIGHER is
+  better).
 
 Relative rule: a gated metric may not regress by more than
 ``--max-regress`` (default 10%) against the committed baseline.  On top
@@ -27,6 +32,15 @@ regardless of what the baseline says:
   below ``speculation.spec_off.iters_per_generated_token`` — if drafting
   ever stops beating plain decode, the gate fails even if both numbers
   match the baseline.
+
+The degradation section additionally carries absolute gates (fault
+tolerance is a property, not just a trend — a missing ``degradation``
+section fails outright, it is not NEW-tolerated):
+
+* ``degradation.goodput`` >= ``--goodput-floor``;
+* ``degradation.within_deadline_fraction`` >= ``--deadline-floor``;
+* ``degradation.unhandled_exceptions`` == 0 — a fault that escapes the
+  engine instead of demoting one request is an automatic failure.
 
 Robustness contract (tested by ``tests/test_check_bench.py``):
 
@@ -58,9 +72,15 @@ GATED = [
      "spec acceptance rate", "higher"),
     (("sampling", "greedy", "iters_per_generated_token"),
      "greedy-path iters/generated token", "lower"),
+    (("degradation", "goodput"),
+     "fault-storm goodput", "higher"),
+    (("degradation", "within_deadline_fraction"),
+     "fault-storm within-deadline fraction", "higher"),
 ]
 
 SPEC_ACCEPT_FLOOR = 0.25
+GOODPUT_FLOOR = 0.4
+DEADLINE_FLOOR = 0.5
 
 
 def _dig(d, path):
@@ -136,6 +156,49 @@ def check_speculation_absolute(fresh: dict, accept_floor: float) -> bool:
     return ok
 
 
+def check_degradation_absolute(fresh: dict, goodput_floor: float,
+                               deadline_floor: float) -> bool:
+    """Absolute fault-tolerance gates on the fresh result alone.
+
+    Unlike a NEW metric, a *missing* ``degradation`` section fails: the
+    fault storm stopping silently is exactly the regression this gate
+    exists to catch."""
+    dg = fresh.get("degradation")
+    if not isinstance(dg, dict):
+        print("FAIL degradation section missing from fresh result")
+        return False
+    ok = True
+    try:
+        goodput = float(dg["goodput"])
+        within = float(dg["within_deadline_fraction"])
+        unhandled = int(dg["unhandled_exceptions"])
+    except (KeyError, TypeError, ValueError) as e:
+        print(f"FAIL degradation section incomplete in fresh result: {e}")
+        return False
+    if goodput < goodput_floor:
+        print(f"FAIL fault-storm goodput {goodput:.3f} below floor "
+              f"{goodput_floor:.3f}")
+        ok = False
+    else:
+        print(f"OK   fault-storm goodput {goodput:.3f} >= floor "
+              f"{goodput_floor:.3f}")
+    if within < deadline_floor:
+        print(f"FAIL within-deadline fraction {within:.3f} below floor "
+              f"{deadline_floor:.3f}")
+        ok = False
+    else:
+        print(f"OK   within-deadline fraction {within:.3f} >= floor "
+              f"{deadline_floor:.3f}")
+    if unhandled != 0:
+        print(f"FAIL {unhandled} unhandled exception(s) escaped the "
+              f"engine under fault injection: "
+              f"{dg.get('unhandled_detail', [])}")
+        ok = False
+    else:
+        print("OK   zero unhandled exceptions under fault injection")
+    return ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True,
@@ -147,6 +210,11 @@ def main(argv=None) -> int:
     ap.add_argument("--spec-accept-floor", type=float,
                     default=SPEC_ACCEPT_FLOOR,
                     help="absolute floor on speculation.acceptance_rate")
+    ap.add_argument("--goodput-floor", type=float, default=GOODPUT_FLOOR,
+                    help="absolute floor on degradation.goodput")
+    ap.add_argument("--deadline-floor", type=float, default=DEADLINE_FLOOR,
+                    help="absolute floor on "
+                         "degradation.within_deadline_fraction")
     args = ap.parse_args(argv)
 
     base = _load(args.baseline, "baseline")
@@ -164,9 +232,11 @@ def main(argv=None) -> int:
 
     ok = check_relative(base, fresh, args.max_regress)
     ok &= check_speculation_absolute(fresh, args.spec_accept_floor)
+    ok &= check_degradation_absolute(fresh, args.goodput_floor,
+                                     args.deadline_floor)
     if not ok:
         print(f"bench gate FAILED (>{args.max_regress:.0%} regression "
-              f"or absolute speculation gate)")
+              f"or absolute speculation/degradation gate)")
         return 1
     print("bench gate passed")
     return 0

@@ -166,6 +166,75 @@ def assert_spec_conserves(events: List[Event]) -> bool:
     return True
 
 
+def layer2_fault_recovery(events: Iterable[Event]) -> Dict:
+    """Platform: stitch the fault/recovery story from the event stream.
+
+    ``FAULT_INJECT`` carries (rid, kind code 1=io/2=corrupt/3=stall, +8
+    when persistent); ``REQUEST_TIMEOUT`` (rid, iteration);
+    ``REQUEST_SHED`` (rid, queue depth); ``DEGRADE`` (subject, cause:
+    1=drafter disabled, 2=watchdog abort, 3=straggler iteration).
+    Returns aggregate fault counts by kind, timeout/shed/degrade tallies
+    and the per-request fault exposure — including whether each faulted
+    request still reached ``REQUEST_FINISH`` (the containment property
+    :func:`assert_faults_contained` gates on)."""
+    kinds = {1: "io", 2: "corrupt", 3: "stall"}
+    causes = {1: "drafter", 2: "watchdog", 3: "straggler"}
+    per: Dict[int, Dict] = {}
+
+    def row(rid: int) -> Dict:
+        return per.setdefault(rid, {"faults": 0, "kinds": [],
+                                    "persistent": 0, "finished": False})
+
+    out = {
+        "faults": 0,
+        "by_kind": {k: 0 for k in kinds.values()},
+        "persistent_faults": 0,
+        "timeouts": 0,
+        "sheds": 0,
+        "degrades": {c: 0 for c in causes.values()},
+    }
+    for e in events:
+        if e.etype == EventType.FAULT_INJECT:
+            kind = kinds.get(e.a1 & 7, "io")
+            r = row(e.a0)
+            r["faults"] += 1
+            if kind not in r["kinds"]:
+                r["kinds"].append(kind)
+            out["faults"] += 1
+            out["by_kind"][kind] += 1
+            if e.a1 & 8:
+                out["persistent_faults"] += 1
+                r["persistent"] += 1
+        elif e.etype == EventType.REQUEST_TIMEOUT:
+            out["timeouts"] += 1
+            row(e.a0)["timed_out"] = True
+        elif e.etype == EventType.REQUEST_SHED:
+            out["sheds"] += 1
+        elif e.etype == EventType.DEGRADE:
+            out["degrades"][causes.get(e.a1, "watchdog")] += 1
+        elif e.etype == EventType.REQUEST_FINISH and e.a0 in per:
+            per[e.a0]["finished"] = True
+    out["requests"] = dict(sorted(per.items()))
+    return out
+
+
+def assert_faults_contained(events: List[Event]) -> bool:
+    """Fault containment (layer-3, HERO §3.4b style): every request that
+    ever saw an injected fault, deadline timeout or shed decision still
+    reaches a ``REQUEST_FINISH`` event — faults demote or recover
+    individual requests, they never lose one (and never kill the engine,
+    which could not have kept emitting finishes)."""
+    touched = set()
+    finished = set()
+    for e in events:
+        if e.etype in (EventType.FAULT_INJECT, EventType.REQUEST_TIMEOUT,
+                       EventType.REQUEST_SHED):
+            touched.add(e.a0)
+        elif e.etype == EventType.REQUEST_FINISH:
+            finished.add(e.a0)
+    return touched <= finished
+
+
 def assert_swaps_balanced(events: List[Event]) -> bool:
     """Every page swapped out for a request that eventually finished was
     swapped back in first (no request completes on lost KV state)."""

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import zlib
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -47,6 +48,27 @@ def _nbytes(tree: Any) -> int:
     return sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))
 
 
+class BackingStoreError(RuntimeError):
+    """Typed backing-store failure carrying the exact swap operation that
+    broke: (rid, logical page, op).  ``transient`` distinguishes faults
+    worth retrying (injected I/O hiccups) from persistent ones (missing
+    page, double-park, checksum mismatch) which the engine must demote to
+    a per-request ``"error"`` finish instead of retrying forever."""
+
+    def __init__(self, rid: int, lpage: int, op: str, kind: str = "io",
+                 *, transient: bool = False, detail: str = ""):
+        msg = f"backing store {op} failed for rid={rid} lpage={lpage} " \
+              f"[{kind}]"
+        if detail:
+            msg += f": {detail}"
+        super().__init__(msg)
+        self.rid = rid
+        self.lpage = lpage
+        self.op = op
+        self.kind = kind
+        self.transient = transient
+
+
 class HostBackingStore:
     """Host-DRAM backing store for reclaimed KV pages (swap space).
 
@@ -61,23 +83,57 @@ class HostBackingStore:
 
     The store only keeps host copies and byte counters; the engine owns the
     transfers themselves (and traces them as SWAP_OUT / SWAP_IN plus the
-    underlying D2H / H2D events).
-    """
+    underlying H2D / D2H events).
 
-    def __init__(self):
+    Failure semantics: ``put``/``pop`` raise :class:`BackingStoreError`
+    (never a bare ``KeyError`` or a silent overwrite), every parked payload
+    is checksummed at park time and verified on restore (a mismatch is a
+    persistent ``corrupt`` fault), and an optional ``fault_injector``
+    (``runtime.faults.FaultInjector``) perturbs the swap path with seeded,
+    deterministic I/O errors / corruption / stalls for chaos testing."""
+
+    def __init__(self, fault_injector=None):
         self._pages: Dict[Tuple[int, int], np.ndarray] = {}
+        self._sums: Dict[Tuple[int, int], int] = {}
+        self.faults = fault_injector
         self.bytes_out = 0       # device -> host (swap-out)
         self.bytes_in = 0        # host -> device (swap-in)
         self.peak_pages = 0
 
     def put(self, seq: int, lpage: int, payload: np.ndarray):
-        arr = np.asarray(payload)
-        self._pages[(seq, lpage)] = arr
+        key = (seq, lpage)
+        if key in self._pages:
+            raise BackingStoreError(
+                seq, lpage, "put", "overwrite",
+                detail="page is already parked (double swap-out)")
+        arr = np.ascontiguousarray(np.asarray(payload))
+        spec = None
+        if self.faults is not None:
+            spec = self.faults.before("put", seq, lpage)   # may raise/stall
+        self._sums[key] = zlib.crc32(arr.tobytes())
+        if spec is not None and spec.kind == "corrupt":
+            # silent bit-rot after the checksum was taken: the damage is
+            # only discovered at swap-in, as a checksum mismatch
+            arr = arr.copy()
+            arr.view(np.uint8).reshape(-1)[0] ^= 0xFF
+        self._pages[key] = arr
         self.bytes_out += arr.nbytes
         self.peak_pages = max(self.peak_pages, len(self._pages))
 
     def pop(self, seq: int, lpage: int) -> np.ndarray:
-        arr = self._pages.pop((seq, lpage))
+        key = (seq, lpage)
+        if key not in self._pages:
+            raise BackingStoreError(
+                seq, lpage, "pop", "missing",
+                detail="page was never parked (or already restored)")
+        if self.faults is not None:
+            self.faults.before("pop", seq, lpage)          # may raise/stall
+        arr = self._pages.pop(key)
+        crc = self._sums.pop(key)
+        if zlib.crc32(arr.tobytes()) != crc:
+            raise BackingStoreError(
+                seq, lpage, "pop", "corrupt", transient=False,
+                detail="checksum mismatch on restore")
         self.bytes_in += arr.nbytes
         return arr
 
@@ -86,6 +142,7 @@ class HostBackingStore:
         traffic (the abort path: payload is released, never restored)."""
         for k in [k for k in self._pages if k[0] == seq]:
             del self._pages[k]
+            self._sums.pop(k, None)
 
     def __len__(self) -> int:
         return len(self._pages)

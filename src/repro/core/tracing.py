@@ -74,6 +74,15 @@ class EventType(enum.IntEnum):
     SPEC_PROPOSE = 44      # drafter proposal: (rid, drafted tokens)
     SPEC_ACCEPT = 45       # verified acceptance: (rid, accepted tokens)
     SPEC_ROLLBACK = 46     # rejected drafts undone: (rid, rejected tokens)
+    # fault tolerance (HERO's tracing-driven validation: faults are
+    # injected, observed and re-tested through the same event stream the
+    # healthy engine emits — no fault may vanish without a trace)
+    FAULT_INJECT = 47      # injected fault: (rid, kind code | 8*persistent)
+    REQUEST_TIMEOUT = 48   # deadline exceeded: (rid, engine iteration)
+    REQUEST_SHED = 49      # admission-time load shed: (rid, queue depth)
+    DEGRADE = 50           # graceful degradation: (subject, cause code
+    #                        1=drafter disabled, 2=watchdog abort,
+    #                        3=straggler iteration flagged)
 
 
 HOST_TRACER_ID = 255

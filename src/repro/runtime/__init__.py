@@ -3,7 +3,9 @@ from repro.runtime.api import (
     EngineConfig, GenerationRequest, GenerationResult, SamplingParams,
     TokenDelta, make_engine, Request,
     FINISH_STOP, FINISH_LENGTH, FINISH_ABORTED,
+    FINISH_TIMEOUT, FINISH_ERROR, FINISH_SHED,
 )
+from repro.runtime.faults import FaultInjector, FaultSpec
 from repro.runtime.server import PagedServer
 from repro.runtime.sharded_server import ShardedPagedServer
 from repro.runtime.speculative import (
@@ -15,4 +17,5 @@ __all__ = ["Trainer", "TrainerConfig", "FailureInjector", "PagedServer",
            "DraftModelDrafter", "EngineConfig", "GenerationRequest",
            "GenerationResult", "SamplingParams", "TokenDelta",
            "make_engine", "Request", "FINISH_STOP", "FINISH_LENGTH",
-           "FINISH_ABORTED"]
+           "FINISH_ABORTED", "FINISH_TIMEOUT", "FINISH_ERROR",
+           "FINISH_SHED", "FaultInjector", "FaultSpec"]

@@ -39,12 +39,16 @@ __all__ = [
     "EngineConfig", "SamplingParams", "GenerationRequest",
     "GenerationResult", "TokenDelta", "make_engine", "Request",
     "FINISH_STOP", "FINISH_LENGTH", "FINISH_ABORTED",
+    "FINISH_TIMEOUT", "FINISH_ERROR", "FINISH_SHED",
 ]
 
 #: finish reasons a GenerationResult can carry
 FINISH_STOP = "stop"          # a stop token was emitted
 FINISH_LENGTH = "length"      # max_new tokens generated
-FINISH_ABORTED = "aborted"    # run() hit its iteration cap first
+FINISH_ABORTED = "aborted"    # run() iteration cap, or engine.cancel(rid)
+FINISH_TIMEOUT = "timeout"    # deadline_iters / deadline_s exceeded
+FINISH_ERROR = "error"        # per-request fault demotion (engine survives)
+FINISH_SHED = "shed"          # rejected at admission under overload
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,14 +91,27 @@ class SamplingParams:
 @dataclasses.dataclass(frozen=True)
 class GenerationRequest:
     """What a caller submits: prompt + policy.  Immutable — the engine
-    keeps its mutable bookkeeping in a private ``SeqState``."""
+    keeps its mutable bookkeeping in a private ``SeqState``.
+
+    ``deadline_iters`` bounds the request's lifetime in *engine
+    iterations* from submission (deterministic; benchmark-friendly);
+    ``deadline_s`` bounds it in wall-clock seconds.  Either expiring
+    finishes the request with ``finish_reason="timeout"`` — its pages are
+    released through the same refcount/CoW/reservation-aware path as
+    preemption, and tokens generated so far are kept."""
     rid: int
     prompt: Tuple[int, ...]
     sampling: SamplingParams = SamplingParams()
     priority: int = 0           # scheduler class; higher preempts lower
+    deadline_iters: Optional[int] = None    # engine-iteration budget
+    deadline_s: Optional[float] = None      # wall-clock budget (seconds)
 
     def __post_init__(self):
         object.__setattr__(self, "prompt", tuple(self.prompt))
+        if self.deadline_iters is not None and self.deadline_iters < 1:
+            raise ValueError("deadline_iters must be >= 1")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError("deadline_s must be > 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,7 +121,7 @@ class GenerationResult:
     rid: int
     prompt: Tuple[int, ...]
     tokens: Tuple[int, ...]
-    finish_reason: str          # FINISH_STOP / FINISH_LENGTH / FINISH_ABORTED
+    finish_reason: str          # one of the FINISH_* constants
     prefix_hit_tokens: int = 0
     preemptions: int = 0
     cluster: int = 0
@@ -112,6 +129,7 @@ class GenerationResult:
     spec_accepted: int = 0
     spec_rejected: int = 0
     spec_k_final: int = 0       # adaptive draft depth when the request ended
+    error: Optional[str] = None  # diagnostic for FINISH_ERROR / FINISH_TIMEOUT
 
     @property
     def out(self):
@@ -126,7 +144,10 @@ class TokenDelta:
     ``event`` is ``"token"`` (plain decode/prefill emission), ``"spec"``
     (a draft-verify iteration; ``data`` = accepted draft count),
     ``"prefix_hit"`` (``data`` = prompt tokens served from the cache),
-    ``"preempt"`` (``data`` = pages swapped out) or ``"abort"``.
+    ``"preempt"`` (``data`` = pages swapped out), or one of the
+    terminal failure events — ``"abort"`` (iteration cap), ``"cancel"``
+    (user ``engine.cancel(rid)``), ``"timeout"`` (deadline), ``"error"``
+    (fault demotion) and ``"shed"`` (admission-time overload rejection).
     ``finish_reason`` is set on the delta that ends the request; the
     concatenation of a request's ``tokens`` across its deltas equals the
     final :class:`GenerationResult.tokens`.
@@ -170,6 +191,15 @@ class EngineConfig:
     heads: int = 1
     mesh: Optional[object] = None       # launch.mesh.ClusterMesh
     sharded: bool = False               # force ShardedPagedServer at C=H=1
+    # fault tolerance
+    fault_injector: Optional[object] = None  # runtime.faults.FaultInjector
+    swap_retries: int = 3               # retry budget for transient faults
+    retry_backoff_s: float = 0.0        # base sleep, doubled per retry
+    max_queue_depth: int = 0            # 0 = unbounded; else shed overload
+    watchdog_iters: int = 0             # 0 = off; abort lanes stalled
+    #                                     this many iterations
+    straggler_factor: float = 0.0       # 0 = off; EMA multiple that flags
+    #                                     a straggler engine iteration
 
     @property
     def wants_sharded(self) -> bool:

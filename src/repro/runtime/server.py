@@ -17,11 +17,26 @@ or the sharded one from it) and submit frozen
 policy.  Scheduler-internal mutable state (``fed``, ``lane``, ``swapped``,
 ``spec_*``) lives in the private :class:`SeqState`; what comes back is a
 frozen :class:`~repro.runtime.GenerationResult` with a ``finish_reason``
-(``stop`` / ``length`` / ``aborted``).  ``engine.generate(requests)``
-streams :class:`~repro.runtime.TokenDelta` increments per iteration —
-``run()`` is just the drained generator, and when its iteration cap is hit
-it *aborts* (and surfaces) all still-queued/running work instead of
+(``stop`` / ``length`` / ``aborted`` / ``timeout`` / ``error`` /
+``shed``).  ``engine.generate(requests)`` streams
+:class:`~repro.runtime.TokenDelta` increments per iteration — ``run()``
+is just the drained generator, and when its iteration cap is hit it
+*aborts* (and surfaces) all still-queued/running work instead of
 silently dropping it.
+
+**Failure semantics** (HERO: run-time behavior must be *validatable* —
+traced, perturbed, re-tested): every exceptional exit funnels through one
+``_terminate`` path that releases pages with the same
+refcount/CoW/reservation discipline as preemption.  Requests carry
+optional deadlines (``timeout``), callers can ``cancel(rid)`` from the
+streaming loop body (``aborted``), transient backing-store faults are
+retried with bounded exponential backoff while persistent ones demote the
+*request* to ``error`` — never the engine; a drafter exception merely
+disables speculation for its lane; a watchdog aborts lanes that stop
+advancing; and when the queue exceeds ``max_queue_depth`` the
+lowest-priority waiter is ``shed`` at admission.  All of it is traced
+(``FAULT_INJECT`` / ``REQUEST_TIMEOUT`` / ``REQUEST_SHED`` / ``DEGRADE``)
+so ``core.analysis.layer2_fault_recovery`` can audit a faulted run.
 
 The hot path follows HERO's "keep the accelerator fed" discipline (Fig. 5 —
 DMA double-buffering + zero-copy SVM so the host never serializes on the
@@ -95,15 +110,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
-from typing import Iterable, Iterator, List, Optional
+from typing import Callable, Iterable, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.offload import HostBackingStore
+from repro.core.offload import BackingStoreError, HostBackingStore
 from repro.core.rab import RAB, RABConfig, PagedKVPool
 from repro.core.tracing import EventType, TraceBuffer
 from repro.models import layers as L
@@ -115,7 +131,8 @@ from repro.kernels.paged_attention.ops import (
 from repro.kernels.paged_attention.ref import paged_prefill_ref
 from repro.runtime.api import (
     EngineConfig, GenerationRequest, GenerationResult, SamplingParams,
-    TokenDelta, FINISH_ABORTED, FINISH_LENGTH, FINISH_STOP,
+    TokenDelta, FINISH_ABORTED, FINISH_ERROR, FINISH_LENGTH, FINISH_SHED,
+    FINISH_STOP, FINISH_TIMEOUT,
 )
 from repro.runtime.speculative import NGramDrafter
 
@@ -144,6 +161,11 @@ class SeqState:
     cluster: int = 0                  # owning PMCA cluster (sharded engine)
     reg_pages: int = 0                # prompt pages published to the index
     swapped: Optional[List[int]] = None   # lpages parked in the backing store
+    deadline_iter: Optional[int] = None   # absolute engine-iteration bound
+    deadline_t: Optional[float] = None    # absolute monotonic-clock bound
+    error: Optional[str] = None       # diagnostic for error/timeout finishes
+    progress_marker: Tuple[int, int] = (-1, -1)   # (fed, len(out)) watermark
+    progress_iter: int = 0            # iteration the marker last advanced
     spec_k_cur: int = 0               # adaptive per-lane draft depth
     spec_proposed: int = 0            # drafted tokens sent to verification
     spec_accepted: int = 0            # drafted tokens the target confirmed
@@ -199,7 +221,27 @@ class PagedServer:
         # shared-prefix caching + preemption (HERO SVM page sharing and
         # reclamation on the serving path)
         self.enable_prefix_cache = engine.enable_prefix_cache
-        self.backing = HostBackingStore()
+        # fault tolerance: the injector (if any) perturbs the swap path;
+        # it traces every decision through THIS engine's tracer so the
+        # injected-vs-recovered story reads from one event stream
+        self.faults = engine.fault_injector
+        if self.faults is not None and self.faults.tracer is None:
+            self.faults.tracer = self.tracer
+        self.backing = HostBackingStore(self.faults)
+        self.swap_retries = max(0, engine.swap_retries)
+        self.retry_backoff_s = max(0.0, engine.retry_backoff_s)
+        self.max_queue_depth = max(0, engine.max_queue_depth)
+        self.watchdog_iters = max(0, engine.watchdog_iters)
+        self.straggler_factor = max(0.0, engine.straggler_factor)
+        self.fault_retries = 0        # transient-fault retries attempted
+        self.recovered_faults = 0     # ops that succeeded after retrying
+        self.timeouts = 0
+        self.cancelled = 0
+        self.errors = 0               # per-request "error" demotions
+        self.shed_count = 0
+        self.degrades = 0             # DEGRADE events emitted
+        self.straggler_steps = 0      # iterations the EMA watchdog flagged
+        self._ema_step_s: Optional[float] = None
         self.preemptions = 0
         self._dirty: set = set()      # lane rows to push before the kernel
         self._arrival = 0
@@ -303,11 +345,29 @@ class PagedServer:
             raise ValueError("request exceeds KV pool capacity")
         seq.arrival = self._arrival
         self._arrival += 1
+        if req.deadline_iters is not None:
+            seq.deadline_iter = self.iterations + req.deadline_iters
+        if req.deadline_s is not None:
+            seq.deadline_t = time.monotonic() + req.deadline_s
         if self.spec_k and sp.greedy:
             # drafting is greedy-lane-only: verification is greedy argmax,
             # so a sampled lane's drafts could never be parity-accepted
             seq.spec_k_cur = self.spec_k
         self.queue.append(seq)
+        if self.max_queue_depth and len(self.queue) > self.max_queue_depth:
+            # admission-time load shedding: rather than admit work that
+            # will thrash the pool, reject the lowest-priority waiter
+            # (youngest within a class — so on a priority tie the
+            # newcomer itself is turned away).  Preemption re-queues
+            # bypass this: a victim already holds parked state and must
+            # be allowed back.
+            victim = min(self.queue, key=lambda r: (r.priority, -r.arrival))
+            self.shed_count += 1
+            self.tracer.record_host(EventType.REQUEST_SHED, victim.rid,
+                                    len(self.queue))
+            self._terminate(victim, FINISH_SHED, "shed",
+                            diag="queue depth exceeded "
+                                 f"{self.max_queue_depth}")
 
     def _pages_needed(self, req: SeqState) -> int:
         # every token the engine will *write* K/V for: the prompt plus all
@@ -407,8 +467,17 @@ class PagedServer:
             # reserve the request's remaining lifetime page budget so
             # chunked prefill / restore can never hit exhaustion mid-stream
             pool.reserve(rid, plan["need"])
+        req.progress_marker = (req.fed, len(req.out))
+        req.progress_iter = self.iterations   # queue time never counts
         if plan["resume"]:
-            self._swap_in(req)
+            try:
+                self._swap_in(req)
+            except BackingStoreError as e:
+                # the parked payload is unrestorable: demote THIS request
+                # (reservation and any partial restore released through
+                # _terminate) and keep serving everyone else
+                self._fail(req, str(e))
+                return
         elif plan["usable"]:
             # prefix-cache hit: map the cached pages, skip their prefill
             for lp, p in enumerate(plan["hit_pages"]):
@@ -452,9 +521,17 @@ class PagedServer:
             idx = jnp.asarray([self._gpage(req, p) for _, p in mapped])
             payload = np.asarray(self.kv_pages[:, idx])
             self._d2h(len(mapped))    # one gather, len(mapped) pages pulled
-            for j, (lp, _p) in enumerate(mapped):
-                self.backing.put(rid, lp, payload[:, j])
-                pool.unmap_page(rid, lp)
+            try:
+                for j, (lp, _p) in enumerate(mapped):
+                    self._with_retries(functools.partial(
+                        self.backing.put, rid, lp, payload[:, j]), rid)
+                    pool.unmap_page(rid, lp)
+            except BackingStoreError as e:
+                # checkpoint failed persistently mid-sweep: the victim
+                # cannot be parked, so demote it — _terminate releases the
+                # still-mapped tail and discards the already-parked head
+                self._fail(req, str(e))
+                return
         req.swapped = [lp for lp, _ in mapped]
         pool.reserved.pop(rid, None)
         req.lane = -1
@@ -481,15 +558,24 @@ class PagedServer:
 
     def _swap_in(self, req: SeqState):
         """Restore a preempted request's swapped pages: fresh physical
-        pages, one batched H2D payload upload, mappings re-established."""
+        pages, one batched H2D payload upload, mappings re-established.
+
+        Raises :class:`BackingStoreError` when a parked payload cannot be
+        restored (persistent fault / checksum mismatch / retry budget
+        exhausted); payloads are popped *before* any pool mutation and
+        ``req.swapped`` stays set until all pops succeed, so the caller's
+        demotion path (``_place``) releases a consistent request."""
         rid = req.rid
         pool = self._pool(req)
-        lps, req.swapped = req.swapped, None
+        lps = req.swapped
         if not lps:
+            req.swapped = None
             return
+        payloads = [self._with_retries(functools.partial(
+            self.backing.pop, rid, lp), rid) for lp in lps]
+        req.swapped = None
         phys = [self._gpage(req, pool.alloc_page(rid, lp)) for lp in lps]
-        payload = jnp.stack(
-            [jnp.asarray(self.backing.pop(rid, lp)) for lp in lps], axis=1)
+        payload = jnp.stack([jnp.asarray(p) for p in payloads], axis=1)
         self.kv_pages = self.kv_pages.at[:, jnp.asarray(phys)].set(
             payload.astype(self.kv_pages.dtype))
         self._h2d(len(lps))
@@ -559,7 +645,8 @@ class PagedServer:
             spec_proposed=req.spec_proposed,
             spec_accepted=req.spec_accepted,
             spec_rejected=req.spec_rejected,
-            spec_k_final=req.spec_k_cur)
+            spec_k_final=req.spec_k_cur,
+            error=req.error)
 
     def _finish(self, req: SeqState, reason: str):
         req.done = True
@@ -574,12 +661,20 @@ class PagedServer:
         self._h2d(1)
         self.finished.append(self._result(req))
 
-    def _abort(self, req: SeqState) -> TokenDelta:
-        """Release a still-queued/running request at the iteration cap and
-        surface it as a finished-with-``aborted`` result instead of
-        silently dropping it."""
+    def _terminate(self, req: SeqState, reason: str, event: str,
+                   diag: Optional[str] = None):
+        """Single exceptional-finish path: abort / cancel / timeout /
+        error-demotion / shed all release the request's resources through
+        the same refcount/CoW/reservation-aware route preemption uses
+        (``pool.release`` drops every mapping and reservation credit;
+        shared pages merely lose this request's refcount) and surface a
+        finished result + terminal delta instead of silently dropping
+        work.  Works on queued, running and preempted-parked requests."""
         req.done = True
-        req.finish_reason = FINISH_ABORTED
+        req.finish_reason = reason
+        req.error = diag
+        if req in self.queue:
+            self.queue.remove(req)
         self._pool(req).release(req.rid)
         if req.lane >= 0:
             self.lanes[req.lane] = None
@@ -587,21 +682,91 @@ class PagedServer:
             self.len_dev = self.len_dev.at[req.lane].set(0)
             req.lane = -1
             self._h2d(1)
-        if req.swapped:
-            # parked payload is dropped, not restored — no swap-in traffic
-            self.backing.discard(req.rid)
-            req.swapped = None
+        # parked payload (if any) is dropped, not restored — no swap-in
+        # traffic; discard is a no-op when nothing of ``rid`` is parked
+        self.backing.discard(req.rid)
+        req.swapped = None
         self.tracer.record_host(EventType.REQUEST_FINISH, req.rid,
                                 len(req.out))
         self.tracer.record_host(EventType.PAGE_RELEASE, req.rid, 0)
         self.finished.append(self._result(req))
-        return TokenDelta(rid=req.rid, event="abort",
-                          finish_reason=FINISH_ABORTED)
+        self._delta(req.rid, event=event, reason=reason)
 
-    def _abort_all(self) -> List[TokenDelta]:
-        pending = [r for r in self.lanes if r is not None] + self.queue
-        self.queue = []
-        return [self._abort(r) for r in pending]
+    def _fail(self, req: SeqState, diag: str):
+        """Per-request ``"error"`` demotion: a persistent (or
+        retry-exhausted) fault takes down THIS request, never the
+        engine."""
+        self.errors += 1
+        self._terminate(req, FINISH_ERROR, "error", diag=diag)
+
+    def _abort(self, req: SeqState):
+        """Release a still-queued/running request at the iteration cap and
+        surface it as a finished-with-``aborted`` result instead of
+        silently dropping it."""
+        self._terminate(req, FINISH_ABORTED, "abort")
+
+    def _abort_all(self):
+        pending = [r for r in self.lanes if r is not None] + list(self.queue)
+        for r in pending:
+            self._abort(r)
+
+    def cancel(self, rid: int) -> bool:
+        """User-initiated cancellation, callable from the streaming
+        consumer's loop body (like mid-stream ``submit``): the request —
+        queued, running or preempted-parked — finishes with
+        ``finish_reason="aborted"``, its pages released through the
+        preemption-grade path, and its terminal delta reaches the stream
+        on the current drain.  Returns False for unknown/finished rids."""
+        for r in list(self.lanes) + list(self.queue):
+            if r is not None and r.rid == rid and not r.done:
+                self.cancelled += 1
+                self._terminate(r, FINISH_ABORTED, "cancel")
+                return True
+        return False
+
+    def _expired(self, req: SeqState, now: float) -> bool:
+        return (req.deadline_iter is not None
+                and self.iterations >= req.deadline_iter) or \
+               (req.deadline_t is not None and now >= req.deadline_t)
+
+    def _sweep_deadlines(self):
+        """Finish every queued/running request whose deadline has passed
+        with ``finish_reason="timeout"`` (tokens generated so far are
+        kept).  Runs ahead of admission each step, so a timed-out waiter
+        never consumes pool capacity it can no longer use."""
+        pending = [r for r in self.lanes if r is not None] + list(self.queue)
+        if not any(r.deadline_iter is not None or r.deadline_t is not None
+                   for r in pending):
+            return
+        now = time.monotonic()
+        for r in pending:
+            if self._expired(r, now):
+                self.timeouts += 1
+                self.tracer.record_host(EventType.REQUEST_TIMEOUT, r.rid,
+                                        self.iterations)
+                self._terminate(
+                    r, FINISH_TIMEOUT, "timeout",
+                    diag=f"deadline exceeded at iteration {self.iterations}")
+
+    def _with_retries(self, fn: Callable[[], object], rid: int):
+        """Run one backing-store op under the engine's retry policy:
+        transient faults retry up to ``swap_retries`` times with
+        exponential backoff; persistent faults (and exhausted budgets)
+        re-raise for the caller to demote the request."""
+        attempt = 0
+        while True:
+            try:
+                out = fn()
+                if attempt:
+                    self.recovered_faults += 1
+                return out
+            except BackingStoreError as e:
+                if not e.transient or attempt >= self.swap_retries:
+                    raise
+                attempt += 1
+                self.fault_retries += 1
+                if self.retry_backoff_s:
+                    time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
 
     # --------------------------------------------------------------- step --
     def _account_appends(self, active: List[SeqState], n_new: np.ndarray):
@@ -650,16 +815,19 @@ class PagedServer:
         after every step) rather than being cleared here, so events
         recorded *between* iterations — a ``preempt()`` or ``submit()``
         from the caller's generate-loop body — still reach the stream."""
+        self._sweep_deadlines()
         self._admit()
         active = [r for r in self.lanes if r is not None]
         if not active:
             return bool(self.queue)
         self.iterations += 1
+        t0 = time.perf_counter()
 
         if self._spec_wanted(active):
             drafts, n_spec = self._propose(active)
             if drafts is not None:
                 self._spec_iteration(active, drafts, n_spec)
+                self._post_iteration(time.perf_counter() - t0)
                 return True
 
         B, C = self.max_lanes, self.chunk
@@ -715,7 +883,48 @@ class PagedServer:
                 self._delta(r.rid, kept, reason=reason)
             if reason:
                 self._finish(r, reason)
+        self._post_iteration(time.perf_counter() - t0)
         return True
+
+    def _post_iteration(self, dt: float):
+        """Scheduler watchdog, run after every engine iteration.
+
+        * **EMA straggler flag** (ported from the trainer's elastic-mesh
+          watchdog): an iteration slower than ``straggler_factor`` times
+          the exponential moving average of recent iterations is flagged
+          with a ``DEGRADE(iteration, 3)`` event — diagnostics, not
+          termination, since a slow step is usually the store stalling.
+        * **Stalled-lane abort**: a lane whose ``(fed, len(out))``
+          progress marker has not advanced for ``watchdog_iters``
+          iterations is aborted with ``finish_reason="error"`` plus a
+          ``DEGRADE(rid, 2)`` event carrying diagnostics — a wedged lane
+          must not pin pool pages forever."""
+        if self.straggler_factor:
+            ema = self._ema_step_s
+            # warmup guard: the first iterations pay jit tracing costs
+            if ema is not None and self.iterations > 3 and \
+                    dt > self.straggler_factor * ema:
+                self.straggler_steps += 1
+                self.degrades += 1
+                self.tracer.record_host(EventType.DEGRADE,
+                                        self.iterations, 3)
+            alpha = 0.2            # the trainer watchdog's ema_alpha
+            self._ema_step_s = dt if ema is None else \
+                alpha * dt + (1 - alpha) * ema
+        if self.watchdog_iters:
+            for r in [r for r in self.lanes if r is not None]:
+                marker = (r.fed, len(r.out))
+                if marker != r.progress_marker:
+                    r.progress_marker = marker
+                    r.progress_iter = self.iterations
+                elif self.iterations - r.progress_iter >= \
+                        self.watchdog_iters:
+                    self.degrades += 1
+                    self.tracer.record_host(EventType.DEGRADE, r.rid, 2)
+                    self._fail(
+                        r, f"watchdog: lane {r.lane} made no progress "
+                           f"for {self.watchdog_iters} iterations "
+                           f"(stuck at fed={r.fed}, out={len(r.out)})")
 
     # -------------------------------------------------------- speculation --
     def _spec_wanted(self, active: List[SeqState]) -> bool:
@@ -750,7 +959,17 @@ class PagedServer:
             cap = min(r.spec_k_cur, rem - 1, self.spec_k)
             if cap <= 0:
                 continue
-            d = self.drafter.propose(r.prompt + r.out, cap)[:cap]
+            try:
+                d = self.drafter.propose(r.prompt + r.out, cap)[:cap]
+            except Exception:
+                # a broken drafter is an accelerant, not a dependency:
+                # disable speculation for this lane (it decodes plainly
+                # from here on) and log the degradation instead of letting
+                # the exception crash the engine step
+                r.spec_k_cur = 0
+                self.degrades += 1
+                self.tracer.record_host(EventType.DEGRADE, r.rid, 1)
+                continue
             if not d:
                 continue
             drafts[r.lane, :len(d)] = d
@@ -836,21 +1055,35 @@ class PagedServer:
         ``finished``.  The concatenation of a request's token deltas is
         exactly its final ``GenerationResult.tokens``.  When ``max_iters``
         is hit, still-queued/running requests are aborted (surfaced with
-        ``finish_reason="aborted"``), never silently dropped."""
+        ``finish_reason="aborted"``), never silently dropped.
+
+        Exception-safe: ``break``-ing out of (or ``.close()``-ing) the
+        stream leaves the pool consistent and the engine resumable —
+        running lanes keep their pages, a later ``generate()``/``run()``
+        picks up exactly where the stream stopped, and already-delivered
+        deltas are never re-yielded.  ``engine.cancel(rid)`` and
+        ``engine.submit(...)`` both work from the loop body."""
         for q in requests:
             self.submit(q)
         it = 0
         while True:
             busy = self.step()
-            # yield from the live list: deltas the caller's loop body
-            # triggers mid-yield (submit/preempt) are picked up too
-            yield from self._deltas
-            self._deltas = []
+            # drain one delta at a time from the live list: deltas the
+            # caller's loop body triggers mid-yield (submit / preempt /
+            # cancel) are picked up by the same drain, and a consumer
+            # that ``break``s or ``.close()``es the generator mid-stream
+            # leaves undelivered deltas queued (never re-yielded) with
+            # the engine fully resumable — pool invariants hold between
+            # iterations, so generate()/run() can simply be called again
+            while self._deltas:
+                yield self._deltas.pop(0)
             if not busy:
                 return
             it += 1
             if max_iters is not None and it >= max_iters:
-                yield from self._abort_all()
+                self._abort_all()
+                while self._deltas:
+                    yield self._deltas.pop(0)
                 return
 
     def run(self, max_iters: int = 10_000) -> List[GenerationResult]:

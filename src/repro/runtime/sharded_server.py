@@ -54,7 +54,7 @@ from repro.core.tracing import EventType, TraceBuffer
 from repro.kernels.paged_attention.ops import validate_head_sharding
 from repro.launch.mesh import make_serving_mesh
 from repro.parallel.sharding import cluster_engine_specs
-from repro.runtime.api import EngineConfig, TokenDelta
+from repro.runtime.api import EngineConfig
 from repro.runtime.server import (
     PagedServer, SeqState, _paged_chunk_step, _paged_decode_step,
     _paged_spec_step,
@@ -252,6 +252,10 @@ class ShardedPagedServer(PagedServer):
     def _preempt(self, req: SeqState):
         pool = self._pool(req)
         super()._preempt(req)
+        if req.done:
+            # the checkpoint sweep hit a persistent backing-store fault
+            # and demoted the victim: _terminate already cleaned up
+            return
         # the victim may be re-placed on ANY cluster (its KV payload is
         # host-resident now): park its sequence length with the scheduler
         # and drop the old cluster's routing entry
@@ -262,11 +266,13 @@ class ShardedPagedServer(PagedServer):
         super()._finish(req, reason)
         self.cpool.forget(req.rid)
 
-    def _abort(self, req: SeqState) -> TokenDelta:
-        delta = super()._abort(req)
+    def _terminate(self, req: SeqState, reason: str, event: str,
+                   diag: Optional[str] = None):
+        # every exceptional exit (abort / cancel / timeout / error / shed)
+        # flows through here: drop the parked length and routing entry too
+        super()._terminate(req, reason, event, diag)
         self._parked_len.pop(req.rid, None)
         self.cpool.forget(req.rid)
-        return delta
 
     # --------------------------------------------------------------- step --
     def step(self) -> bool:

@@ -3,7 +3,10 @@ script that guards every PR was previously the only untested code path in
 CI.  Covers: pass-through, relative regressions in both gate directions
 (lower-better and higher-better), improvements, metrics missing from the
 fresh vs the baseline side, workload mismatch, malformed input, and the
-absolute speculation gates (acceptance floor, spec-on < spec-off)."""
+absolute speculation gates (acceptance floor, spec-on < spec-off), and
+the fault-tolerance gates on the ``degradation`` section (goodput and
+within-deadline floors, zero unhandled exceptions, missing section
+fails)."""
 import copy
 import json
 import sys
@@ -29,6 +32,11 @@ def result(**over):
         },
         "sampling": {
             "greedy": {"iters_per_generated_token": 0.78},
+        },
+        "degradation": {
+            "goodput": 0.5,
+            "within_deadline_fraction": 0.67,
+            "unhandled_exceptions": 0,
         },
     }
     for k, v in over.items():
@@ -153,3 +161,57 @@ def test_sampling_metric_new_in_baseline_passes(gate, capsys):
     base = result(**{"sampling": ...})
     assert gate(base, result()) == 0
     assert "NEW" in capsys.readouterr().out
+
+
+# ------------------------------------------------ degradation gates --
+
+def test_goodput_relative_regression_fails(gate):
+    # goodput is higher-better: a 20% drop fails the relative gate even
+    # though it still clears the absolute floor
+    fresh = result(**{"degradation.goodput": 0.4,
+                      "degradation.within_deadline_fraction": 0.67})
+    assert gate(result(), fresh, "--goodput-floor", "0.3") == 1
+
+
+def test_goodput_floor_gates(gate):
+    fresh = result(**{"degradation.goodput": 0.2})
+    base = copy.deepcopy(fresh)        # relative gate is clean: same values
+    assert gate(base, fresh) == 1      # ... but the absolute floor fails
+    assert gate(base, fresh, "--goodput-floor", "0.1") == 0
+
+
+def test_deadline_floor_gates(gate):
+    fresh = result(**{"degradation.within_deadline_fraction": 0.3})
+    base = copy.deepcopy(fresh)
+    assert gate(base, fresh) == 1
+    assert gate(base, fresh, "--deadline-floor", "0.2") == 0
+
+
+def test_unhandled_exceptions_fail_outright(gate):
+    # an exception escaping the engine under fault injection is never
+    # acceptable, whatever the baseline says
+    fresh = result(**{"degradation.unhandled_exceptions": 1})
+    base = copy.deepcopy(fresh)
+    assert gate(base, fresh) == 1
+
+
+def test_degradation_section_missing_from_fresh_fails(gate):
+    # unlike a NEW metric, the fault storm silently disappearing from the
+    # fresh result is exactly the regression the absolute gate catches
+    fresh = result(**{"degradation": ...})
+    base = result(**{"degradation": ...})
+    assert gate(base, fresh) == 1
+
+
+def test_degradation_new_in_baseline_passes(gate, capsys):
+    # the PR that introduces the fault storm has no baseline for it yet:
+    # relative gates report NEW, the absolute floors run on fresh alone
+    base = result(**{"degradation": ...})
+    assert gate(base, result()) == 0
+    assert "NEW" in capsys.readouterr().out
+
+
+def test_degradation_incomplete_section_fails(gate):
+    fresh = result(**{"degradation.unhandled_exceptions": ...})
+    base = copy.deepcopy(fresh)
+    assert gate(base, fresh) == 1

@@ -1,0 +1,522 @@
+"""Fault tolerance end to end: typed backing-store errors, seeded fault
+injection (transient I/O retried with backoff, corruption caught by
+checksum, stalls), per-request ``"error"`` demotion instead of engine
+death, deadlines (`deadline_iters`/`deadline_s` -> ``"timeout"``),
+mid-stream cancellation, ``break``/``close()`` exception-safety of the
+streaming iterator, admission-time load shedding (``"shed"``), the
+drafter-failure and scheduler-watchdog DEGRADE paths, and the layer-2/
+layer-3 trace analyses that make it all observable.
+
+The fault-matrix tests carry ``@pytest.mark.chaos`` and run in the CI
+``chaos`` job across page sizes {4, 8} (via ``REPRO_PAGE_SIZE`` and the
+``matrix_page_size`` fixture); everything here also runs in the plain
+suite at the default page size.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core.analysis import (
+    assert_faults_contained, layer1_decode, layer2_fault_recovery,
+)
+from repro.core.offload import BackingStoreError, HostBackingStore
+from repro.core.tracing import EventType, TraceBuffer
+from repro.models import model as M
+from repro.runtime import (
+    EngineConfig, FaultInjector, FaultSpec, GenerationRequest,
+    SamplingParams, ShardedPagedServer, make_engine,
+    FINISH_ERROR, FINISH_SHED, FINISH_TIMEOUT,
+)
+
+MAX_NEW = 6
+NUM_PAGES = 32
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("yi-6b").smoke()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(vocab, n=4, seed=2):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, size=ln).tolist()
+            for ln in rng.integers(3, 11, size=n)]
+
+
+def _engine(cfg, params, *, page_size=4, **kw):
+    tracer = TraceBuffer(capacity=1 << 14)
+    return make_engine(cfg, params, EngineConfig(
+        num_pages=NUM_PAGES, page_size=page_size, max_lanes=2,
+        max_pages_per_seq=8, chunk=4, use_kernel=False, **kw),
+        tracer=tracer)
+
+
+def _submit_all(srv, prompts, **per_req):
+    for rid, p in enumerate(prompts):
+        srv.submit(GenerationRequest(
+            rid=rid, prompt=tuple(p),
+            sampling=SamplingParams(max_new=MAX_NEW),
+            **{k: (v(rid) if callable(v) else v)
+               for k, v in per_req.items()}))
+
+
+def _drive_with_preempts(srv, at=(4,)):
+    """Drain the engine, forcing a preemption of a running lane at the
+    given delta counts so pages travel through the backing store."""
+    hits = set(at)
+    for i, _ in enumerate(srv.generate()):
+        if i in hits:
+            run = [r for r in srv.lanes if r is not None and not r.done]
+            if run:
+                srv.preempt(run[0].rid)
+    return {r.rid: r for r in srv.finished}
+
+
+def _assert_pristine(srv):
+    srv.pool.check_invariants()
+    assert srv.pool.free_pages() == NUM_PAGES
+    assert len(srv.backing) == 0
+
+
+@pytest.fixture(scope="module")
+def baseline(cfg, params):
+    """Fault-free greedy outputs every survivor-parity check compares to."""
+    srv = _engine(cfg, params)
+    _submit_all(srv, _prompts(cfg.vocab_size))
+    return {r.rid: r.tokens for r in srv.run()}
+
+
+# ------------------------------------------------------- typed errors --
+
+def test_backing_store_error_message():
+    e = BackingStoreError(7, 3, "pop", kind="corrupt",
+                          detail="checksum mismatch on restore")
+    msg = str(e)
+    assert "rid=7" in msg and "lpage=3" in msg
+    assert "pop" in msg and "corrupt" in msg
+    assert "checksum mismatch on restore" in msg
+    assert (e.rid, e.lpage, e.op, e.kind) == (7, 3, "pop", "corrupt")
+    assert not e.transient
+    assert isinstance(e, RuntimeError)
+
+
+def test_backing_store_pop_missing_is_typed():
+    store = HostBackingStore()
+    with pytest.raises(BackingStoreError) as ei:
+        store.pop(5, 2)
+    assert ei.value.kind == "missing"
+    assert (ei.value.rid, ei.value.lpage, ei.value.op) == (5, 2, "pop")
+
+
+def test_backing_store_overwrite_is_typed():
+    store = HostBackingStore()
+    page = np.zeros((2, 3), np.float32)
+    store.put(1, 0, page)
+    with pytest.raises(BackingStoreError) as ei:
+        store.put(1, 0, page)
+    assert ei.value.kind == "overwrite"
+    store.pop(1, 0)                     # slot reusable after pop
+    store.put(1, 0, page)
+
+
+def test_backing_store_checksum_roundtrip():
+    store = HostBackingStore()
+    page = np.arange(12, dtype=np.float32).reshape(3, 4)
+    store.put(9, 1, page)
+    out = store.pop(9, 1)
+    np.testing.assert_array_equal(out, page)
+
+
+def test_backing_store_detects_corruption():
+    inj = FaultInjector(plan={0: FaultSpec("corrupt", op="put")})
+    store = HostBackingStore(inj)
+    store.put(4, 0, np.ones((2, 2), np.float32))
+    with pytest.raises(BackingStoreError) as ei:
+        store.pop(4, 0)
+    assert ei.value.kind == "corrupt" and not ei.value.transient
+    assert "checksum" in str(ei.value)
+
+
+# ---------------------------------------------------------- injector --
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(kind="cosmic-ray")
+    with pytest.raises(ValueError):
+        FaultSpec(op="get")
+    with pytest.raises(ValueError):
+        FaultInjector(rate=1.5)
+
+
+def test_injector_is_deterministic():
+    def decisions(seed):
+        inj = FaultInjector(seed=seed, rate=0.3)
+        fired = []
+        for i in range(200):
+            try:
+                inj.before("put", i % 5, i % 3)
+                fired.append(False)
+            except BackingStoreError:
+                fired.append(True)
+        return fired
+
+    a, b = decisions(11), decisions(11)
+    assert a == b and any(a)
+    assert decisions(12) != a
+
+
+def test_injector_plan_and_persistent_site():
+    inj = FaultInjector(plan={2: FaultSpec("io", persistent=True)})
+    inj.before("put", 1, 0)
+    inj.before("put", 1, 1)
+    with pytest.raises(BackingStoreError) as ei:
+        inj.before("put", 7, 4)         # op index 2: the planted fault
+    assert not ei.value.transient
+    # the same (op, rid, lpage) site keeps failing on every retry
+    for _ in range(3):
+        with pytest.raises(BackingStoreError):
+            inj.before("put", 7, 4)
+    inj.before("put", 7, 5)             # a different site is clean
+    assert inj.report()["persistent_sites"] == 1
+
+
+def test_injector_max_faults_bounds_storm():
+    inj = FaultInjector(rate=1.0, max_faults=2)
+    fired = 0
+    for i in range(10):
+        try:
+            inj.before("put", 0, i)
+        except BackingStoreError:
+            fired += 1
+    assert fired == 2
+    assert inj.report() == {"ops": 10, "injected": 2,
+                            "by_kind": {"io": 2, "corrupt": 0, "stall": 0},
+                            "persistent_sites": 0}
+
+
+def test_injector_traces_fault_events():
+    tracer = TraceBuffer()
+    inj = FaultInjector(plan={0: FaultSpec("io", persistent=True),
+                              1: FaultSpec("corrupt", op="put")},
+                        tracer=tracer)
+    with pytest.raises(BackingStoreError):
+        inj.before("put", 3, 0)
+    assert inj.before("put", 4, 1).kind == "corrupt"
+    events = layer1_decode(tracer.drain())
+    codes = [(e.a0, e.a1) for e in events
+             if e.etype == EventType.FAULT_INJECT]
+    assert codes == [(3, 1 + 8), (4, 2)]
+
+
+# --------------------------------------------------------- validation --
+
+def test_deadline_validation():
+    with pytest.raises(ValueError):
+        GenerationRequest(rid=0, prompt=(1, 2), deadline_iters=0)
+    with pytest.raises(ValueError):
+        GenerationRequest(rid=0, prompt=(1, 2), deadline_s=-1.0)
+    GenerationRequest(rid=0, prompt=(1, 2), deadline_iters=1,
+                      deadline_s=0.5)   # both together are fine
+
+
+# ----------------------------------------------------------- engine --
+
+@pytest.mark.chaos
+def test_deadline_iters_times_out(cfg, params, matrix_page_size):
+    srv = _engine(cfg, params, page_size=matrix_page_size)
+    _submit_all(srv, _prompts(cfg.vocab_size),
+                deadline_iters=lambda rid: 2 if rid == 0 else None)
+    res = {r.rid: r for r in srv.run()}
+    assert res[0].finish_reason == FINISH_TIMEOUT
+    assert "deadline" in res[0].error
+    assert all(res[r].finish_reason == "length" for r in (1, 2, 3))
+    assert srv.timeouts == 1
+    events = layer1_decode(srv.tracer.drain())
+    assert any(e.etype == EventType.REQUEST_TIMEOUT and e.a0 == 0
+               for e in events)
+    assert assert_faults_contained(events)
+    _assert_pristine(srv)
+
+
+@pytest.mark.chaos
+def test_deadline_s_times_out(cfg, params):
+    srv = _engine(cfg, params)
+    _submit_all(srv, _prompts(cfg.vocab_size),
+                deadline_s=lambda rid: 1e-9 if rid == 1 else None)
+    res = {r.rid: r for r in srv.run()}
+    assert res[1].finish_reason == FINISH_TIMEOUT
+    assert all(res[r].finish_reason == "length" for r in (0, 2, 3))
+    _assert_pristine(srv)
+
+
+@pytest.mark.chaos
+def test_cancel_from_stream_loop(cfg, params, matrix_page_size, baseline):
+    srv = _engine(cfg, params, page_size=matrix_page_size)
+    _submit_all(srv, _prompts(cfg.vocab_size))
+    cancelled = False
+    deltas = []
+    for d in srv.generate():
+        deltas.append(d)
+        if not cancelled and d.rid == 0 and d.tokens:
+            assert srv.cancel(0)
+            cancelled = True
+    res = {r.rid: r for r in srv.finished}
+    assert res[0].finish_reason == "aborted"
+    assert any(d.event == "cancel" and d.rid == 0 for d in deltas)
+    assert srv.cancelled == 1
+    if matrix_page_size == 4:
+        survivors = {r: res[r].tokens for r in (1, 2, 3)}
+        assert survivors == {r: baseline[r] for r in (1, 2, 3)}
+    assert not srv.cancel(0)            # already finished
+    assert not srv.cancel(99)           # unknown rid
+    _assert_pristine(srv)
+
+
+def test_break_and_close_leave_pool_consistent(cfg, params, baseline):
+    """Regression: a consumer that ``break``s (or ``.close()``s) the
+    streaming iterator mid-run must leave the pool consistent — and the
+    engine resumable to the exact fault-free outputs."""
+    srv = _engine(cfg, params)
+    _submit_all(srv, _prompts(cfg.vocab_size))
+    gen = srv.generate()
+    for i, _ in enumerate(gen):
+        if i == 3:
+            break                       # implicit GeneratorExit
+    srv.pool.check_invariants()
+    res = {r.rid: r.tokens for r in srv.run()}
+    assert res == baseline, "resume after break diverged"
+    _assert_pristine(srv)
+
+    srv = _engine(cfg, params)
+    _submit_all(srv, _prompts(cfg.vocab_size))
+    gen = srv.generate()
+    next(gen)
+    gen.close()                         # explicit close
+    srv.pool.check_invariants()
+    assert {r.rid: r.tokens for r in srv.run()} == baseline
+
+
+@pytest.mark.chaos
+def test_transient_faults_recovered_by_retry(cfg, params, matrix_page_size,
+                                             baseline):
+    inj = FaultInjector(seed=2, rate=0.5, kinds=(FaultSpec("io"),))
+    srv = _engine(cfg, params, page_size=matrix_page_size,
+                  fault_injector=inj, swap_retries=6)
+    _submit_all(srv, _prompts(cfg.vocab_size))
+    res = _drive_with_preempts(srv, at=(2, 6))
+    assert len(res) == 4
+    assert all(r.finish_reason == "length" for r in res.values())
+    assert inj.injected > 0 and srv.fault_retries > 0
+    assert srv.recovered_faults > 0 and srv.errors == 0
+    if matrix_page_size == 4:
+        assert {r: res[r].tokens for r in res} == baseline, \
+            "transient fault storm changed survivor outputs"
+    events = layer1_decode(srv.tracer.drain())
+    rep = layer2_fault_recovery(events)
+    assert rep["faults"] == inj.injected
+    assert all(v["finished"] for v in rep["requests"].values())
+    assert assert_faults_contained(events)
+    _assert_pristine(srv)
+
+
+@pytest.mark.chaos
+def test_persistent_fault_demotes_one_request(cfg, params, matrix_page_size,
+                                              baseline):
+    inj = FaultInjector(plan={i: FaultSpec("io", op="pop", persistent=True)
+                              for i in range(64)})
+    srv = _engine(cfg, params, page_size=matrix_page_size,
+                  fault_injector=inj, swap_retries=2)
+    _submit_all(srv, _prompts(cfg.vocab_size))
+    res = _drive_with_preempts(srv)
+    assert len(res) == 4
+    errs = [r for r in res.values() if r.finish_reason == FINISH_ERROR]
+    assert len(errs) == 1 and srv.errors == 1
+    assert "injected I/O fault" in errs[0].error
+    survivors = [r for r in res.values() if r.finish_reason == "length"]
+    assert len(survivors) == 3
+    if matrix_page_size == 4:
+        assert all(r.tokens == baseline[r.rid] for r in survivors)
+    events = layer1_decode(srv.tracer.drain())
+    assert layer2_fault_recovery(events)["persistent_faults"] > 0
+    assert assert_faults_contained(events)
+    _assert_pristine(srv)
+
+
+@pytest.mark.chaos
+def test_corruption_detected_at_swap_in(cfg, params, matrix_page_size):
+    inj = FaultInjector(plan={0: FaultSpec("corrupt", op="put")})
+    srv = _engine(cfg, params, page_size=matrix_page_size,
+                  fault_injector=inj)
+    _submit_all(srv, _prompts(cfg.vocab_size))
+    res = _drive_with_preempts(srv)
+    errs = [r for r in res.values() if r.finish_reason == FINISH_ERROR]
+    assert len(errs) == 1
+    assert "checksum" in errs[0].error
+    _assert_pristine(srv)
+
+
+@pytest.mark.chaos
+def test_stall_fault_slows_but_completes(cfg, params, baseline):
+    inj = FaultInjector(plan={0: FaultSpec("stall", stall_s=0.01),
+                              1: FaultSpec("stall", stall_s=0.01)})
+    srv = _engine(cfg, params, fault_injector=inj)
+    _submit_all(srv, _prompts(cfg.vocab_size))
+    res = _drive_with_preempts(srv)
+    assert all(r.finish_reason == "length" for r in res.values())
+    assert {r: res[r].tokens for r in res} == baseline
+    assert inj.by_kind["stall"] == 2
+    _assert_pristine(srv)
+
+
+@pytest.mark.chaos
+def test_load_shedding_rejects_lowest_priority(cfg, params):
+    srv = _engine(cfg, params, max_queue_depth=3)
+    _submit_all(srv, _prompts(cfg.vocab_size),
+                priority=lambda rid: 1 if rid < 3 else 0)
+    res = {r.rid: r for r in srv.run()}
+    assert res[3].finish_reason == FINISH_SHED
+    assert srv.shed_count == 1
+    assert all(res[r].finish_reason == "length" for r in range(3))
+    events = layer1_decode(srv.tracer.drain())
+    assert any(e.etype == EventType.REQUEST_SHED and e.a0 == 3
+               for e in events)
+    assert assert_faults_contained(events)
+    _assert_pristine(srv)
+
+
+@pytest.mark.chaos
+def test_drafter_exception_degrades_lane(cfg, params):
+    class ExplodingDrafter:
+        def propose(self, tokens, k):
+            raise RuntimeError("drafter died")
+
+    prompts = _prompts(cfg.vocab_size, n=2)
+    ref = _engine(cfg, params)
+    _submit_all(ref, prompts)
+    want = {r.rid: r.tokens for r in ref.run()}
+
+    srv = _engine(cfg, params, spec_k=3)
+    srv.drafter = ExplodingDrafter()
+    _submit_all(srv, prompts)
+    res = {r.rid: r for r in srv.run()}
+    assert all(r.finish_reason == "length" for r in res.values())
+    assert {r: res[r].tokens for r in res} == want, \
+        "a broken drafter changed outputs"
+    assert srv.degrades > 0
+    events = layer1_decode(srv.tracer.drain())
+    assert any(e.etype == EventType.DEGRADE and e.a1 == 1 for e in events)
+    _assert_pristine(srv)
+
+
+@pytest.mark.chaos
+def test_watchdog_aborts_stalled_lane(cfg, params):
+    srv = _engine(cfg, params, watchdog_iters=2)
+    _submit_all(srv, _prompts(cfg.vocab_size, n=1))
+    srv.step()
+    req = next(r for r in srv.lanes if r is not None)
+    # freeze the lane: iterations pass, the (fed, out) marker does not move
+    for _ in range(4):
+        srv.iterations += 1
+        srv._post_iteration(0.01)
+        if req.done:
+            break
+    assert req.done and req.finish_reason == FINISH_ERROR
+    assert "watchdog" in req.error
+    events = layer1_decode(srv.tracer.drain())
+    assert any(e.etype == EventType.DEGRADE and e.a1 == 2 and
+               e.a0 == req.rid for e in events)
+    _assert_pristine(srv)
+
+
+def test_straggler_ema_flags_slow_iteration(cfg, params):
+    srv = _engine(cfg, params, straggler_factor=3.0)
+    srv.iterations = 10                 # past the jit warmup guard
+    for _ in range(5):
+        srv._post_iteration(0.01)       # settle the EMA
+    srv._post_iteration(0.5)            # 50x the moving average
+    assert srv.straggler_steps == 1
+    events = layer1_decode(srv.tracer.drain())
+    assert any(e.etype == EventType.DEGRADE and e.a1 == 3 for e in events)
+
+
+@pytest.mark.chaos
+def test_sharded_engine_survives_faults(cfg, params):
+    inj = FaultInjector(seed=5, rate=0.4, kinds=(FaultSpec("io"),))
+    tracer = TraceBuffer(capacity=1 << 14)
+    srv = make_engine(cfg, params, EngineConfig(
+        num_pages=NUM_PAGES, page_size=4, max_lanes=2, max_pages_per_seq=8,
+        chunk=4, use_kernel=False, sharded=True, clusters=1, heads=1,
+        fault_injector=inj, swap_retries=4), tracer=tracer)
+    assert isinstance(srv, ShardedPagedServer)
+    _submit_all(srv, _prompts(cfg.vocab_size))
+    res = _drive_with_preempts(srv, at=(2, 6))
+    assert len(res) == 4
+    assert all(r.finish_reason in ("length", FINISH_ERROR)
+               for r in res.values())
+    assert inj.injected > 0
+    # exceptional exits must clear the cluster map and parked lengths
+    assert not srv.cpool.cluster_of and not srv._parked_len
+    srv.cpool.check_invariants()
+    assert assert_faults_contained(layer1_decode(tracer.drain()))
+
+
+@pytest.mark.chaos
+def test_timeout_releases_swapped_out_request(cfg, params):
+    """A request that times out while parked in the backing store must
+    release its host payloads too — the discard path, not just pages."""
+    srv = _engine(cfg, params)
+    ps = _prompts(cfg.vocab_size)
+    _submit_all(srv, ps, deadline_iters=lambda rid: 6 if rid == 0 else None)
+    for i, _ in enumerate(srv.generate()):
+        if i == 1 and not srv.lanes[0].done:
+            victim = next(r for r in srv.lanes if r is not None)
+            if victim.rid == 0:
+                srv.preempt(0)
+    res = {r.rid: r for r in srv.finished}
+    assert len(res) == 4
+    _assert_pristine(srv)
+
+
+# ---------------------------------------------------------- analysis --
+
+def _host_rows(*evs):
+    return np.asarray([(i, 255, int(t), a0, a1)
+                       for i, (t, a0, a1) in enumerate(evs)], np.int64)
+
+
+def test_layer2_fault_recovery_decodes_codes():
+    rows = _host_rows(
+        (EventType.FAULT_INJECT, 1, 1),          # io, transient
+        (EventType.FAULT_INJECT, 1, 2 + 8),      # corrupt, persistent
+        (EventType.FAULT_INJECT, 2, 3),          # stall
+        (EventType.REQUEST_TIMEOUT, 3, 10),
+        (EventType.REQUEST_SHED, 4, 9),
+        (EventType.DEGRADE, 5, 1),
+        (EventType.DEGRADE, 6, 2),
+        (EventType.REQUEST_FINISH, 1, 4),
+        (EventType.REQUEST_FINISH, 2, 4),
+    )
+    rep = layer2_fault_recovery(layer1_decode(rows))
+    assert rep["faults"] == 3
+    assert rep["by_kind"] == {"io": 1, "corrupt": 1, "stall": 1}
+    assert rep["persistent_faults"] == 1
+    assert rep["timeouts"] == 1 and rep["sheds"] == 1
+    assert rep["degrades"] == {"drafter": 1, "watchdog": 1, "straggler": 0}
+    assert rep["requests"][1]["finished"]
+    assert rep["requests"][1]["kinds"] == ["io", "corrupt"]
+
+
+def test_assert_faults_contained_catches_lost_request():
+    lost = _host_rows((EventType.FAULT_INJECT, 1, 1),
+                      (EventType.REQUEST_FINISH, 2, 4))
+    assert not assert_faults_contained(layer1_decode(lost))
+    ok = _host_rows((EventType.FAULT_INJECT, 1, 1),
+                    (EventType.REQUEST_FINISH, 1, 4))
+    assert assert_faults_contained(layer1_decode(ok))

@@ -1,9 +1,11 @@
 """Pool property tests (hypothesis): random interleavings of
-submit / decode / finish / preempt / resume / speculate schedules —
-driving the pool exactly the way ``PagedServer`` does (prefix-hit
-admission, reservation discipline, copy-on-write appends, swap-out page
-reclamation, speculative append + rollback trims) — must preserve the
-pool's conservation laws:
+submit / decode / finish / preempt / resume / speculate / cancel /
+fault_swap_in schedules — driving the pool exactly the way
+``PagedServer`` does (prefix-hit admission, reservation discipline,
+copy-on-write appends, swap-out page reclamation, speculative append +
+rollback trims, and the exceptional exits: client cancellation at any
+lifecycle point and a backing-store fault mid-restore) — must preserve
+the pool's conservation laws:
 
 * refcount conservation: sum of refcounts == number of live mappings;
 * free + cached-free + referenced partitions the physical pool (no
@@ -185,6 +187,42 @@ class SchedulerModel:
         st_["preempted"] = False
         st_["swapped"] = []
 
+    def cancel(self, k):
+        """Mirror PagedServer._terminate: an exceptional exit (client
+        cancel, deadline timeout, error demotion, shed) at ANY lifecycle
+        point — running, mid-prompt, or parked after preemption — must
+        release through the same refcount/CoW/reservation-aware path as
+        a natural finish."""
+        seqs = sorted(self.live)
+        if not seqs:
+            return
+        seq = seqs[k % len(seqs)]
+        self.pool.release(seq)
+        del self.live[seq]
+
+    def fault_swap_in(self, k, n_alloc):
+        """Mirror a BackingStoreError mid-restore: the re-admitted
+        sequence has its reservation placed and some (possibly zero,
+        possibly all) of its pages re-allocated when the backing store
+        fails — the server demotes the request to ``"error"`` and
+        releases; no reservation budget or partially restored page may
+        leak."""
+        seq = self._preempted(k)
+        if seq is None:
+            return
+        pool, st_ = self.pool, self.live[seq]
+        total = -(-(len(st_["prompt"]) + st_["max_new"] - 1) // PAGE_SIZE) \
+            + self._cow_budget(st_["prompt"], st_["max_new"])
+        if pool.available() < total:
+            return                      # re-admission would not fit: skip
+        if total:
+            pool.reserve(seq, total)
+        restored = st_["swapped"][:n_alloc % (len(st_["swapped"]) + 1)]
+        for lp in restored:
+            pool.alloc_page(seq, lp)    # partial restore, then the fault
+        pool.release(seq)
+        del self.live[seq]
+
     # ------------------------------------------------------- invariants --
     def check(self):
         pool = self.pool
@@ -218,7 +256,7 @@ class SchedulerModel:
 
 OPS = st.sampled_from(["submit", "decode", "decode", "decode", "decode",
                        "finish", "preempt", "resume", "speculate",
-                       "speculate"])
+                       "speculate", "cancel", "fault_swap_in"])
 SCHEDULE = st.lists(st.tuples(OPS, st.integers(0, 6), st.integers(1, 4),
                               st.integers(0, 4)),
                     min_size=1, max_size=120)
@@ -243,6 +281,11 @@ def test_pool_invariants_under_random_schedules(schedule):
             # max_new doubles as the draft depth, acc as the accepted-
             # prefix selector — both arbitrary, so rollback depth is too
             m.speculate(arg, max_new, acc)
+        elif op == "cancel":
+            m.cancel(arg)
+        elif op == "fault_swap_in":
+            # acc doubles as the partial-restore depth at fault time
+            m.fault_swap_in(arg, acc)
         m.check()
     # drain everything: the pool must return to pristine capacity
     for s in list(m.live):
