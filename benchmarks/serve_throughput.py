@@ -80,6 +80,11 @@ from repro.runtime import (
     SamplingParams, make_engine,
 )
 
+try:                                  # script launch: sibling module
+    import load_gen
+except ImportError:                   # package launch: benchmarks.load_gen
+    from benchmarks import load_gen
+
 
 def _make_prompts(n: int, length: int, vocab: int, seed: int = 0):
     rng = np.random.default_rng(seed)
@@ -481,6 +486,32 @@ def run_fault_storm(cfg, params, *, page_size, max_lanes, use_kernel,
     }
 
 
+def run_latency_workload(cfg, params, *, smoke: bool) -> dict:
+    """Live-traffic latency section: the seeded open-loop load generator
+    (Poisson arrivals, uniform prompt/output lengths) replayed through
+    the front door on a virtual clock.  The workload is run TWICE on
+    fresh engines with the same seed and the serialized reports must be
+    byte-identical (``replay_identical``) — on a virtual clock the
+    latency distribution is a pure function of (seed, engine config),
+    which is what makes the p95/p99 gates in ``check_bench`` meaningful
+    on shared CI runners."""
+    if smoke:
+        knobs = dict(rate_rps=50.0, requests=8, prompt_min=4,
+                     prompt_max=12, output_min=2, output_max=5,
+                     page_size=4, max_lanes=2, chunk=4, token_budget=6)
+    else:
+        knobs = dict(rate_rps=100.0, requests=32, prompt_min=8,
+                     prompt_max=24, output_min=4, output_max=12,
+                     page_size=4, max_lanes=4, chunk=8, token_budget=12)
+    knobs.update(seed=0, iter_time_s=0.01, slo_ttft_s=0.25,
+                 slo_tpot_s=0.05, cfg=cfg, params=params)
+    first = load_gen.run_load_gen(**knobs)
+    replay = load_gen.run_load_gen(**knobs)
+    identical = json.dumps(first, sort_keys=True) == \
+        json.dumps(replay, sort_keys=True)
+    return {**first, "replay_identical": identical}
+
+
 def run_cluster_sweep(cfg, params, prompts, *, max_clusters, heads, common,
                       unsharded_outputs, trace_events=None) -> dict:
     """Serve the same workload on the sharded engine at 1..max_clusters
@@ -612,6 +643,8 @@ def main(argv=None) -> dict:
                                   requests=storm_reqs,
                                   max_new=storm_max_new)
 
+    latency = run_latency_workload(cfg, params, smoke=args.smoke)
+
     trace_events = {} if args.trace_out else None
     sweep = run_cluster_sweep(
         cfg, params, prompts, max_clusters=args.clusters, heads=args.heads,
@@ -655,6 +688,7 @@ def main(argv=None) -> dict:
         "speculation": speculation,
         "sampling": sampling,
         "degradation": degradation,
+        "latency": latency,
         "cluster_sweep": sweep,
     }
     with open(args.out, "w") as f:
@@ -720,6 +754,15 @@ def main(argv=None) -> dict:
           f"parity={dg['survivor_parity']} "
           f"contained={dg['faults_contained']} "
           f"unhandled={dg['unhandled_exceptions']}")
+    lt = result["latency"]
+    print(f"latency (rate={lt['workload']['rate_rps']} rps, "
+          f"budget={lt['workload']['token_budget']}): "
+          f"ttft p50/p95/p99={lt['ttft_p50_s']:.3f}/{lt['ttft_p95_s']:.3f}/"
+          f"{lt['ttft_p99_s']:.3f}s  "
+          f"tpot p50/p95/p99={lt['tpot_p50_s']:.3f}/{lt['tpot_p95_s']:.3f}/"
+          f"{lt['tpot_p99_s']:.3f}s  "
+          f"slo goodput={lt['slo_goodput']:.2f}  "
+          f"replay identical={lt['replay_identical']}")
     for C, r in sweep["configs"].items():
         print(f"clusters={C:>2s} (x{sweep['heads']} heads): "
               f"iters/req={r['iters_per_request']:6.1f}  "
@@ -746,6 +789,10 @@ def main(argv=None) -> dict:
         "a faulted request never reached REQUEST_FINISH"
     assert dg["pool_invariants_ok"] and dg["backing_store_empty"], \
         "fault storm leaked pool or backing-store state"
+    assert lt["replay_identical"], \
+        "same-seed latency replays diverged (virtual clock leaked wall time)"
+    assert lt["completed"] == lt["requests"], \
+        "latency workload did not drain"
     assert sweep["one_cluster_outputs_match_unsharded"] is not False, \
         "1-cluster sharded engine diverged from the unsharded engine"
     print(f"wrote {args.out}")

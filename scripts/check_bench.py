@@ -20,7 +20,15 @@ fixed workload (unlike wall-clock tokens/s on shared CI runners):
   storm (HIGHER is better);
 * ``degradation.within_deadline_fraction`` — of the requests the engine
   attempted, the fraction that completed within deadline (HIGHER is
-  better).
+  better);
+* ``latency.ttft_p95_s`` / ``latency.ttft_p99_s`` — tail time-to-first-
+  token under the live-traffic load generator, in virtual seconds
+  (lower is better; deterministic because the front door runs on a
+  ``VirtualClock``);
+* ``latency.tpot_p95_s`` / ``latency.tpot_p99_s`` — tail time-per-
+  output-token under the same workload (lower is better);
+* ``latency.slo_goodput`` — fraction of all offered requests that
+  completed within both latency SLOs (HIGHER is better).
 
 Relative rule: a gated metric may not regress by more than
 ``--max-regress`` (default 10%) against the committed baseline.  On top
@@ -41,6 +49,15 @@ section fails outright, it is not NEW-tolerated):
 * ``degradation.within_deadline_fraction`` >= ``--deadline-floor``;
 * ``degradation.unhandled_exceptions`` == 0 — a fault that escapes the
   engine instead of demoting one request is an automatic failure.
+
+The latency section carries the same treatment (a missing ``latency``
+section fails outright — the live-traffic probe going silent is the
+regression):
+
+* ``latency.slo_goodput`` >= ``--slo-goodput-floor``;
+* ``latency.replay_identical`` must be true — if two same-seed runs of
+  the load generator diverge, the virtual clock leaked wall time and
+  every latency gate above is noise.
 
 Robustness contract (tested by ``tests/test_check_bench.py``):
 
@@ -76,11 +93,17 @@ GATED = [
      "fault-storm goodput", "higher"),
     (("degradation", "within_deadline_fraction"),
      "fault-storm within-deadline fraction", "higher"),
+    (("latency", "ttft_p95_s"), "TTFT p95 (virtual s)", "lower"),
+    (("latency", "ttft_p99_s"), "TTFT p99 (virtual s)", "lower"),
+    (("latency", "tpot_p95_s"), "TPOT p95 (virtual s)", "lower"),
+    (("latency", "tpot_p99_s"), "TPOT p99 (virtual s)", "lower"),
+    (("latency", "slo_goodput"), "latency SLO goodput", "higher"),
 ]
 
 SPEC_ACCEPT_FLOOR = 0.25
 GOODPUT_FLOOR = 0.4
 DEADLINE_FLOOR = 0.5
+SLO_GOODPUT_FLOOR = 0.5
 
 
 def _dig(d, path):
@@ -199,6 +222,41 @@ def check_degradation_absolute(fresh: dict, goodput_floor: float,
     return ok
 
 
+def check_latency_absolute(fresh: dict, slo_goodput_floor: float) -> bool:
+    """Absolute live-traffic latency gates on the fresh result alone.
+
+    A missing ``latency`` section fails (like ``degradation``): the
+    load-generator probe going silent is the regression.  The replay
+    check is the load-bearing one — every latency number is only
+    gate-able because two same-seed virtual-clock runs are
+    byte-identical, so a replay divergence poisons the whole section."""
+    lt = fresh.get("latency")
+    if not isinstance(lt, dict):
+        print("FAIL latency section missing from fresh result")
+        return False
+    ok = True
+    try:
+        goodput = float(lt["slo_goodput"])
+        identical = bool(lt["replay_identical"])
+    except (KeyError, TypeError, ValueError) as e:
+        print(f"FAIL latency section incomplete in fresh result: {e}")
+        return False
+    if goodput < slo_goodput_floor:
+        print(f"FAIL latency SLO goodput {goodput:.3f} below floor "
+              f"{slo_goodput_floor:.3f}")
+        ok = False
+    else:
+        print(f"OK   latency SLO goodput {goodput:.3f} >= floor "
+              f"{slo_goodput_floor:.3f}")
+    if not identical:
+        print("FAIL same-seed latency replays diverged "
+              "(virtual clock leaked wall time)")
+        ok = False
+    else:
+        print("OK   same-seed latency replays byte-identical")
+    return ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True,
@@ -215,6 +273,9 @@ def main(argv=None) -> int:
     ap.add_argument("--deadline-floor", type=float, default=DEADLINE_FLOOR,
                     help="absolute floor on "
                          "degradation.within_deadline_fraction")
+    ap.add_argument("--slo-goodput-floor", type=float,
+                    default=SLO_GOODPUT_FLOOR,
+                    help="absolute floor on latency.slo_goodput")
     args = ap.parse_args(argv)
 
     base = _load(args.baseline, "baseline")
@@ -234,9 +295,10 @@ def main(argv=None) -> int:
     ok &= check_speculation_absolute(fresh, args.spec_accept_floor)
     ok &= check_degradation_absolute(fresh, args.goodput_floor,
                                      args.deadline_floor)
+    ok &= check_latency_absolute(fresh, args.slo_goodput_floor)
     if not ok:
         print(f"bench gate FAILED (>{args.max_regress:.0%} regression "
-              f"or absolute speculation/degradation gate)")
+              f"or absolute speculation/degradation/latency gate)")
         return 1
     print("bench gate passed")
     return 0

@@ -89,6 +89,57 @@ def layer2_request_lifecycles(events: Iterable[Event]) -> Dict[int, List[Dict]]:
     return dict(out)
 
 
+def layer2_latency(events: Iterable[Event]) -> Dict:
+    """Platform: request latency structure from the serving event stream.
+
+    ``REQUEST_ARRIVE`` (rid, queue depth) marks a request entering the
+    engine queue; ``REQUEST_ADMIT`` (rid, lane) its first/each placement;
+    ``REQUEST_FINISH`` (rid, tokens) its exit.  Timestamps are the host
+    tracer's logical clock (event counts, not seconds — the engine's
+    *wall* latency lives on the injected Clock and is reported by
+    ``runtime.frontdoor.latency_report``), so what this view exposes is
+    the *ordering* structure: how much scheduler activity elapsed between
+    arrival, first admission and finish.  Returns per-request
+    ``queue_delay`` (arrive -> first admit), ``service`` (first admit ->
+    finish) and ``e2e`` plus aggregate means/maxima."""
+    per: Dict[int, Dict] = {}
+    for e in events:
+        if e.etype == EventType.REQUEST_ARRIVE:
+            per.setdefault(e.a0, {"arrive_ts": e.ts, "admit_ts": None,
+                                  "finish_ts": None, "admissions": 0,
+                                  "queue_depth": e.a1, "tokens": 0})
+        elif e.etype == EventType.REQUEST_ADMIT and e.a0 in per:
+            r = per[e.a0]
+            r["admissions"] += 1
+            if r["admit_ts"] is None:
+                r["admit_ts"] = e.ts
+        elif e.etype == EventType.REQUEST_FINISH and e.a0 in per:
+            per[e.a0]["finish_ts"] = e.ts
+            per[e.a0]["tokens"] = e.a1
+    rows = []
+    for rid, r in sorted(per.items()):
+        queue_delay = (r["admit_ts"] - r["arrive_ts"]
+                       if r["admit_ts"] is not None else None)
+        service = (r["finish_ts"] - r["admit_ts"]
+                   if r["admit_ts"] is not None
+                   and r["finish_ts"] is not None else None)
+        e2e = (r["finish_ts"] - r["arrive_ts"]
+               if r["finish_ts"] is not None else None)
+        rows.append((rid, dict(r, queue_delay=queue_delay,
+                               service=service, e2e=e2e)))
+    qd = [v["queue_delay"] for _, v in rows if v["queue_delay"] is not None]
+    sv = [v["service"] for _, v in rows if v["service"] is not None]
+    return {
+        "requests": dict(rows),
+        "arrived": len(rows),
+        "finished": sum(1 for _, v in rows if v["finish_ts"] is not None),
+        "mean_queue_delay": sum(qd) / len(qd) if qd else 0.0,
+        "max_queue_delay": max(qd) if qd else 0,
+        "mean_service": sum(sv) / len(sv) if sv else 0.0,
+        "max_service": max(sv) if sv else 0,
+    }
+
+
 def layer2_cluster_balance(events: Iterable[Event],
                            n_clusters: Optional[int] = None) -> Dict:
     """Platform: per-cluster placement balance for the sharded engine.

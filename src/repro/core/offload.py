@@ -137,6 +137,25 @@ class HostBackingStore:
         self.bytes_in += arr.nbytes
         return arr
 
+    def repark(self, seq: int, lpage: int, payload: np.ndarray):
+        """Undo a successful :meth:`pop` whose *batch* failed: the engine
+        popped several pages for one swap-in, a later page faulted
+        transiently, and the whole resume is being deferred — the
+        already-popped payloads go back exactly as they were.  No fault
+        injection (the op already succeeded once; re-parking is engine
+        bookkeeping, not new I/O) and the ``bytes_in`` the pop counted is
+        credited back, so a deferred attempt costs no phantom traffic."""
+        key = (seq, lpage)
+        if key in self._pages:
+            raise BackingStoreError(
+                seq, lpage, "repark", "overwrite",
+                detail="page is already parked (repark without pop)")
+        arr = np.ascontiguousarray(np.asarray(payload))
+        self._sums[key] = zlib.crc32(arr.tobytes())
+        self._pages[key] = arr
+        self.bytes_in -= arr.nbytes
+        self.peak_pages = max(self.peak_pages, len(self._pages))
+
     def discard(self, seq: int):
         """Drop every parked page of ``seq`` without counting swap-in
         traffic (the abort path: payload is released, never restored)."""

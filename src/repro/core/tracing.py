@@ -83,6 +83,9 @@ class EventType(enum.IntEnum):
     DEGRADE = 50           # graceful degradation: (subject, cause code
     #                        1=drafter disabled, 2=watchdog abort,
     #                        3=straggler iteration flagged)
+    # live-traffic serving (the host front door feeding the engine a
+    # continuous arrival stream instead of one closed batch)
+    REQUEST_ARRIVE = 51    # request entered the queue: (rid, queue depth)
 
 
 HOST_TRACER_ID = 255

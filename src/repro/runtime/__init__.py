@@ -1,11 +1,16 @@
 from repro.runtime.trainer import Trainer, TrainerConfig, FailureInjector
 from repro.runtime.api import (
     EngineConfig, GenerationRequest, GenerationResult, SamplingParams,
-    TokenDelta, make_engine, Request,
+    TokenDelta, make_engine,
     FINISH_STOP, FINISH_LENGTH, FINISH_ABORTED,
     FINISH_TIMEOUT, FINISH_ERROR, FINISH_SHED,
 )
+from repro.runtime.clock import Clock, MonotonicClock, VirtualClock
 from repro.runtime.faults import FaultInjector, FaultSpec
+from repro.runtime.frontdoor import (
+    Arrival, FrontDoor, GreedyChunkPolicy, RequestRecord, SchedulerPolicy,
+    TokenBudgetPolicy, latency_report,
+)
 from repro.runtime.server import PagedServer
 from repro.runtime.sharded_server import ShardedPagedServer
 from repro.runtime.speculative import (
@@ -16,6 +21,9 @@ __all__ = ["Trainer", "TrainerConfig", "FailureInjector", "PagedServer",
            "ShardedPagedServer", "Drafter", "NGramDrafter",
            "DraftModelDrafter", "EngineConfig", "GenerationRequest",
            "GenerationResult", "SamplingParams", "TokenDelta",
-           "make_engine", "Request", "FINISH_STOP", "FINISH_LENGTH",
+           "make_engine", "FINISH_STOP", "FINISH_LENGTH",
            "FINISH_ABORTED", "FINISH_TIMEOUT", "FINISH_ERROR",
-           "FINISH_SHED", "FaultInjector", "FaultSpec"]
+           "FINISH_SHED", "FaultInjector", "FaultSpec",
+           "Clock", "MonotonicClock", "VirtualClock",
+           "Arrival", "FrontDoor", "RequestRecord", "SchedulerPolicy",
+           "GreedyChunkPolicy", "TokenBudgetPolicy", "latency_report"]

@@ -8,9 +8,15 @@ flows through four small frozen dataclasses plus one factory:
 
 * :class:`EngineConfig` — every pool / scheduler / kernel / speculation /
   mesh knob in one spec.  Both :class:`~repro.runtime.PagedServer` and
-  :class:`~repro.runtime.ShardedPagedServer` consume it (their old
-  keyword sprawl survives one more PR behind a ``DeprecationWarning``
-  shim), and :func:`make_engine` picks the engine class from the spec.
+  :class:`~repro.runtime.ShardedPagedServer` consume it (the pre-API
+  keyword sprawl and the ``Request`` shim are gone — old kwargs now
+  raise ``TypeError``), and :func:`make_engine` picks the engine class
+  from the spec.  The spec also names the engine's *time source*
+  (``clock`` — a :class:`~repro.runtime.clock.Clock`; virtual in
+  tests/benchmarks so deadlines, retry backoff and latency metrics
+  replay exactly) and the chunked-prefill/decode interleave
+  (``scheduler_policy`` — a
+  :class:`~repro.runtime.frontdoor.SchedulerPolicy`).
 * :class:`SamplingParams` — per-request decoding policy: temperature,
   top-k, top-p nucleus truncation, PRNG seed, stop tokens and the token
   budget.  ``temperature == 0`` is exact greedy argmax (byte-identical to
@@ -30,14 +36,13 @@ flows through four small frozen dataclasses plus one factory:
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Iterable, Optional, Tuple
+from typing import Optional, Tuple
 
 from repro.core.rab import RABConfig
 
 __all__ = [
     "EngineConfig", "SamplingParams", "GenerationRequest",
-    "GenerationResult", "TokenDelta", "make_engine", "Request",
+    "GenerationResult", "TokenDelta", "make_engine",
     "FINISH_STOP", "FINISH_LENGTH", "FINISH_ABORTED",
     "FINISH_TIMEOUT", "FINISH_ERROR", "FINISH_SHED",
 ]
@@ -180,6 +185,14 @@ class EngineConfig:
     # scheduler
     max_lanes: int = 4
     chunk: int = 16
+    clock: Optional[object] = None      # runtime.clock.Clock; None -> the
+    #                                     wall MonotonicClock.  Every
+    #                                     scheduler timestamp (deadline_s,
+    #                                     retry backoff, straggler EMA)
+    #                                     reads this source
+    scheduler_policy: Optional[object] = None   # frontdoor.SchedulerPolicy;
+    #                                     None -> GreedyChunkPolicy (the
+    #                                     historical prefill interleave)
     # kernels
     use_kernel: bool = True
     pages_per_step: int = 2
@@ -194,7 +207,13 @@ class EngineConfig:
     # fault tolerance
     fault_injector: Optional[object] = None  # runtime.faults.FaultInjector
     swap_retries: int = 3               # retry budget for transient faults
-    retry_backoff_s: float = 0.0        # base sleep, doubled per retry
+    retry_backoff_s: float = 0.0        # 0 -> transient swap-in faults
+    #                                     retry immediately (in-place);
+    #                                     > 0 -> the resume is DEFERRED on
+    #                                     the engine clock (base delay,
+    #                                     doubled per attempt) while other
+    #                                     lanes keep decoding — the engine
+    #                                     loop never sleeps
     max_queue_depth: int = 0            # 0 = unbounded; else shed overload
     watchdog_iters: int = 0             # 0 = off; abort lanes stalled
     #                                     this many iterations
@@ -221,18 +240,3 @@ def make_engine(cfg, params, engine_cfg: Optional[EngineConfig] = None, *,
     engine_cfg = engine_cfg or EngineConfig()
     cls = ShardedPagedServer if engine_cfg.wants_sharded else PagedServer
     return cls(cfg, params, engine_cfg, tracer=tracer)
-
-
-def Request(rid: int, prompt: Iterable[int], max_new: int = 8,
-            priority: int = 0, **kw) -> GenerationRequest:
-    """Deprecated constructor-shaped shim for the pre-API ``Request``.
-
-    Returns a greedy :class:`GenerationRequest`; new code should build
-    ``GenerationRequest(rid, prompt, SamplingParams(...), priority)``.
-    """
-    warnings.warn(
-        "runtime.Request is deprecated; submit a GenerationRequest with "
-        "SamplingParams instead", DeprecationWarning, stacklevel=2)
-    return GenerationRequest(
-        rid=rid, prompt=tuple(prompt),
-        sampling=SamplingParams(max_new=max_new), priority=priority, **kw)

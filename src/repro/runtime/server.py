@@ -30,8 +30,11 @@ traced, perturbed, re-tested): every exceptional exit funnels through one
 refcount/CoW/reservation discipline as preemption.  Requests carry
 optional deadlines (``timeout``), callers can ``cancel(rid)`` from the
 streaming loop body (``aborted``), transient backing-store faults are
-retried with bounded exponential backoff while persistent ones demote the
-*request* to ``error`` — never the engine; a drafter exception merely
+retried under a bounded budget — with ``retry_backoff_s > 0`` a failed
+swap-in is *deferred* on the engine clock (the lane is released and other
+lanes keep decoding; the resume retries when the backoff expires) rather
+than sleeping in the tick — while persistent ones demote the *request* to
+``error`` — never the engine; a drafter exception merely
 disables speculation for its lane; a watchdog aborts lanes that stop
 advancing; and when the queue exceeds ``max_queue_depth`` the
 lowest-priority waiter is ``shed`` at admission.  All of it is traced
@@ -110,8 +113,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
-import warnings
 from typing import Callable, Iterable, Iterator, List, Optional, Tuple
 
 import jax
@@ -134,6 +135,8 @@ from repro.runtime.api import (
     TokenDelta, FINISH_ABORTED, FINISH_ERROR, FINISH_LENGTH, FINISH_SHED,
     FINISH_STOP, FINISH_TIMEOUT,
 )
+from repro.runtime.clock import MonotonicClock
+from repro.runtime.frontdoor import GreedyChunkPolicy
 from repro.runtime.speculative import NGramDrafter
 
 
@@ -162,7 +165,11 @@ class SeqState:
     reg_pages: int = 0                # prompt pages published to the index
     swapped: Optional[List[int]] = None   # lpages parked in the backing store
     deadline_iter: Optional[int] = None   # absolute engine-iteration bound
-    deadline_t: Optional[float] = None    # absolute monotonic-clock bound
+    deadline_t: Optional[float] = None    # absolute engine-clock bound
+    not_before: float = 0.0           # engine-clock time before which this
+    #                                   queued request may not be placed
+    #                                   (deferred swap-in retry backoff)
+    retry_attempt: int = 0            # deferred swap-in retries consumed
     error: Optional[str] = None       # diagnostic for error/timeout finishes
     progress_marker: Tuple[int, int] = (-1, -1)   # (fed, len(out)) watermark
     progress_iter: int = 0            # iteration the marker last advanced
@@ -179,16 +186,8 @@ class SeqState:
 class PagedServer:
     def __init__(self, cfg: ArchConfig, params,
                  engine: Optional[EngineConfig] = None, *,
-                 tracer: Optional[TraceBuffer] = None, **legacy):
-        if legacy:
-            # one-PR migration shim: the old kwargs sprawl still works but
-            # warns; every knob now lives on EngineConfig
-            warnings.warn(
-                "PagedServer(**kwargs) is deprecated — pass an EngineConfig "
-                f"(legacy kwargs: {sorted(legacy)})",
-                DeprecationWarning, stacklevel=2)
-            engine = dataclasses.replace(engine or EngineConfig(), **legacy)
-        elif engine is None:
+                 tracer: Optional[TraceBuffer] = None):
+        if engine is None:
             engine = EngineConfig()
         assert cfg.block_kind == "transformer" and cfg.attention_kind == "gqa" \
             and not cfg.local_global_period, \
@@ -200,6 +199,14 @@ class PagedServer:
         self.chunk = max(1, engine.chunk)
         self.tracer = tracer or TraceBuffer()
         self.use_kernel = engine.use_kernel
+        # one time source for every scheduler timestamp (deadline_s
+        # binding, retry backoff, straggler EMA): inject a VirtualClock
+        # and the whole tick path replays deterministically
+        self.clock = engine.clock if engine.clock is not None \
+            else MonotonicClock()
+        # the chunked-prefill/decode interleave as an explicit object
+        self.policy = engine.scheduler_policy \
+            if engine.scheduler_policy is not None else GreedyChunkPolicy()
         # speculative decoding: drafter proposes, the verify step disposes
         self.spec_k = max(0, engine.spec_k)
         self.drafter = engine.drafter if engine.drafter is not None else \
@@ -348,7 +355,12 @@ class PagedServer:
         if req.deadline_iters is not None:
             seq.deadline_iter = self.iterations + req.deadline_iters
         if req.deadline_s is not None:
-            seq.deadline_t = time.monotonic() + req.deadline_s
+            # bound on the injected clock, not raw time.monotonic(): under
+            # a VirtualClock the request times out at an exact, testable
+            # tick; under the wall clock behaviour is unchanged
+            seq.deadline_t = self.clock.now() + req.deadline_s
+        self.tracer.record_host(EventType.REQUEST_ARRIVE, seq.rid,
+                                len(self.queue))
         if self.spec_k and sp.greedy:
             # drafting is greedy-lane-only: verification is greedy argmax,
             # so a sampled lane's drafts could never be parity-accepted
@@ -439,12 +451,23 @@ class PagedServer:
         v = min(running, key=lambda r: (r.priority, -r.arrival))
         return v if v.priority < head.priority else None
 
+    def _eligible_head(self) -> Optional[SeqState]:
+        """Highest-priority oldest waiter whose deferred-retry backoff (if
+        any) has expired on the engine clock.  Deferred requests are
+        skipped, not blocking: a lane freed behind one backing-off resume
+        goes to the next waiter instead of idling."""
+        self.queue.sort(key=lambda r: (-r.priority, r.arrival))
+        now = self.clock.now()
+        return next((r for r in self.queue if r.not_before <= now), None)
+
     def _admit(self):
         while self.queue:
-            # re-sort every round: _preempt re-enqueues its victim, which
-            # must keep its priority rank over lower-priority waiters
-            self.queue.sort(key=lambda r: (-r.priority, r.arrival))
-            head = self.queue[0]
+            # re-sort every round (inside _eligible_head): _preempt
+            # re-enqueues its victim, which must keep its priority rank
+            # over lower-priority waiters
+            head = self._eligible_head()
+            if head is None:
+                break                     # every waiter is backing off
             lane = next((i for i in range(self.max_lanes)
                          if self.lanes[i] is None), None)
             plan = self._plan(head)
@@ -454,7 +477,7 @@ class PagedServer:
                     break
                 self._preempt(victim)
                 continue                  # pool/lane state changed: re-plan
-            self.queue.pop(0)
+            self.queue.remove(head)
             self._place(head, lane, plan)
 
     def _place(self, req: SeqState, lane: int, plan: dict):
@@ -473,11 +496,23 @@ class PagedServer:
             try:
                 self._swap_in(req)
             except BackingStoreError as e:
+                if self._defer_resume(req, e):
+                    # transient fault with backoff configured: undo the
+                    # placement and re-queue the resume for a later tick —
+                    # the lane goes back to the pool and every other lane
+                    # keeps decoding while this request backs off
+                    self._unplace(req)
+                    return
                 # the parked payload is unrestorable: demote THIS request
                 # (reservation and any partial restore released through
                 # _terminate) and keep serving everyone else
                 self._fail(req, str(e))
                 return
+            if req.retry_attempt:
+                # a deferred-retry resume finally restored: count the
+                # recovery the in-place retry path would have counted
+                self.recovered_faults += 1
+                req.retry_attempt = 0
         elif plan["usable"]:
             # prefix-cache hit: map the cached pages, skip their prefill
             for lp, p in enumerate(plan["hit_pages"]):
@@ -504,6 +539,35 @@ class PagedServer:
             self.last_tok = self.last_tok.at[lane].set(req.out[-1])
         self._h2d(1)
         self.tracer.record_host(EventType.REQUEST_ADMIT, rid, lane)
+
+    def _defer_resume(self, req: SeqState, e: BackingStoreError) -> bool:
+        """Should this failed swap-in be rescheduled instead of demoting
+        the request?  Yes iff the fault is transient, a backoff is
+        configured (``retry_backoff_s > 0`` — with 0 the in-place retry
+        loop already ran inside ``_swap_in``) and budget remains.  On
+        True the request's ``not_before`` is set to the exponential-
+        backoff deadline on the engine clock; the caller unwinds the
+        placement.  The engine never sleeps: other lanes keep emitting
+        tokens while this request waits out its backoff in the queue."""
+        if not (e.transient and self.retry_backoff_s
+                and req.retry_attempt < self.swap_retries):
+            return False
+        req.retry_attempt += 1
+        self.fault_retries += 1
+        req.not_before = self.clock.now() + \
+            self.retry_backoff_s * (2 ** (req.retry_attempt - 1))
+        return True
+
+    def _unplace(self, req: SeqState):
+        """Reverse an in-progress ``_place`` whose swap-in was deferred:
+        free the lane, drop the reservation, re-queue the request (still
+        ``swapped`` — ``_swap_in`` re-parked everything it had popped, so
+        the backing store is exactly as before the attempt)."""
+        pool, lane = self._pool(req), req.lane
+        pool.reserved.pop(req.rid, None)
+        self.lanes[lane] = None
+        req.lane = -1
+        self.queue.append(req)
 
     def _preempt(self, req: SeqState):
         """Reclaim a running lane: every mapped page's payload goes D2H
@@ -564,15 +628,35 @@ class PagedServer:
         restored (persistent fault / checksum mismatch / retry budget
         exhausted); payloads are popped *before* any pool mutation and
         ``req.swapped`` stays set until all pops succeed, so the caller's
-        demotion path (``_place``) releases a consistent request."""
+        demotion path (``_place``) releases a consistent request.
+
+        With ``retry_backoff_s > 0`` a transient pop fault is NOT retried
+        in place: already-popped payloads are re-parked (the store ends
+        up exactly as before the attempt — the faulted page itself was
+        never removed, the injector fires before removal) and the error
+        propagates so ``_place`` can defer the whole resume on the engine
+        clock instead of stalling the tick."""
         rid = req.rid
         pool = self._pool(req)
         lps = req.swapped
         if not lps:
             req.swapped = None
             return
-        payloads = [self._with_retries(functools.partial(
-            self.backing.pop, rid, lp), rid) for lp in lps]
+        deferring = bool(self.retry_backoff_s)
+        payloads: List[np.ndarray] = []
+        try:
+            for lp in lps:
+                if deferring:
+                    payloads.append(self.backing.pop(rid, lp))
+                else:
+                    payloads.append(self._with_retries(functools.partial(
+                        self.backing.pop, rid, lp), rid))
+        except BackingStoreError as e:
+            if deferring and e.transient \
+                    and req.retry_attempt < self.swap_retries:
+                for lp, payload in zip(lps, payloads):
+                    self.backing.repark(rid, lp, payload)
+            raise
         req.swapped = None
         phys = [self._gpage(req, pool.alloc_page(rid, lp)) for lp in lps]
         payload = jnp.stack([jnp.asarray(p) for p in payloads], axis=1)
@@ -738,7 +822,7 @@ class PagedServer:
         if not any(r.deadline_iter is not None or r.deadline_t is not None
                    for r in pending):
             return
-        now = time.monotonic()
+        now = self.clock.now()
         for r in pending:
             if self._expired(r, now):
                 self.timeouts += 1
@@ -750,9 +834,11 @@ class PagedServer:
 
     def _with_retries(self, fn: Callable[[], object], rid: int):
         """Run one backing-store op under the engine's retry policy:
-        transient faults retry up to ``swap_retries`` times with
-        exponential backoff; persistent faults (and exhausted budgets)
-        re-raise for the caller to demote the request."""
+        transient faults retry immediately, up to ``swap_retries`` times;
+        persistent faults (and exhausted budgets) re-raise for the caller
+        to demote the request.  This loop NEVER sleeps — spacing retries
+        out in time is the deferred-resume path (``_defer_resume``),
+        which reschedules on the engine clock while other lanes run."""
         attempt = 0
         while True:
             try:
@@ -765,8 +851,6 @@ class PagedServer:
                     raise
                 attempt += 1
                 self.fault_retries += 1
-                if self.retry_backoff_s:
-                    time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
 
     # --------------------------------------------------------------- step --
     def _account_appends(self, active: List[SeqState], n_new: np.ndarray):
@@ -818,31 +902,56 @@ class PagedServer:
         self._sweep_deadlines()
         self._admit()
         active = [r for r in self.lanes if r is not None]
+        if not active and self.queue:
+            # nothing runs and every waiter is deferred (backing off): park
+            # on the clock until the earliest retry comes due, then re-try
+            # admission — otherwise run() would spin on an idle engine
+            # (and on a VirtualClock nobody else ever moves time forward)
+            nb = min(r.not_before for r in self.queue)
+            if nb > self.clock.now():
+                self.clock.hold_until(nb)
+                self._admit()
+                active = [r for r in self.lanes if r is not None]
         if not active:
             return bool(self.queue)
         self.iterations += 1
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
 
         if self._spec_wanted(active):
             drafts, n_spec = self._propose(active)
             if drafts is not None:
                 self._spec_iteration(active, drafts, n_spec)
-                self._post_iteration(time.perf_counter() - t0)
+                self._post_iteration(self.clock.now() - t0)
                 return True
 
         B, C = self.max_lanes, self.chunk
         n_new = np.zeros((B,), np.int32)
         feed = np.zeros((B, C), np.int32)
         use_last = np.zeros((B,), np.int32)
-        decode_only = True
+        prefill = [(r.lane, len(r.prompt) - r.fed) for r in active
+                   if r.fed < len(r.prompt)]
+        decode_only = not prefill
+        alloc: dict = {}
+        if prefill:
+            # the interleave policy decides how many prompt tokens each
+            # prefill-phase lane feeds; decode lanes always advance one
+            alloc = dict(self.policy.plan(
+                tuple(prefill), len(active) - len(prefill), C))
+            if len(prefill) == len(active) and \
+                    not any(alloc.get(ln, rem) for ln, rem in prefill):
+                # a budget policy may starve every prefill lane in a mixed
+                # batch, but an all-prefill iteration that feeds nothing
+                # would never progress: force the oldest lane one chunk
+                alloc[prefill[0][0]] = min(C, prefill[0][1])
         for r in active:
             i = r.lane
             if r.fed < len(r.prompt):
                 n = min(C, len(r.prompt) - r.fed)
-                feed[i, :n] = r.prompt[r.fed:r.fed + n]
-                n_new[i] = n
-                self.prefill_tokens += n
-                decode_only = False
+                n = max(0, min(n, int(alloc.get(i, n))))
+                if n:
+                    feed[i, :n] = r.prompt[r.fed:r.fed + n]
+                    n_new[i] = n
+                    self.prefill_tokens += n
             else:
                 n_new[i] = 1
                 use_last[i] = 1     # token is device-resident; no upload
@@ -883,7 +992,7 @@ class PagedServer:
                 self._delta(r.rid, kept, reason=reason)
             if reason:
                 self._finish(r, reason)
-        self._post_iteration(time.perf_counter() - t0)
+        self._post_iteration(self.clock.now() - t0)
         return True
 
     def _post_iteration(self, dt: float):
@@ -1046,6 +1155,14 @@ class PagedServer:
                 self._finish(r, reason)
 
     # ---------------------------------------------------------- frontend --
+    def poll_deltas(self) -> List[TokenDelta]:
+        """Drain every delta accumulated since the last drain.  For
+        callers that drive ``step()`` directly (the serving front door)
+        instead of consuming the ``generate()`` stream; the two drains
+        share one buffer, so use one or the other per engine."""
+        out, self._deltas = self._deltas, []
+        return out
+
     def generate(self, requests: Iterable[GenerationRequest] = (),
                  max_iters: Optional[int] = None) -> Iterator[TokenDelta]:
         """Submit ``requests`` and stream the engine: yields a

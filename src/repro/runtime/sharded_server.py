@@ -33,14 +33,12 @@ Mapping back to the paper:
 
 Configuration flows through the same :class:`~repro.runtime.EngineConfig`
 as the unsharded engine (``clusters`` / ``heads`` / ``mesh`` select the
-mesh; ``make_engine`` picks this class whenever the spec wants one); the
-old keyword sprawl survives one more PR behind a ``DeprecationWarning``.
+mesh; ``make_engine`` picks this class whenever the spec wants one).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Optional
 
 import jax
@@ -75,14 +73,8 @@ class ShardedPagedServer(PagedServer):
 
     def __init__(self, cfg: ArchConfig, params,
                  engine: Optional[EngineConfig] = None, *,
-                 tracer: Optional[TraceBuffer] = None, **legacy):
-        if legacy:
-            warnings.warn(
-                "ShardedPagedServer(**kwargs) is deprecated — pass an "
-                f"EngineConfig (legacy kwargs: {sorted(legacy)})",
-                DeprecationWarning, stacklevel=2)
-            engine = dataclasses.replace(engine or EngineConfig(), **legacy)
-        elif engine is None:
+                 tracer: Optional[TraceBuffer] = None):
+        if engine is None:
             engine = EngineConfig()
         cmesh = engine.mesh if engine.mesh is not None else \
             make_serving_mesh(engine.clusters, engine.heads)
@@ -216,8 +208,9 @@ class ShardedPagedServer(PagedServer):
         lowest-priority running lane (the sweep is cluster-local: only the
         victim's cluster shard is touched) and planning retries."""
         while self.queue:
-            self.queue.sort(key=lambda r: (-r.priority, r.arrival))
-            head = self.queue[0]
+            head = self._eligible_head()
+            if head is None:
+                break                 # every waiter is backing off
             best = None
             for c in range(self.clusters):
                 lane = self._free_lane(c)
@@ -235,7 +228,7 @@ class ShardedPagedServer(PagedServer):
                     break
                 self._preempt(victim)
                 continue
-            self.queue.pop(0)
+            self.queue.remove(head)
             self._place(head, best[1], best[2])
 
     def _place(self, req: SeqState, lane: int, plan: dict):
@@ -248,6 +241,15 @@ class ShardedPagedServer(PagedServer):
             self._pool_of(plan["cluster"]).seq_len[req.rid] = \
                 self._parked_len.pop(req.rid)
         super()._place(req, lane, plan)
+
+    def _unplace(self, req: SeqState):
+        # a deferred swap-in retry: re-park the sequence length and drop
+        # the routing entry (mirroring _preempt) so the later retry may
+        # place the request on ANY cluster again
+        pool = self._pool(req)
+        super()._unplace(req)
+        self._parked_len[req.rid] = pool.seq_len.pop(req.rid, 0)
+        self.cpool.forget(req.rid)
 
     def _preempt(self, req: SeqState):
         pool = self._pool(req)

@@ -6,7 +6,9 @@ fresh vs the baseline side, workload mismatch, malformed input, and the
 absolute speculation gates (acceptance floor, spec-on < spec-off), and
 the fault-tolerance gates on the ``degradation`` section (goodput and
 within-deadline floors, zero unhandled exceptions, missing section
-fails)."""
+fails), and the live-traffic gates on the ``latency`` section (tail
+TTFT/TPOT relative gates in both directions, SLO-goodput floor,
+replay-identical requirement, missing section fails)."""
 import copy
 import json
 import sys
@@ -37,6 +39,14 @@ def result(**over):
             "goodput": 0.5,
             "within_deadline_fraction": 0.67,
             "unhandled_exceptions": 0,
+        },
+        "latency": {
+            "ttft_p95_s": 0.08,
+            "ttft_p99_s": 0.10,
+            "tpot_p95_s": 0.01,
+            "tpot_p99_s": 0.01,
+            "slo_goodput": 1.0,
+            "replay_identical": True,
         },
     }
     for k, v in over.items():
@@ -213,5 +223,68 @@ def test_degradation_new_in_baseline_passes(gate, capsys):
 
 def test_degradation_incomplete_section_fails(gate):
     fresh = result(**{"degradation.unhandled_exceptions": ...})
+    base = copy.deepcopy(fresh)
+    assert gate(base, fresh) == 1
+
+
+# ---------------------------------------------------- latency gates --
+
+def test_ttft_tail_regression_fails(gate):
+    # p95 TTFT is lower-better: +25% on virtual time is a real scheduling
+    # regression (virtual-clock metrics have no runner noise to excuse it)
+    fresh = result(**{"latency.ttft_p95_s": 0.10})
+    assert gate(result(), fresh) == 1
+
+
+def test_tpot_tail_regression_fails(gate):
+    fresh = result(**{"latency.tpot_p99_s": 0.015})
+    assert gate(result(), fresh) == 1
+
+
+def test_latency_improvement_passes(gate):
+    fresh = result(**{"latency.ttft_p95_s": 0.05,
+                      "latency.tpot_p95_s": 0.005})
+    assert gate(result(), fresh) == 0
+
+
+def test_slo_goodput_relative_regression_fails(gate):
+    # higher-better direction: goodput dropping 20% fails even above floor
+    fresh = result(**{"latency.slo_goodput": 0.8})
+    assert gate(result(), fresh, "--slo-goodput-floor", "0.5") == 1
+
+
+def test_slo_goodput_floor_gates(gate):
+    fresh = result(**{"latency.slo_goodput": 0.4})
+    base = copy.deepcopy(fresh)        # relative gate is clean: same values
+    assert gate(base, fresh) == 1      # ... but the absolute floor fails
+    assert gate(base, fresh, "--slo-goodput-floor", "0.3") == 0
+
+
+def test_replay_divergence_fails_outright(gate):
+    # two same-seed virtual-clock runs disagreeing means wall time leaked
+    # into the metrics — every other latency gate is noise; always fail
+    fresh = result(**{"latency.replay_identical": False})
+    base = copy.deepcopy(fresh)
+    assert gate(base, fresh) == 1
+
+
+def test_latency_section_missing_from_fresh_fails(gate):
+    # like degradation: the live-traffic probe going silent IS the
+    # regression, it is not NEW-tolerated on the fresh side
+    fresh = result(**{"latency": ...})
+    base = result(**{"latency": ...})
+    assert gate(base, fresh) == 1
+
+
+def test_latency_new_in_baseline_passes(gate, capsys):
+    # the PR that introduces the load generator has no baseline for it
+    # yet: relative gates report NEW, absolute gates run on fresh alone
+    base = result(**{"latency": ...})
+    assert gate(base, result()) == 0
+    assert "NEW" in capsys.readouterr().out
+
+
+def test_latency_incomplete_section_fails(gate):
+    fresh = result(**{"latency.replay_identical": ...})
     base = copy.deepcopy(fresh)
     assert gate(base, fresh) == 1

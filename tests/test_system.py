@@ -218,26 +218,20 @@ def test_paged_server_continuous_batching():
     assert srv.rab.stats["l1_hits"] + srv.rab.stats["misses"] > 0
 
 
-def test_paged_server_legacy_kwargs_shim():
-    """The pre-EngineConfig kwargs sprawl still works for one PR — same
-    tokens, but under a DeprecationWarning."""
-    from repro.runtime import Request
-
+def test_paged_server_legacy_kwargs_removed():
+    """The one-PR DeprecationWarning shim is gone: the pre-EngineConfig
+    kwargs sprawl now raises TypeError and ``runtime.Request`` no longer
+    exists — EngineConfig / GenerationRequest are the only spellings."""
     cfg = get_config("yi-6b").smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    srv = make_engine(cfg, params, EngineConfig(
-        num_pages=32, page_size=4, max_lanes=2, max_pages_per_seq=8,
-        use_kernel=False))
-    srv.submit(_req(0, [5, 6, 7], max_new=4))
-    base = srv.run()[0].tokens
-    with pytest.warns(DeprecationWarning):
-        legacy = PagedServer(cfg, params, num_pages=32, page_size=4,
-                             max_lanes=2, max_pages_per_seq=8,
-                             use_kernel=False)
-    with pytest.warns(DeprecationWarning):
-        legacy.submit(Request(rid=0, prompt=[5, 6, 7], max_new=4))
-    r = legacy.run()[0]
-    assert tuple(r.out) == base      # .out property mirrors the old field
+    with pytest.raises(TypeError):
+        PagedServer(cfg, params, num_pages=32, page_size=4,
+                    max_lanes=2, max_pages_per_seq=8, use_kernel=False)
+    with pytest.raises(TypeError):
+        from repro.runtime import ShardedPagedServer
+        ShardedPagedServer(cfg, params, clusters=1, num_pages=32)
+    with pytest.raises(ImportError):
+        from repro.runtime import Request  # noqa: F401
 
 
 def test_paged_server_kernel_matches_ref():
