@@ -28,7 +28,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import model as M
 from repro.runtime import (
-    Arrival, EngineConfig, FrontDoor, GenerationRequest, SamplingParams,
+    Arrival, CacheConfig, EngineConfig, FrontDoor, GenerationRequest,
+    SamplingParams,
     TokenBudgetPolicy, VirtualClock, latency_report, make_engine,
 )
 
@@ -71,8 +72,10 @@ def run_load(cfg, params, arrivals, *, page_size: int, max_lanes: int,
                   for a in arrivals)
     per_seq = -(-longest // page_size) + 1
     engine_cfg = EngineConfig(
-        num_pages=per_seq * max_lanes + 8, page_size=page_size,
-        max_lanes=max_lanes, max_pages_per_seq=per_seq, chunk=chunk,
+        cache=CacheConfig(num_pages=per_seq * max_lanes + 8,
+                          page_size=page_size,
+                          max_pages_per_seq=per_seq),
+        max_lanes=max_lanes, chunk=chunk,
         use_kernel=use_kernel, clock=VirtualClock(),
         scheduler_policy=TokenBudgetPolicy(token_budget))
     engine = make_engine(cfg, params, engine_cfg)

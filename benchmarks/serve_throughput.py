@@ -41,6 +41,11 @@ Workloads, all emitted into ``BENCH_serve.json``:
   reference, and a zero unhandled-exception count, all CI-gated.
   Deadlines here are ``deadline_iters`` only: wall-clock ``deadline_s``
   would make the committed baseline nondeterministic.
+* a hierarchical prefix-cache workload (the ``hierarchical_cache``
+  section): a Zipf-weighted multi-tenant corpus ~4x the device pool,
+  served device-only vs with host+disk spill tiers and async promotion
+  on a virtual clock — tier hit rates, demotion/promotion counts,
+  prefill tokens saved, output token parity, all CI-gated.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py            # full
     PYTHONPATH=src python benchmarks/serve_throughput.py --smoke    # CI-sized
@@ -51,7 +56,9 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import shutil
 import sys
+import tempfile
 import time
 
 # The cluster sweep needs virtual devices on CPU; XLA only reads the flag
@@ -76,8 +83,8 @@ from repro.core.analysis import (
 from repro.core.tracing import EventType, TraceBuffer
 from repro.models import model as M
 from repro.runtime import (
-    EngineConfig, FaultInjector, FaultSpec, GenerationRequest,
-    SamplingParams, make_engine,
+    CacheConfig, EngineConfig, FaultInjector, FaultSpec, GenerationRequest,
+    SamplingParams, VirtualClock, make_engine,
 )
 
 try:                                  # script launch: sibling module
@@ -104,9 +111,10 @@ def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
     (default: greedy with ``max_new``)."""
     tracer = TraceBuffer(capacity=1 << 16)
     engine_cfg = EngineConfig(
-        num_pages=num_pages, page_size=page_size, max_lanes=max_lanes,
-        max_pages_per_seq=max_pages_per_seq, chunk=chunk,
-        use_kernel=use_kernel, enable_prefix_cache=enable_prefix_cache,
+        cache=CacheConfig(num_pages=num_pages, page_size=page_size,
+                          max_pages_per_seq=max_pages_per_seq,
+                          enable_prefix_cache=enable_prefix_cache),
+        max_lanes=max_lanes, chunk=chunk, use_kernel=use_kernel,
         spec_k=spec_k, clusters=clusters or 1, heads=heads,
         sharded=clusters is not None)
     srv = make_engine(cfg, params, engine_cfg, tracer=tracer)
@@ -136,7 +144,7 @@ def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
     if keep_events is not None:
         keep_events.extend(np.asarray(events).tolist())
     prompt_tokens = sum(len(p) for p in prompts)
-    hit_tokens = srv.pool.stats["prefix_hit_tokens"]
+    hit_tokens = srv.cache_stats().prefix_hit_tokens
     extra = {}
     if clusters is not None:
         bal = layer2_cluster_balance(layer1_decode(events),
@@ -319,9 +327,10 @@ def run_preemption_probe(cfg, params, *, page_size, max_new, use_kernel,
     def run(num_pages):
         tracer = TraceBuffer(capacity=1 << 16)
         srv = make_engine(cfg, params, EngineConfig(
-            num_pages=num_pages, page_size=page_size, max_lanes=2,
-            max_pages_per_seq=per_seq + 1, chunk=chunk,
-            use_kernel=use_kernel, enable_prefix_cache=False),
+            cache=CacheConfig(num_pages=num_pages, page_size=page_size,
+                              max_pages_per_seq=per_seq + 1,
+                              enable_prefix_cache=False),
+            max_lanes=2, chunk=chunk, use_kernel=use_kernel),
             tracer=tracer)
         srv.submit(GenerationRequest(
             rid=0, prompt=tuple(prompts[0]), priority=0,
@@ -396,9 +405,11 @@ def run_fault_storm(cfg, params, *, page_size, max_lanes, use_kernel,
               1: FaultSpec("corrupt", op="put")})
     tracer = TraceBuffer(capacity=1 << 16)
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=per_seq * max_lanes + max(per_seq // 2, 1),
-        page_size=page_size, max_lanes=max_lanes, max_pages_per_seq=per_seq,
-        chunk=chunk, use_kernel=use_kernel, enable_prefix_cache=False,
+        cache=CacheConfig(
+            num_pages=per_seq * max_lanes + max(per_seq // 2, 1),
+            page_size=page_size, max_pages_per_seq=per_seq,
+            enable_prefix_cache=False),
+        max_lanes=max_lanes, chunk=chunk, use_kernel=use_kernel,
         fault_injector=inj, swap_retries=3, retry_backoff_s=0.0,
         max_queue_depth=requests - 1, watchdog_iters=256), tracer=tracer)
 
@@ -483,6 +494,113 @@ def run_fault_storm(cfg, params, *, page_size, max_lanes, use_kernel,
         "faults_contained": assert_faults_contained(events),
         "pool_invariants_ok": invariants_ok,
         "backing_store_empty": len(srv.backing) == 0,
+    }
+
+
+def _make_tenant_prompts(tenants, visits, sys_len, tail_len, vocab, seed=17):
+    """Long-tailed multi-tenant workload: each tenant owns a distinct
+    page-aligned system prompt; visits are Zipf-weighted (a few hot
+    tenants, a long tail of cold ones) with a unique per-visit user tail
+    so only the system prefix is shareable."""
+    rng = np.random.default_rng(seed)
+    systems = [rng.integers(1, vocab, size=sys_len).tolist()
+               for _ in range(tenants)]
+    weights = 1.0 / np.arange(1, tenants + 1)
+    weights /= weights.sum()
+    order = rng.choice(tenants, size=visits, p=weights)
+    prompts = [systems[int(t)] +
+               rng.integers(1, vocab, size=tail_len).tolist()
+               for t in order]
+    return prompts, [int(t) for t in order]
+
+
+def run_hierarchical_cache(cfg, params, *, page_size, use_kernel,
+                           tenants=16, visits=24, max_new=4, tail_len=2,
+                           chunk=4, max_lanes=2) -> dict:
+    """Tiered prefix cache vs device-only over a prefix corpus ~4x the
+    device pool.
+
+    The tenant corpus cannot fit on device, so the device-only engine
+    keeps evicting (dropping) cold tenants' prefix pages and re-prefilling
+    them on the next visit.  The tiered engine demotes evicted pages to a
+    host tier and, under host pressure, to a disk tier; a later visit
+    hits the index, admits immediately, and the payload is promoted back
+    H2D asynchronously on the engine clock.  Both runs ride a
+    ``VirtualClock`` (promotion latency is modeled, not slept) and must
+    produce token-identical outputs."""
+    sys_len = 4 * page_size                   # 4 full pages per tenant
+    prompts, order = _make_tenant_prompts(tenants, visits, sys_len,
+                                          tail_len, cfg.vocab_size)
+    corpus_pages = tenants * (sys_len // page_size)
+    num_pages = corpus_pages // 4             # corpus is 4x the device pool
+    per_seq = -(-(sys_len + tail_len + max_new) // page_size) + 1
+    prompt_tokens = sum(len(p) for p in prompts)
+
+    def run(tiered):
+        tmp = tempfile.mkdtemp(prefix="bench_hier_disk_") if tiered else None
+        srv = None
+        try:
+            engine_cfg = EngineConfig(
+                cache=CacheConfig(
+                    num_pages=num_pages, page_size=page_size,
+                    max_pages_per_seq=per_seq,
+                    host_tier_pages=corpus_pages // 4 if tiered else 0,
+                    disk_tier_pages=2 * corpus_pages if tiered else 0,
+                    disk_dir=tmp, prefetch_depth=2,
+                    promote_latency_s=0.002 if tiered else 0.0),
+                max_lanes=max_lanes, chunk=chunk, use_kernel=use_kernel,
+                clock=VirtualClock())
+            srv = make_engine(cfg, params, engine_cfg)
+            for rid, p in enumerate(prompts):
+                srv.submit(GenerationRequest(
+                    rid=rid, prompt=tuple(p),
+                    sampling=SamplingParams(max_new=max_new)))
+            done = srv.run()
+            assert len(done) == len(prompts), "workload did not drain"
+            cs = srv.cache_stats()
+            hits = (cs.hits_device_pages + cs.hits_host_pages +
+                    cs.hits_disk_pages)
+            lookups = hits + cs.miss_pages
+            return {
+                "iterations": srv.iterations,
+                "virtual_duration_s": round(srv.clock.now(), 9),
+                "prefill_tokens": srv.prefill_tokens,
+                "prefix_hit_tokens": cs.prefix_hit_tokens,
+                "prefix_hit_rate": hits / max(lookups, 1),
+                "hits_device_pages": cs.hits_device_pages,
+                "hits_host_pages": cs.hits_host_pages,
+                "hits_disk_pages": cs.hits_disk_pages,
+                "miss_pages": cs.miss_pages,
+                "demoted_pages": cs.demoted_pages,
+                "promoted_pages": cs.promoted_pages,
+                "dropped_entries": cs.dropped_entries,
+                "bytes_demoted": cs.bytes_demoted,
+                "bytes_promoted": cs.bytes_promoted,
+                "outputs": {r.rid: list(r.tokens) for r in done},
+            }
+        finally:
+            if srv is not None:
+                srv.close()
+            if tmp is not None:
+                shutil.rmtree(tmp, ignore_errors=True)
+
+    device_only = run(tiered=False)
+    tiered = run(tiered=True)
+    token_parity = device_only.pop("outputs") == tiered.pop("outputs")
+    return {
+        "workload": {"tenants": tenants, "visits": visits,
+                     "sys_len": sys_len, "tail_len": tail_len,
+                     "max_new": max_new, "page_size": page_size,
+                     "device_pages": num_pages,
+                     "corpus_pages": corpus_pages,
+                     "prompt_tokens": prompt_tokens},
+        "corpus_to_pool_ratio": corpus_pages / num_pages,
+        "device_only": device_only,
+        "tiered": tiered,
+        "token_parity": token_parity,
+        "prefix_hit_rate": tiered["prefix_hit_rate"],
+        "prefill_tokens_saved":
+            device_only["prefill_tokens"] - tiered["prefill_tokens"],
     }
 
 
@@ -643,6 +761,10 @@ def main(argv=None) -> dict:
                                   requests=storm_reqs,
                                   max_new=storm_max_new)
 
+    hier = run_hierarchical_cache(cfg, params, page_size=args.page_size,
+                                  use_kernel=use_kernel,
+                                  visits=24 if args.smoke else 48)
+
     latency = run_latency_workload(cfg, params, smoke=args.smoke)
 
     trace_events = {} if args.trace_out else None
@@ -688,6 +810,7 @@ def main(argv=None) -> dict:
         "speculation": speculation,
         "sampling": sampling,
         "degradation": degradation,
+        "hierarchical_cache": hier,
         "latency": latency,
         "cluster_sweep": sweep,
     }
@@ -754,6 +877,19 @@ def main(argv=None) -> dict:
           f"parity={dg['survivor_parity']} "
           f"contained={dg['faults_contained']} "
           f"unhandled={dg['unhandled_exceptions']}")
+    hc = result["hierarchical_cache"]
+    print(f"hierarchical cache (corpus={hc['workload']['corpus_pages']}p, "
+          f"device={hc['workload']['device_pages']}p, "
+          f"ratio={hc['corpus_to_pool_ratio']:.1f}x): "
+          f"hit-rate={hc['device_only']['prefix_hit_rate']:.2f}"
+          f"->{hc['tiered']['prefix_hit_rate']:.2f}  "
+          f"hits dev/host/disk={hc['tiered']['hits_device_pages']}/"
+          f"{hc['tiered']['hits_host_pages']}/"
+          f"{hc['tiered']['hits_disk_pages']}  "
+          f"demoted={hc['tiered']['demoted_pages']} "
+          f"promoted={hc['tiered']['promoted_pages']}  "
+          f"prefill tokens saved={hc['prefill_tokens_saved']}  "
+          f"parity={hc['token_parity']}")
     lt = result["latency"]
     print(f"latency (rate={lt['workload']['rate_rps']} rps, "
           f"budget={lt['workload']['token_budget']}): "
@@ -789,6 +925,13 @@ def main(argv=None) -> dict:
         "a faulted request never reached REQUEST_FINISH"
     assert dg["pool_invariants_ok"] and dg["backing_store_empty"], \
         "fault storm leaked pool or backing-store state"
+    assert hc["token_parity"], \
+        "tiered prefix cache changed outputs vs device-only"
+    assert hc["tiered"]["prefix_hit_rate"] > \
+        hc["device_only"]["prefix_hit_rate"], \
+        "tiered cache did not beat device-only hit rate"
+    assert hc["corpus_to_pool_ratio"] >= 4, \
+        "hierarchical-cache corpus must be >= 4x the device pool"
     assert lt["replay_identical"], \
         "same-seed latency replays diverged (virtual clock leaked wall time)"
     assert lt["completed"] == lt["requests"], \

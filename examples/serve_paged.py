@@ -23,7 +23,8 @@ from repro.core.analysis import layer1_decode, layer2_tlb_transactions, \
     layer2_request_lifecycles, render_timeline
 from repro.models import model as M
 from repro.runtime import (
-    EngineConfig, GenerationRequest, SamplingParams, make_engine,
+    CacheConfig, EngineConfig, GenerationRequest, SamplingParams,
+    make_engine,
 )
 
 
@@ -43,9 +44,10 @@ def main():
     cfg = get_config(args.arch).smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=24, page_size=4, max_lanes=2, max_pages_per_seq=16,
-        chunk=args.chunk, use_kernel=args.kernel,
-        enable_prefix_cache=not args.no_prefix_cache))
+        cache=CacheConfig(num_pages=24, page_size=4,
+                          max_pages_per_seq=16,
+                          enable_prefix_cache=not args.no_prefix_cache),
+        max_lanes=2, chunk=args.chunk, use_kernel=args.kernel))
     system = [9, 9, 8, 2, 5, 5, 1, 3]          # the shared "system prompt"
     requests = []
     for rid in range(args.requests):

@@ -59,6 +59,17 @@ regression):
   the load generator diverge, the virtual clock leaked wall time and
   every latency gate above is noise.
 
+The ``hierarchical_cache`` section is gated the same way (a missing
+section fails outright):
+
+* ``hierarchical_cache.tiered.prefix_hit_rate`` must be strictly above
+  ``hierarchical_cache.device_only.prefix_hit_rate`` — the host/disk
+  spill tiers must actually buy hits the device pool alone cannot hold;
+* ``hierarchical_cache.corpus_to_pool_ratio`` >= ``--corpus-ratio-floor``
+  (default 4) — the workload must genuinely overflow the device pool;
+* ``hierarchical_cache.token_parity`` must be true — pages restored
+  through the tiers must decode token-identically to device-only.
+
 Robustness contract (tested by ``tests/test_check_bench.py``):
 
 * workload descriptor mismatch -> exit 2 (the comparison is meaningless);
@@ -98,12 +109,15 @@ GATED = [
     (("latency", "tpot_p95_s"), "TPOT p95 (virtual s)", "lower"),
     (("latency", "tpot_p99_s"), "TPOT p99 (virtual s)", "lower"),
     (("latency", "slo_goodput"), "latency SLO goodput", "higher"),
+    (("hierarchical_cache", "tiered", "prefix_hit_rate"),
+     "tiered prefix-cache hit rate", "higher"),
 ]
 
 SPEC_ACCEPT_FLOOR = 0.25
 GOODPUT_FLOOR = 0.4
 DEADLINE_FLOOR = 0.5
 SLO_GOODPUT_FLOOR = 0.5
+CORPUS_RATIO_FLOOR = 4.0
 
 
 def _dig(d, path):
@@ -257,6 +271,52 @@ def check_latency_absolute(fresh: dict, slo_goodput_floor: float) -> bool:
     return ok
 
 
+def check_hierarchical_cache_absolute(
+        fresh: dict, ratio_floor: float = CORPUS_RATIO_FLOOR) -> bool:
+    """Absolute tiered prefix-cache gates on the fresh result alone.
+
+    A missing ``hierarchical_cache`` section fails (like ``degradation``
+    and ``latency``): the tiered-cache probe going silent is the
+    regression.  The tiered engine must strictly beat the device-only
+    hit rate on a corpus at least ``ratio_floor`` times the device pool,
+    and tier restores must be token-exact (``token_parity``)."""
+    hc = fresh.get("hierarchical_cache")
+    if not isinstance(hc, dict):
+        print("FAIL hierarchical_cache section missing from fresh result")
+        return False
+    ok = True
+    try:
+        tiered = float(_dig(hc, ("tiered", "prefix_hit_rate")))
+        device = float(_dig(hc, ("device_only", "prefix_hit_rate")))
+        ratio = float(hc["corpus_to_pool_ratio"])
+        parity = hc["token_parity"]
+    except (KeyError, TypeError, ValueError) as e:
+        print(f"FAIL hierarchical_cache section incomplete in fresh "
+              f"result: {e}")
+        return False
+    if not tiered > device:
+        print(f"FAIL tiered hit rate {tiered:.3f} does not beat "
+              f"device-only {device:.3f}")
+        ok = False
+    else:
+        print(f"OK   tiered hit rate {tiered:.3f} > device-only "
+              f"{device:.3f}")
+    if ratio < ratio_floor:
+        print(f"FAIL corpus/pool ratio {ratio:.2f} below floor "
+              f"{ratio_floor:.2f} (workload too easy to gate on)")
+        ok = False
+    else:
+        print(f"OK   corpus/pool ratio {ratio:.2f} >= floor "
+              f"{ratio_floor:.2f}")
+    if parity is not True:
+        print("FAIL tiered outputs not token-identical to device-only "
+              "(token_parity must be true)")
+        ok = False
+    else:
+        print("OK   tiered outputs token-identical to device-only")
+    return ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True,
@@ -276,6 +336,10 @@ def main(argv=None) -> int:
     ap.add_argument("--slo-goodput-floor", type=float,
                     default=SLO_GOODPUT_FLOOR,
                     help="absolute floor on latency.slo_goodput")
+    ap.add_argument("--corpus-ratio-floor", type=float,
+                    default=CORPUS_RATIO_FLOOR,
+                    help="absolute floor on hierarchical_cache."
+                         "corpus_to_pool_ratio")
     args = ap.parse_args(argv)
 
     base = _load(args.baseline, "baseline")
@@ -296,9 +360,11 @@ def main(argv=None) -> int:
     ok &= check_degradation_absolute(fresh, args.goodput_floor,
                                      args.deadline_floor)
     ok &= check_latency_absolute(fresh, args.slo_goodput_floor)
+    ok &= check_hierarchical_cache_absolute(fresh, args.corpus_ratio_floor)
     if not ok:
         print(f"bench gate FAILED (>{args.max_regress:.0%} regression "
-              f"or absolute speculation/degradation/latency gate)")
+              f"or absolute speculation/degradation/latency/"
+              f"hierarchical-cache gate)")
         return 1
     print("bench gate passed")
     return 0

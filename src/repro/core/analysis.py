@@ -286,6 +286,62 @@ def assert_faults_contained(events: List[Event]) -> bool:
     return touched <= finished
 
 
+def layer2_tier_residency(events: Iterable[Event]) -> Dict:
+    """Platform: hierarchical prefix-cache tier story from the event
+    stream.
+
+    ``PAGE_DEMOTE`` / ``PAGE_PROMOTE`` carry ``(entry_id,
+    src_tier * 4 + dst_tier)`` with tiers 0=device, 1=host, 2=disk,
+    3=dropped.  Returns each entry's transition chain plus aggregate move
+    counts by (src, dst), admission-hit tallies per serving tier
+    (promotions back to device, split by where the payload came from) and
+    the set of entries that ended dropped."""
+    tiers = {0: "device", 1: "host", 2: "disk", 3: "dropped"}
+    chains: Dict[int, List[Dict]] = defaultdict(list)
+    moves: Dict[str, int] = defaultdict(int)
+    promoted_from: Dict[str, int] = defaultdict(int)
+    for e in events:
+        if e.etype not in (EventType.PAGE_DEMOTE, EventType.PAGE_PROMOTE):
+            continue
+        src, dst = tiers[(e.a1 >> 2) & 3], tiers[e.a1 & 3]
+        chains[e.a0].append({"ts": e.ts, "src": src, "dst": dst,
+                             "kind": ("demote"
+                                      if e.etype == EventType.PAGE_DEMOTE
+                                      else "promote")})
+        moves[f"{src}->{dst}"] += 1
+        if e.etype == EventType.PAGE_PROMOTE:
+            promoted_from[src] += 1
+    residency: Dict[int, str] = {
+        eid: chain[-1]["dst"] for eid, chain in chains.items()}
+    return {
+        "entries": dict(sorted(chains.items())),
+        "moves": dict(sorted(moves.items())),
+        "promoted_from": dict(sorted(promoted_from.items())),
+        "residency": dict(sorted(residency.items())),
+        "dropped": sorted(e for e, t in residency.items()
+                          if t == "dropped"),
+    }
+
+
+def assert_tier_conservation(events: List[Event]) -> bool:
+    """No indexed page is lost or duplicated across tiers: every entry's
+    demote/promote chain is *contiguous* — each move departs from the tier
+    the previous move arrived at.  An entry's first move must leave the
+    device tier (entries are born on-device by registration), and after
+    being dropped any tier may re-source it (a fresh on-device
+    re-registration of the same prefix restarts the chain)."""
+    where: Dict[int, int] = {}
+    for e in events:
+        if e.etype not in (EventType.PAGE_DEMOTE, EventType.PAGE_PROMOTE):
+            continue
+        src, dst = (e.a1 >> 2) & 3, e.a1 & 3
+        cur = where.get(e.a0, 0)          # entries start on-device
+        if cur != src and cur != 3:       # dropped -> re-registered: reset
+            return False
+        where[e.a0] = dst
+    return True
+
+
 def assert_swaps_balanced(events: List[Event]) -> bool:
     """Every page swapped out for a request that eventually finished was
     swapped back in first (no request completes on lost KV state)."""

@@ -195,7 +195,15 @@ class PagedKVPool:
       payload device-side (``drain_cow``);
     * a released page that is still prefix-indexed parks on a *cached-free*
       LRU list instead of the free list — reusable as a prefix hit until
-      capacity pressure evicts it.
+      capacity pressure evicts it;
+    * with ``spill_enabled`` (PR 8, the HERO SVM ladder), capacity pressure
+      does not *lose* the entry: the key moves to a ``spilled`` side index
+      and the page id + key are queued on ``pending_demote`` for the engine
+      to park the payload in a host/disk backing tier.  An admission-time
+      ``match_prefix_tiered`` hit on a spilled entry re-enters the device
+      index via :meth:`adopt_spilled` (the engine promotes the payload
+      back).  Every entry carries a stable ``key_ids`` id so demote /
+      promote trace events chain per entry across its whole lifetime.
     """
 
     def __init__(self, num_pages: int, page_size: int, max_pages_per_seq: int,
@@ -213,9 +221,18 @@ class PagedKVPool:
         self.cached_free: "OrderedDict[int, None]" = OrderedDict()  # LRU
         self.pending_cow: List[Tuple[int, int, int, int]] = []
         self.rab = rab
+        # --- tiered spill state (engine drives the payload movement) ---
+        self.spill_enabled = False
+        self.spilled: Dict[Tuple[int, ...], int] = {}      # key -> entry id
+        self.key_ids: Dict[Tuple[int, ...], int] = {}      # key -> stable id
+        self._next_key_id = 0
+        self.key_id_step = 1       # sharded pools interleave id namespaces
+        self.pending_demote: List[Tuple[int, Tuple[int, ...]]] = []
+        self.pending_spill_drop: List[Tuple[int, ...]] = []
         self.stats = {"prefix_hit_pages": 0, "prefix_hit_tokens": 0,
                       "cow": 0, "cache_evictions": 0, "swapped_out": 0,
-                      "swapped_in": 0, "spec_trimmed_pages": 0}
+                      "swapped_in": 0, "spec_trimmed_pages": 0,
+                      "cache_demoted": 0, "cache_promoted": 0}
 
     # ------------------------------------------------------------ capacity --
     def available(self) -> int:
@@ -243,12 +260,24 @@ class PagedKVPool:
 
     def _take_page(self) -> int:
         """Pop a physical page: free list first, then evict the LRU
-        cached-free page (dropping its prefix-index entry)."""
+        cached-free page.  Without spill the evicted prefix-index entry is
+        dropped; with spill the entry demotes — its key moves to the
+        ``spilled`` index and ``(page, key)`` is queued so the engine parks
+        the payload down-tier *before* anything overwrites the page."""
         if self.free:
             return self.free.pop()
         if self.cached_free:
             p, _ = self.cached_free.popitem(last=False)
-            self._unregister(p)
+            key = self.page_key.get(p)
+            if self.spill_enabled and key is not None:
+                del self.page_key[p]
+                if self.prefix_index.get(key) == p:
+                    del self.prefix_index[key]
+                self.spilled[key] = self.key_ids[key]
+                self.pending_demote.append((p, key))
+                self.stats["cache_demoted"] += 1
+            else:
+                self._unregister(p)
             self.stats["cache_evictions"] += 1
             return p
         raise MemoryError("KV pool exhausted")
@@ -394,13 +423,23 @@ class PagedKVPool:
 
     def register_page(self, seq: int, lpage: int, tokens):
         """Publish ``seq``'s page ``lpage`` (whose KV holds exactly the
-        prompt prefix ``tokens[:end-of-page]``) in the prefix index."""
+        prompt prefix ``tokens[:end-of-page]``) in the prefix index.  A
+        freshly prefilled on-device copy supersedes a spilled one: the key
+        is re-registered here and queued on ``pending_spill_drop`` so the
+        engine releases the stale down-tier payload (an entry is resident
+        in exactly one tier)."""
         p = self.page_table[(seq, lpage)]
         key = self.prefix_key(tokens, lpage)
         if key in self.prefix_index or p in self.page_key:
             return
+        if key not in self.key_ids:
+            self.key_ids[key] = self._next_key_id
+            self._next_key_id += self.key_id_step
         self.prefix_index[key] = p
         self.page_key[p] = key
+        if key in self.spilled:
+            del self.spilled[key]
+            self.pending_spill_drop.append(key)
 
     def _unregister(self, p: int):
         key = self.page_key.pop(p, None)
@@ -421,6 +460,60 @@ class PagedKVPool:
             pages.append(p)
             n = min(n + self.page_size, len(tokens))
         return pages, n
+
+    def match_prefix_tiered(self, tokens
+                            ) -> Tuple[List[Tuple[str, object]], int]:
+        """Longest cached prefix of ``tokens`` across *all* tiers:
+        ``([("device", ppage) | ("spilled", key)], tokens covered)``.
+        Device-resident pages chain seamlessly with spilled entries — a
+        prefix can be half on-device, half parked down-tier; the engine
+        promotes the spilled half at admission."""
+        entries: List[Tuple[str, object]] = []
+        n = 0
+        while n < len(tokens):
+            key = self.prefix_key(tokens, len(entries))
+            p = self.prefix_index.get(key)
+            if p is not None:
+                entries.append(("device", p))
+            elif key in self.spilled:
+                entries.append(("spilled", key))
+            else:
+                break
+            n = min(n + self.page_size, len(tokens))
+        return entries, n
+
+    def adopt_spilled(self, seq: int, lpage: int, key: Tuple[int, ...]) -> int:
+        """Promote a spilled entry back on-device for ``seq``: draw a fresh
+        physical page through the ordinary (reservation-charged) allocation
+        path, map it at ``lpage``, and re-register the key on it.  The
+        engine owns uploading the fetched payload into the returned page."""
+        assert key in self.spilled, key
+        del self.spilled[key]
+        p = self.alloc_page(seq, lpage)
+        self.prefix_index[key] = p
+        self.page_key[p] = key
+        self.stats["cache_promoted"] += 1
+        self.stats["prefix_hit_pages"] += 1
+        return p
+
+    def drop_spilled(self, key: Tuple[int, ...]):
+        """Forget a spilled entry (its backing payload was lost or its
+        fetch faulted unrecoverably) — the prefix is simply no longer
+        cached."""
+        self.spilled.pop(key, None)
+
+    def drain_demotions(self) -> List[Tuple[int, Tuple[int, ...]]]:
+        """Hand queued (ppage, key) demotions to the engine — it must pull
+        the page payloads D2H and park them *before* the step that reuses
+        those pages scatters over them — and clear the queue."""
+        out, self.pending_demote = self.pending_demote, []
+        return out
+
+    def drain_spill_drops(self) -> List[Tuple[int, ...]]:
+        """Keys whose spilled payload was superseded by an on-device
+        re-registration; the engine drops them from the backing store."""
+        out, self.pending_spill_drop = self.pending_spill_drop, []
+        return out
 
     # ---------------------------------------------------------- translate --
     def _invalidate(self, seq: int, lpage: int):
@@ -463,6 +556,11 @@ class PagedKVPool:
         for p in self.page_key:
             assert p in self.refcount or p in self.cached_free, \
                 f"indexed page {p} is on the raw free list"
+        assert not (set(self.spilled) & set(self.prefix_index)), \
+            "entry resident in two tiers (device-indexed AND spilled)"
+        for key, eid in self.spilled.items():
+            assert self.key_ids.get(key) == eid, \
+                f"spilled entry {key} lost its stable id"
         assert self.available() >= 0, "reservations exceed capacity"
         for (s, lp) in self.page_table:
             n = self.seq_len.get(s, 0)
@@ -530,6 +628,11 @@ class ClusterPagedPool:
                      for _ in range(clusters)]
         self.pools = [PagedKVPool(num_pages, page_size, max_pages_per_seq,
                                   rab) for rab in self.rabs]
+        for c, pool in enumerate(self.pools):
+            # interleaved prefix-entry id namespaces: demote/promote trace
+            # events stay globally unambiguous across cluster shards
+            pool._next_key_id = c
+            pool.key_id_step = clusters
         self.cluster_of: Dict[int, int] = {}          # seq -> cluster
 
     # ------------------------------------------------------------ routing --

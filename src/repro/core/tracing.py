@@ -86,6 +86,14 @@ class EventType(enum.IntEnum):
     # live-traffic serving (the host front door feeding the engine a
     # continuous arrival stream instead of one closed batch)
     REQUEST_ARRIVE = 51    # request entered the queue: (rid, queue depth)
+    # hierarchical prefix cache (HERO SVM: host DRAM reachable beyond
+    # scratchpad capacity — evicted-but-indexed prefix pages demote to a
+    # host tier and, under host pressure, to a disk tier; an admission hit
+    # on a non-resident page promotes it back).  args: (entry_id,
+    # src_tier * 4 + dst_tier) with tiers 0=device, 1=host, 2=disk,
+    # 3=dropped — see core.analysis.layer2_tier_residency
+    PAGE_DEMOTE = 52       # cache entry moved down-tier (or dropped)
+    PAGE_PROMOTE = 53      # cache entry restored to the device pool
 
 
 HOST_TRACER_ID = 255

@@ -18,7 +18,8 @@ from repro.configs import get_config
 from repro.core.analysis import layer1_decode, layer2_tlb_transactions
 from repro.models import model as M
 from repro.runtime import (
-    EngineConfig, GenerationRequest, SamplingParams, make_engine,
+    CacheConfig, EngineConfig, GenerationRequest, SamplingParams,
+    make_engine,
 )
 
 
@@ -53,9 +54,12 @@ def main():
 
     cfg = get_config(args.arch).smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    engine_cfg = EngineConfig(num_pages=args.pages, page_size=args.page_size,
-                              max_lanes=args.lanes, max_pages_per_seq=16,
-                              use_kernel=args.kernel, spec_k=args.spec_k)
+    engine_cfg = EngineConfig(
+        cache=CacheConfig(num_pages=args.pages,
+                          page_size=args.page_size,
+                          max_pages_per_seq=16),
+        max_lanes=args.lanes, use_kernel=args.kernel,
+        spec_k=args.spec_k)
     srv = make_engine(cfg, params, engine_cfg)
     requests = [
         GenerationRequest(

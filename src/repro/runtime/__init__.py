@@ -1,7 +1,7 @@
 from repro.runtime.trainer import Trainer, TrainerConfig, FailureInjector
 from repro.runtime.api import (
-    EngineConfig, GenerationRequest, GenerationResult, SamplingParams,
-    TokenDelta, make_engine,
+    CacheConfig, CacheStats, EngineConfig, GenerationRequest,
+    GenerationResult, SamplingParams, TokenDelta, make_engine,
     FINISH_STOP, FINISH_LENGTH, FINISH_ABORTED,
     FINISH_TIMEOUT, FINISH_ERROR, FINISH_SHED,
 )
@@ -19,7 +19,8 @@ from repro.runtime.speculative import (
 
 __all__ = ["Trainer", "TrainerConfig", "FailureInjector", "PagedServer",
            "ShardedPagedServer", "Drafter", "NGramDrafter",
-           "DraftModelDrafter", "EngineConfig", "GenerationRequest",
+           "DraftModelDrafter", "CacheConfig", "CacheStats",
+           "EngineConfig", "GenerationRequest",
            "GenerationResult", "SamplingParams", "TokenDelta",
            "make_engine", "FINISH_STOP", "FINISH_LENGTH",
            "FINISH_ABORTED", "FINISH_TIMEOUT", "FINISH_ERROR",

@@ -36,13 +36,14 @@ flows through four small frozen dataclasses plus one factory:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 from repro.core.rab import RABConfig
 
 __all__ = [
-    "EngineConfig", "SamplingParams", "GenerationRequest",
-    "GenerationResult", "TokenDelta", "make_engine",
+    "EngineConfig", "CacheConfig", "CacheStats", "SamplingParams",
+    "GenerationRequest", "GenerationResult", "TokenDelta", "make_engine",
     "FINISH_STOP", "FINISH_LENGTH", "FINISH_ABORTED",
     "FINISH_TIMEOUT", "FINISH_ERROR", "FINISH_SHED",
 ]
@@ -165,6 +166,85 @@ class TokenDelta:
 
 
 @dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Paged KV-cache spec: the device pool plus the tiered spill hierarchy
+    (HERO SVM: scratchpad -> host DRAM -> storage, each level larger and
+    slower).  Lives at :attr:`EngineConfig.cache`.
+
+    ``host_tier_pages > 0`` turns spill on: prefix-index entries evicted
+    from the device pool demote their payload to a host tier (and, under
+    host pressure, to a ``disk_tier_pages``-capped disk tier under
+    ``disk_dir``) instead of vanishing, and an admission-time hit on a
+    spilled entry promotes it back.  Promotion completes asynchronously on
+    the engine clock: a batch of ``prefetch_depth`` pages costs one
+    ``promote_latency_s`` quantum, during which the admitted request waits
+    (other lanes keep decoding) — under a ``VirtualClock`` the schedule
+    replays byte-identically."""
+    num_pages: int = 64             # device pool capacity (per cluster)
+    page_size: int = 8              # tokens per KV page
+    max_pages_per_seq: int = 16     # logical address space per sequence
+    enable_prefix_cache: bool = True
+    host_tier_pages: int = 0        # 0 = spill off (entries drop on evict)
+    disk_tier_pages: int = 0        # 0 = no disk tier below the host tier
+    disk_dir: Optional[str] = None  # None -> store-owned temp dir
+    prefetch_depth: int = 4         # pages promoted per latency quantum
+    promote_latency_s: float = 0.0  # modeled H2D promotion quantum
+
+    def __post_init__(self):
+        if min(self.num_pages, self.page_size, self.max_pages_per_seq) < 1:
+            raise ValueError("num_pages, page_size and max_pages_per_seq "
+                             "must all be >= 1")
+        if self.host_tier_pages < 0 or self.disk_tier_pages < 0:
+            raise ValueError("tier capacities must be >= 0")
+        if self.disk_tier_pages and not self.host_tier_pages:
+            raise ValueError("disk_tier_pages requires host_tier_pages > 0 "
+                             "(the disk tier hangs below the host tier)")
+        if self.prefetch_depth < 1:
+            raise ValueError("prefetch_depth must be >= 1")
+        if self.promote_latency_s < 0:
+            raise ValueError("promote_latency_s must be >= 0")
+
+    @property
+    def spill_enabled(self) -> bool:
+        return self.host_tier_pages > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheStats:
+    """A frozen snapshot of the cache hierarchy, from
+    ``engine.cache_stats()`` — the public replacement for poking
+    ``pool.cached_free`` / backing-store internals.
+
+    Hit counts are in *pages served at admission*, split by the tier the
+    page was resident in when the request hit it; ``miss_pages`` counts
+    prompt pages that had to prefill fresh.  Byte counters measure payload
+    traffic crossing tier boundaries in each direction."""
+    device_pages: int = 0           # device pool capacity (all clusters)
+    device_indexed: int = 0         # prefix entries resident on device
+    device_cached_free: int = 0     # ... of which parked on the LRU
+    host_pages: int = 0             # cache entries resident in host tier
+    disk_pages: int = 0             # cache entries resident in disk tier
+    hits_device_pages: int = 0
+    hits_host_pages: int = 0
+    hits_disk_pages: int = 0
+    miss_pages: int = 0
+    prefix_hit_tokens: int = 0      # prompt tokens served from any tier
+    promotions_in_flight: int = 0   # scheduled, not yet landed
+    demoted_pages: int = 0          # device -> down-tier parks
+    promoted_pages: int = 0         # down-tier -> device restores
+    dropped_entries: int = 0        # lost off the bottom tier / fetch fault
+    bytes_demoted: int = 0
+    bytes_promoted: int = 0
+    evictions: int = 0              # device LRU evictions (spill or drop)
+
+
+#: EngineConfig fields that moved into CacheConfig (PR 8); accepted flat
+#: for one release behind a DeprecationWarning.
+_CACHE_FLAT = ("num_pages", "page_size", "max_pages_per_seq",
+               "enable_prefix_cache")
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Every engine knob in one spec (HERO: one platform configuration
     drives the whole PMCA instantiation).
@@ -172,16 +252,24 @@ class EngineConfig:
     ``clusters`` / ``heads`` / ``mesh`` / ``sharded`` select the engine
     class through :func:`make_engine`: any multi-cluster, head-sharded or
     explicitly ``sharded`` spec builds a ``ShardedPagedServer`` (where
-    ``num_pages`` and ``max_lanes`` are per cluster), everything else the
-    plain ``PagedServer``.
-    """
-    # pool
-    num_pages: int = 64
-    page_size: int = 8
-    max_pages_per_seq: int = 16
+    ``cache.num_pages`` and ``max_lanes`` are per cluster), everything
+    else the plain ``PagedServer``.
+
+    Cache knobs live in the nested frozen :class:`CacheConfig` at
+    ``cache``.  The old flat spellings (``num_pages``, ``page_size``,
+    ``max_pages_per_seq``, ``enable_prefix_cache``) are accepted for one
+    release: a flat value that differs from ``cache``'s emits a
+    ``DeprecationWarning`` and is folded in; after normalization the flat
+    fields mirror ``cache`` so legacy readers keep working and
+    ``dataclasses.replace`` round-trips silently."""
+    # pool / cache hierarchy (flat fields are the deprecated spellings)
+    num_pages: Optional[int] = None             # DEPRECATED -> cache
+    page_size: Optional[int] = None             # DEPRECATED -> cache
+    max_pages_per_seq: Optional[int] = None     # DEPRECATED -> cache
     rab_cfg: RABConfig = RABConfig(l1_entries=8, l2_entries=32,
                                    l2_assoc=4, l2_banks=2)
-    enable_prefix_cache: bool = True
+    enable_prefix_cache: Optional[bool] = None  # DEPRECATED -> cache
+    cache: Optional[CacheConfig] = None         # None -> CacheConfig()
     # scheduler
     max_lanes: int = 4
     chunk: int = 16
@@ -219,6 +307,27 @@ class EngineConfig:
     #                                     this many iterations
     straggler_factor: float = 0.0       # 0 = off; EMA multiple that flags
     #                                     a straggler engine iteration
+
+    def __post_init__(self):
+        cache = self.cache if self.cache is not None else CacheConfig()
+        legacy = {}
+        for f in _CACHE_FLAT:
+            v = getattr(self, f)
+            if v is not None and v != getattr(cache, f):
+                legacy[f] = v
+        if legacy:
+            warnings.warn(
+                "EngineConfig(%s): flat cache knobs are deprecated; pass "
+                "EngineConfig(cache=CacheConfig(...)) instead"
+                % ", ".join(sorted(legacy)),
+                DeprecationWarning, stacklevel=3)
+            cache = dataclasses.replace(cache, **legacy)
+        object.__setattr__(self, "cache", cache)
+        # mirror back: legacy readers see one consistent spec, and
+        # dataclasses.replace() (which re-passes the mirrored values next
+        # to `cache`) round-trips without re-warning
+        for f in _CACHE_FLAT:
+            object.__setattr__(self, f, getattr(cache, f))
 
     @property
     def wants_sharded(self) -> bool:

@@ -120,7 +120,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.offload import BackingStoreError, HostBackingStore
+from repro.core.offload import (
+    BackingStoreError, DiskTier, HostBackingStore,
+    TIER_CODES, TIER_DEVICE, TIER_HOST,
+)
 from repro.core.rab import RAB, RABConfig, PagedKVPool
 from repro.core.tracing import EventType, TraceBuffer
 from repro.models import layers as L
@@ -131,9 +134,9 @@ from repro.kernels.paged_attention.ops import (
 )
 from repro.kernels.paged_attention.ref import paged_prefill_ref
 from repro.runtime.api import (
-    EngineConfig, GenerationRequest, GenerationResult, SamplingParams,
-    TokenDelta, FINISH_ABORTED, FINISH_ERROR, FINISH_LENGTH, FINISH_SHED,
-    FINISH_STOP, FINISH_TIMEOUT,
+    CacheStats, EngineConfig, GenerationRequest, GenerationResult,
+    SamplingParams, TokenDelta, FINISH_ABORTED, FINISH_ERROR, FINISH_LENGTH,
+    FINISH_SHED, FINISH_STOP, FINISH_TIMEOUT,
 )
 from repro.runtime.clock import MonotonicClock
 from repro.runtime.frontdoor import GreedyChunkPolicy
@@ -164,6 +167,9 @@ class SeqState:
     cluster: int = 0                  # owning PMCA cluster (sharded engine)
     reg_pages: int = 0                # prompt pages published to the index
     swapped: Optional[List[int]] = None   # lpages parked in the backing store
+    promoting: bool = False           # admitted, gated on an in-flight
+    #                                   prefix-page promotion (the lane
+    #                                   feeds nothing until it lands)
     deadline_iter: Optional[int] = None   # absolute engine-iteration bound
     deadline_t: Optional[float] = None    # absolute engine-clock bound
     not_before: float = 0.0           # engine-clock time before which this
@@ -194,8 +200,13 @@ class PagedServer:
             "paged engine supports plain-GQA transformer archs"
         self.engine_cfg = engine
         self.cfg, self.params = cfg, params
-        self.page_size, self.max_lanes = engine.page_size, engine.max_lanes
-        self.max_pages = engine.max_pages_per_seq
+        # EngineConfig.__post_init__ folded any legacy flat knobs into the
+        # grouped CacheConfig and mirrored them back, so `engine.cache` is
+        # always the authoritative spelling here
+        self.cache_cfg = engine.cache
+        self.page_size, self.max_lanes = self.cache_cfg.page_size, \
+            engine.max_lanes
+        self.max_pages = self.cache_cfg.max_pages_per_seq
         self.chunk = max(1, engine.chunk)
         self.tracer = tracer or TraceBuffer()
         self.use_kernel = engine.use_kernel
@@ -214,8 +225,9 @@ class PagedServer:
         # overridable construction hooks: the sharded subclass substitutes
         # per-cluster pools and mesh-sharded device state here instead of
         # allocating the unsharded versions only to discard them
-        self._build_pool(engine.num_pages, engine.rab_cfg)
-        self._build_device_state(engine.num_pages, engine.pages_per_step)
+        self._build_pool(self.cache_cfg.num_pages, engine.rab_cfg)
+        self._build_device_state(self.cache_cfg.num_pages,
+                                 engine.pages_per_step)
         self._bt_host = np.zeros((self.max_lanes, self.max_pages),
                                  np.int32)
         self.lanes: List[Optional[SeqState]] = [None] * self.max_lanes
@@ -227,14 +239,24 @@ class PagedServer:
         self.d2h_events = 0
         # shared-prefix caching + preemption (HERO SVM page sharing and
         # reclamation on the serving path)
-        self.enable_prefix_cache = engine.enable_prefix_cache
+        self.enable_prefix_cache = self.cache_cfg.enable_prefix_cache
         # fault tolerance: the injector (if any) perturbs the swap path;
         # it traces every decision through THIS engine's tracer so the
         # injected-vs-recovered story reads from one event stream
         self.faults = engine.fault_injector
         if self.faults is not None and self.faults.tracer is None:
             self.faults.tracer = self.tracer
-        self.backing = HostBackingStore(self.faults)
+        # hierarchical prefix cache (HERO SVM ladder: scratchpad -> host
+        # DRAM -> storage).  Swap traffic and demoted cache entries share
+        # one tier chain; with no host tier configured the store degrades
+        # to the flat host-dict it always was.
+        self.backing = self._build_backing_store()
+        if self.cache_cfg.spill_enabled and self.enable_prefix_cache:
+            for p in self._all_pools():
+                p.spill_enabled = True
+        self._promotions: List[dict] = []   # in-flight H2D prefetches
+        self.cache_hit_pages = {"device": 0, "host": 0, "disk": 0}
+        self.cache_miss_pages = 0
         self.swap_retries = max(0, engine.swap_retries)
         self.retry_backoff_s = max(0.0, engine.retry_backoff_s)
         self.max_queue_depth = max(0, engine.max_queue_depth)
@@ -315,6 +337,13 @@ class PagedServer:
         self.topk_dev = jnp.zeros((self.max_lanes,), jnp.int32)
         self.topp_dev = jnp.ones((self.max_lanes,), jnp.float32)
 
+    def _build_backing_store(self) -> HostBackingStore:
+        cc = self.cache_cfg
+        disk = DiskTier(cc.disk_tier_pages, cc.disk_dir) \
+            if cc.disk_tier_pages else None
+        return HostBackingStore(self.faults, host_pages=cc.host_tier_pages,
+                                disk_tier=disk)
+
     # ---------------------------------------------------------- pool seam --
     # Every pool access for a placed request routes through these, so the
     # sharded subclass can substitute cluster-local pools and translate
@@ -325,6 +354,10 @@ class PagedServer:
     def _pool(self, req: SeqState) -> PagedKVPool:
         return self._pool_of(req.cluster)
 
+    def _all_pools(self) -> List[PagedKVPool]:
+        """Every pool, indexed by cluster (one for the base engine)."""
+        return [self.pool]
+
     def _capacity_pages(self) -> int:
         """Page capacity one request can draw from (per cluster)."""
         return self.pool.num_pages
@@ -332,6 +365,28 @@ class PagedServer:
     def _gpage(self, req: SeqState, p: int) -> int:
         """Pool-local physical page -> index into self.kv_pages."""
         return p
+
+    def _gpage_c(self, cluster: int, p: int) -> int:
+        """Cluster-local physical page -> index into self.kv_pages."""
+        return p
+
+    # ---------------------------------------------------- cache tier seam --
+    def _cache_store_of(self, cluster: int) -> HostBackingStore:
+        """Tier store carrying ``cluster``'s demoted prefix-cache pages
+        (the sharded engine keeps one per cluster; swap traffic stays on
+        ``self.backing`` regardless)."""
+        return self.backing
+
+    def _cache_stores(self) -> List[HostBackingStore]:
+        return [self.backing]
+
+    def close(self):
+        """Release tier resources (disk-tier files and directories).
+        Idempotent; the engine stays usable for stats reads afterwards."""
+        stores = {id(s): s for s in self._cache_stores()}
+        stores.setdefault(id(self.backing), self.backing)
+        for st in stores.values():
+            st.close()
 
     # ------------------------------------------------------------- admin --
     def submit(self, req: GenerationRequest):
@@ -412,24 +467,34 @@ class PagedServer:
         if req.swapped is not None:            # resuming after preemption
             # preemption dropped every mapping, so the whole lifetime page
             # budget (restores + future allocations) is needed again
-            return {"resume": True, "hit_pages": [], "usable": 0,
+            return {"resume": True, "hits": [], "usable": 0,
                     "need": total, "cached_hits": 0, "cluster": cluster}
         usable, hits = 0, []
         if self.enable_prefix_cache and len(req.prompt) > 1:
-            pages, n = pool.match_prefix(req.prompt)
+            # the hit chain may cross tiers: ("device", ppage) entries map
+            # by sharing, ("spilled", key) entries are non-resident and
+            # cost a fresh page each (counted in `need` below) plus an
+            # async promotion at placement
+            entries, n = pool.match_prefix_tiered(req.prompt)
             # the final prompt token always runs through the model (it
             # produces the first sampled token), so it is never reused
             usable = min(n, len(req.prompt) - 1)
-            hits = pages[:-(-usable // ps)] if usable else []
-        need = total - usable // ps
-        cached = sum(1 for p in hits if p in pool.cached_free)
-        plan = {"resume": False, "hit_pages": hits, "usable": usable,
+            hits = entries[:-(-usable // ps)] if usable else []
+        # only *stable* device-resident full pages are free; spilled hits
+        # still draw a page from the pool for their promoted payload
+        full = usable // ps
+        dev_full = sum(1 for i, (kind, _v) in enumerate(hits)
+                       if kind == "device" and i < full)
+        need = total - dev_full
+        cached = sum(1 for kind, v in hits
+                     if kind == "device" and v in pool.cached_free)
+        plan = {"resume": False, "hits": hits, "usable": usable,
                 "need": need, "cached_hits": cached, "cluster": cluster}
         if hits and not self._fits(plan):
             # hits sitting on cached-free pages cost evictable capacity a
             # no-sharing admission would simply reuse — never let the cache
             # starve a request that fits without it
-            fallback = {"resume": False, "hit_pages": [], "usable": 0,
+            fallback = {"resume": False, "hits": [], "usable": 0,
                         "need": total, "cached_hits": 0, "cluster": cluster}
             if self._fits(fallback):
                 return fallback
@@ -480,12 +545,51 @@ class PagedServer:
             self.queue.remove(head)
             self._place(head, lane, plan)
 
+    def _resolve_spilled_hits(self, req: SeqState, plan: dict):
+        """Pull every spilled hit's payload out of the tier store *before*
+        any pool mutation.  A fetch fault (CRC mismatch, injected pop
+        fault past the retry budget) drops that entry from every tier and
+        re-plans — dropping a spilled hit never changes ``need`` (device
+        hits are untouched), so the replacement plan still fits and the
+        admission proceeds with whatever prefix remains."""
+        pool = self._pool_of(plan["cluster"])
+        store = self._cache_store_of(plan["cluster"])
+        while True:
+            fetched: dict = {}
+            ok = True
+            for lp, (kind, val) in enumerate(plan["hits"]):
+                if kind != "spilled":
+                    continue
+                eid = pool.key_ids[val]
+                try:
+                    payload, tier = self._with_retries(functools.partial(
+                        store.fetch_cache, eid, req.rid), req.rid)
+                except BackingStoreError:
+                    pool.drop_spilled(val)
+                    store.drop_cache(eid)
+                    self._trace_store_moves(store)
+                    ok = False
+                    break
+                fetched[lp] = (eid, payload, tier)
+            if ok:
+                return plan, fetched
+            plan = self._plan(req, plan["cluster"])
+
     def _place(self, req: SeqState, lane: int, plan: dict):
         rid = req.rid
         req.lane = lane
         req.cluster = plan["cluster"]
         pool = self._pool(req)
         self.lanes[lane] = req
+        fetched: dict = {}
+        if not plan["resume"] and any(k == "spilled" for k, _ in
+                                      plan["hits"]):
+            # fetch before reserving: a fetch fault re-plans through
+            # _fits, which must not see this request's own reservation
+            plan, fetched = self._resolve_spilled_hits(req, plan)
+        if not plan["resume"]:
+            prompt_pages = -(-len(req.prompt) // self.page_size)
+            self.cache_miss_pages += prompt_pages - len(plan["hits"])
         if plan["need"] > 0:
             # reserve the request's remaining lifetime page budget so
             # chunked prefill / restore can never hit exhaustion mid-stream
@@ -514,9 +618,19 @@ class PagedServer:
                 self.recovered_faults += 1
                 req.retry_attempt = 0
         elif plan["usable"]:
-            # prefix-cache hit: map the cached pages, skip their prefill
-            for lp, p in enumerate(plan["hit_pages"]):
-                pool.share_page(rid, lp, p)
+            # prefix-cache hit: map resident pages by sharing; adopt a
+            # fresh page for each spilled hit (its payload was fetched
+            # above and is uploaded in _begin_promotion below)
+            promo: List[tuple] = []
+            for lp, (kind, val) in enumerate(plan["hits"]):
+                if kind == "device":
+                    pool.share_page(rid, lp, val)
+                    self.cache_hit_pages["device"] += 1
+                else:
+                    eid, payload, tier = fetched[lp]
+                    p = pool.adopt_spilled(rid, lp, val)
+                    self.cache_hit_pages[tier] += 1
+                    promo.append((self._gpage(req, p), eid, payload, tier))
             pool.seq_len[rid] = plan["usable"]
             pool.stats["prefix_hit_tokens"] += plan["usable"]
             req.fed = plan["usable"]
@@ -525,9 +639,16 @@ class PagedServer:
             self.tracer.record_host(EventType.PREFIX_HIT, rid,
                                     plan["usable"])
             self._delta(rid, event="prefix_hit", data=plan["usable"])
+            if promo:
+                # adopting may have evicted+spilled other entries: park
+                # their payloads before the promotion upload can land on
+                # a recycled page
+                self._drain_tier_ops()
+                self._begin_promotion(req, promo)
         self._refresh_row(lane, req)
         sp = req.sampling
-        self.active_dev = self.active_dev.at[lane].set(1)
+        self.active_dev = self.active_dev.at[lane].set(
+            0 if req.promoting else 1)
         self.len_dev = self.len_dev.at[lane].set(
             pool.seq_len.get(rid, 0))
         self.seed_dev = self.seed_dev.at[lane].set(sp.seed & 0xFFFFFFFF)
@@ -580,6 +701,11 @@ class PagedServer:
         scheduler can never pin the pool behind preempted sequences."""
         rid, i = req.rid, req.lane
         pool = self._pool(req)
+        if req.promoting:
+            # the promoted payload is already device-resident (uploaded at
+            # placement), so the sweep below checkpoints correct data —
+            # just close the in-flight promotion's books first
+            self._land_promotions(force_rid=rid)
         mapped = pool.seq_pages(rid)
         if mapped:
             idx = jnp.asarray([self._gpage(req, p) for _, p in mapped])
@@ -659,6 +785,9 @@ class PagedServer:
             raise
         req.swapped = None
         phys = [self._gpage(req, pool.alloc_page(rid, lp)) for lp in lps]
+        # allocating may have evicted+spilled indexed pages: park their
+        # payloads before this restore's upload can overwrite them
+        self._drain_tier_ops()
         payload = jnp.stack([jnp.asarray(p) for p in payloads], axis=1)
         self.kv_pages = self.kv_pages.at[:, jnp.asarray(phys)].set(
             payload.astype(self.kv_pages.dtype))
@@ -698,6 +827,131 @@ class PagedServer:
             r.reg_pages = max(r.reg_pages, written // ps)
             if written == len(r.prompt) and written % ps:
                 pool.register_page(r.rid, written // ps, r.prompt)
+
+    # ------------------------------------------- hierarchical cache tiers --
+    def _trace_store_moves(self, store: HostBackingStore):
+        for eid, src, dst in store.drain_cache_moves():
+            self.tracer.record_host(EventType.PAGE_DEMOTE, eid,
+                                    src * 4 + dst)
+
+    def _drain_tier_ops(self):
+        """Service the pools' pending tier transitions: pull the payload
+        of every just-demoted page D2H and park it in the tier store
+        (MUST run before any device write that could recycle the page),
+        drop entries a re-registration superseded, then trace the store's
+        own cascade moves (host -> disk under pressure, drops)."""
+        for c, pool in enumerate(self._all_pools()):
+            if not (pool.pending_demote or pool.pending_spill_drop):
+                continue
+            store = self._cache_store_of(c)
+            moves = pool.drain_demotions()
+            # skip entries superseded between eviction and this drain
+            live = [(p, key) for p, key in moves if key in pool.spilled]
+            if live:
+                idx = jnp.asarray([self._gpage_c(c, p) for p, _ in live])
+                payload = np.asarray(self.kv_pages[:, idx])
+                self._d2h(len(live))
+                for j, (_p, key) in enumerate(live):
+                    eid = pool.key_ids[key]
+                    store.park_cache(eid, payload[:, j])
+                    self.tracer.record_host(EventType.PAGE_DEMOTE, eid,
+                                            TIER_DEVICE * 4 + TIER_HOST)
+            for key in pool.drain_spill_drops():
+                store.drop_cache(pool.key_ids[key])
+            self._trace_store_moves(store)
+
+    def _begin_promotion(self, req: SeqState, promo: List[tuple]):
+        """Upload the fetched spilled payloads into their adopted device
+        pages and schedule the promotion's *landing* on the engine clock.
+
+        The payload write is issued immediately — the pages are never
+        garbage, so sharers admitted off the restored index entries and
+        preemption sweeps always read correct data — but the admitted
+        lane stays gated (``active_dev`` 0, fed nothing) until the
+        modeled H2D prefetch latency elapses: ``prefetch_depth`` pages
+        move per latency quantum.  All timing binds through
+        ``self.clock`` (never raw time.*), so a VirtualClock replays the
+        whole overlap byte-identically."""
+        cc = self.cache_cfg
+        idx = jnp.asarray([g for g, _eid, _pl, _t in promo])
+        payload = jnp.stack([jnp.asarray(pl) for _g, _eid, pl, _t in promo],
+                            axis=1)
+        self.kv_pages = self.kv_pages.at[:, idx].set(
+            payload.astype(self.kv_pages.dtype))
+        self._h2d(len(promo))
+        quanta = -(-len(promo) // max(1, cc.prefetch_depth))
+        due = self.clock.now() + cc.promote_latency_s * quanta
+        req.promoting = True
+        self._promotions.append({
+            "rid": req.rid, "due": due,
+            "pages": [(eid, t) for _g, eid, _pl, t in promo]})
+
+    def _land_promotions(self, force_rid: Optional[int] = None):
+        """Complete every promotion whose due time has passed (or whose
+        owner ``force_rid`` is being preempted/terminated — the payload
+        is already device-resident, so cancellation just closes the
+        books): trace PAGE_PROMOTE per page and un-gate the lane."""
+        if not self._promotions:
+            return
+        now = self.clock.now()
+        rest = []
+        for pr in self._promotions:
+            if pr["due"] > now and pr["rid"] != force_rid:
+                rest.append(pr)
+                continue
+            for eid, tier in pr["pages"]:
+                self.tracer.record_host(EventType.PAGE_PROMOTE, eid,
+                                        TIER_CODES[tier] * 4 + TIER_DEVICE)
+            req = next((r for r in self.lanes
+                        if r is not None and r.rid == pr["rid"]), None)
+            if req is not None and req.promoting:
+                req.promoting = False
+                # the gated interval must not count against the lane's
+                # progress watchdog
+                req.progress_iter = self.iterations
+                self.active_dev = self.active_dev.at[req.lane].set(1)
+                self._h2d(1)
+        self._promotions = rest
+
+    def _runnable(self) -> List[SeqState]:
+        """Lanes the iteration may feed: resident and not promotion-gated."""
+        return [r for r in self.lanes if r is not None and not r.promoting]
+
+    def cache_stats(self) -> CacheStats:
+        """One frozen snapshot of the hierarchical prefix cache — tier
+        residency, per-tier admission hits, promotion/demotion traffic —
+        aggregated across clusters.  The supported way to observe the
+        cache (benchmarks and tests poke no pool internals)."""
+        pools = self._all_pools()
+        stores = self._cache_stores()
+        resident = {"host": 0, "disk": 0}
+        bytes_dem = bytes_pro = dropped = 0
+        for st in stores:
+            r = st.cache_resident()
+            resident["host"] += r.get("host", 0)
+            resident["disk"] += r.get("disk", 0)
+            bytes_dem += st.cache_bytes_demoted
+            bytes_pro += st.cache_bytes_promoted
+            dropped += st.cache_dropped
+        return CacheStats(
+            device_pages=sum(p.num_pages for p in pools),
+            device_indexed=sum(len(p.prefix_index) for p in pools),
+            device_cached_free=sum(len(p.cached_free) for p in pools),
+            host_pages=resident["host"],
+            disk_pages=resident["disk"],
+            hits_device_pages=self.cache_hit_pages["device"],
+            hits_host_pages=self.cache_hit_pages["host"],
+            hits_disk_pages=self.cache_hit_pages["disk"],
+            miss_pages=self.cache_miss_pages,
+            prefix_hit_tokens=sum(p.stats["prefix_hit_tokens"]
+                                  for p in pools),
+            promotions_in_flight=len(self._promotions),
+            demoted_pages=sum(p.stats["cache_demoted"] for p in pools),
+            promoted_pages=sum(p.stats["cache_promoted"] for p in pools),
+            dropped_entries=dropped,
+            bytes_demoted=bytes_dem,
+            bytes_promoted=bytes_pro,
+            evictions=sum(p.stats["cache_evictions"] for p in pools))
 
     # ------------------------------------------------------------- finish --
     def _emit(self, req: SeqState, toks) -> tuple:
@@ -757,6 +1011,8 @@ class PagedServer:
         req.done = True
         req.finish_reason = reason
         req.error = diag
+        if req.promoting:
+            self._land_promotions(force_rid=req.rid)
         if req in self.queue:
             self.queue.remove(req)
         self._pool(req).release(req.rid)
@@ -880,12 +1136,17 @@ class PagedServer:
                     self._bt_host[i, lp:] = dst
                     dirty.add(i)
                     self.tracer.record_host(EventType.PAGE_COW, s, dst)
+        # park payloads of pages the appends just evicted-and-spilled
+        # BEFORE the CoW copy / K-V scatter can write into them
+        self._drain_tier_ops()
         if cow_src:
             # one batched on-device page copy, applied before this step's
             # K/V scatter so the write lands in the private copy
             self.kv_pages = self.kv_pages.at[:, jnp.asarray(cow_dst)].set(
                 self.kv_pages[:, jnp.asarray(cow_src)])
         self._register_prompt_pages(active, n_new)
+        # registration may supersede spilled entries; drop them down-tier
+        self._drain_tier_ops()
         if dirty:
             rows = sorted(dirty)
             self.bt_dev = self.bt_dev.at[jnp.asarray(rows)].set(
@@ -900,20 +1161,28 @@ class PagedServer:
         recorded *between* iterations — a ``preempt()`` or ``submit()``
         from the caller's generate-loop body — still reach the stream."""
         self._sweep_deadlines()
+        self._land_promotions()
         self._admit()
-        active = [r for r in self.lanes if r is not None]
-        if not active and self.queue:
-            # nothing runs and every waiter is deferred (backing off): park
-            # on the clock until the earliest retry comes due, then re-try
-            # admission — otherwise run() would spin on an idle engine
-            # (and on a VirtualClock nobody else ever moves time forward)
-            nb = min(r.not_before for r in self.queue)
-            if nb > self.clock.now():
-                self.clock.hold_until(nb)
+        self._land_promotions()     # zero-latency promotions land in-step
+        active = self._runnable()
+        if not active and (self.queue or self._promotions):
+            # nothing runs and every waiter is deferred (backing off) or
+            # gated on an in-flight promotion: park on the clock until the
+            # earliest retry/landing comes due, then re-try — otherwise
+            # run() would spin on an idle engine (and on a VirtualClock
+            # nobody else ever moves time forward)
+            waits = [pr["due"] for pr in self._promotions]
+            if self.queue:
+                nb = min(r.not_before for r in self.queue)
+                if nb > self.clock.now():
+                    waits.append(nb)
+            if waits:
+                self.clock.hold_until(min(waits))
+                self._land_promotions()
                 self._admit()
-                active = [r for r in self.lanes if r is not None]
+                active = self._runnable()
         if not active:
-            return bool(self.queue)
+            return bool(self.queue) or bool(self._promotions)
         self.iterations += 1
         t0 = self.clock.now()
 
@@ -1022,6 +1291,11 @@ class PagedServer:
                 alpha * dt + (1 - alpha) * ema
         if self.watchdog_iters:
             for r in [r for r in self.lanes if r is not None]:
+                if r.promoting:
+                    # gated on an in-flight promotion: not stalled, the
+                    # landing path resets the marker clock
+                    r.progress_iter = self.iterations
+                    continue
                 marker = (r.fed, len(r.out))
                 if marker != r.progress_marker:
                     r.progress_marker = marker

@@ -39,7 +39,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+import os
+from typing import List, Optional
 
 import jax
 from jax.experimental.shard_map import shard_map
@@ -47,6 +48,7 @@ from jax.sharding import NamedSharding
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.offload import DiskTier, HostBackingStore
 from repro.core.rab import ClusterPagedPool, PagedKVPool, RABConfig
 from repro.core.tracing import EventType, TraceBuffer
 from repro.kernels.paged_attention.ops import validate_head_sharding
@@ -82,7 +84,7 @@ class ShardedPagedServer(PagedServer):
         self.clusters = cmesh.clusters
         self.heads = cmesh.heads
         self.lanes_per_cluster = engine.max_lanes
-        self._local_pages = engine.num_pages
+        self._local_pages = engine.cache.num_pages
         validate_head_sharding(cfg.num_heads, cfg.num_kv_heads, cmesh.heads)
         super().__init__(
             cfg, params,
@@ -182,15 +184,42 @@ class ShardedPagedServer(PagedServer):
                  specs["lane"]) + sampling_specs,
                 (specs["lane2"], specs["kv"], specs["lane"], specs["lane"]))
 
+    def _build_backing_store(self) -> HostBackingStore:
+        # cache spill tiers are per cluster (like the pools and prefix
+        # indexes they back); swap traffic stays on ONE engine-wide store
+        # because a preempted victim may resume on any cluster
+        cc = self.cache_cfg
+        self.tier_stores: List[HostBackingStore] = []
+        for c in range(self.clusters):
+            sub = None if cc.disk_dir is None else \
+                os.path.join(cc.disk_dir, f"cluster{c}")
+            disk = DiskTier(cc.disk_tier_pages, sub) \
+                if cc.disk_tier_pages else None
+            self.tier_stores.append(HostBackingStore(
+                self.faults, host_pages=cc.host_tier_pages, disk_tier=disk))
+        return HostBackingStore(self.faults)
+
     # ---------------------------------------------------------- pool seam --
     def _pool_of(self, cluster: int) -> PagedKVPool:
         return self.cpool.pools[cluster]
+
+    def _all_pools(self) -> List[PagedKVPool]:
+        return list(self.cpool.pools)
 
     def _capacity_pages(self) -> int:
         return self._local_pages
 
     def _gpage(self, req: SeqState, p: int) -> int:
         return self.cpool.global_page(req.cluster, p)
+
+    def _gpage_c(self, cluster: int, p: int) -> int:
+        return self.cpool.global_page(cluster, p)
+
+    def _cache_store_of(self, cluster: int) -> HostBackingStore:
+        return self.tier_stores[cluster]
+
+    def _cache_stores(self) -> List[HostBackingStore]:
+        return list(self.tier_stores)
 
     # --------------------------------------------------------- scheduler --
     def _free_lane(self, cluster: int) -> Optional[int]:

@@ -8,7 +8,10 @@ the fault-tolerance gates on the ``degradation`` section (goodput and
 within-deadline floors, zero unhandled exceptions, missing section
 fails), and the live-traffic gates on the ``latency`` section (tail
 TTFT/TPOT relative gates in both directions, SLO-goodput floor,
-replay-identical requirement, missing section fails)."""
+replay-identical requirement, missing section fails), and the tiered
+prefix-cache gates on the ``hierarchical_cache`` section (tiered hit
+rate strictly above device-only, corpus/pool ratio floor, token-parity
+requirement, missing section fails)."""
 import copy
 import json
 import sys
@@ -47,6 +50,12 @@ def result(**over):
             "tpot_p99_s": 0.01,
             "slo_goodput": 1.0,
             "replay_identical": True,
+        },
+        "hierarchical_cache": {
+            "corpus_to_pool_ratio": 4.0,
+            "device_only": {"prefix_hit_rate": 0.23},
+            "tiered": {"prefix_hit_rate": 0.43},
+            "token_parity": True,
         },
     }
     for k, v in over.items():
@@ -288,3 +297,57 @@ def test_latency_incomplete_section_fails(gate):
     fresh = result(**{"latency.replay_identical": ...})
     base = copy.deepcopy(fresh)
     assert gate(base, fresh) == 1
+
+
+# ------------------------------------------- hierarchical-cache gates --
+
+def test_tiered_hit_rate_relative_regression_fails(gate):
+    # higher-better direction: the tiered hit rate dropping 20% fails the
+    # relative gate even while still strictly above device-only
+    fresh = result(**{"hierarchical_cache.tiered.prefix_hit_rate": 0.34})
+    assert gate(result(), fresh) == 1
+
+
+def test_tiered_must_beat_device_only(gate):
+    # spill tiers that stop buying hits over the device pool are dead
+    # weight — fails regardless of the baseline
+    fresh = result(**{"hierarchical_cache.tiered.prefix_hit_rate": 0.23})
+    base = copy.deepcopy(fresh)
+    assert gate(base, fresh) == 1
+
+
+def test_corpus_ratio_floor_gates(gate):
+    fresh = result(**{"hierarchical_cache.corpus_to_pool_ratio": 2.0})
+    base = copy.deepcopy(fresh)        # relative gate is clean: same values
+    assert gate(base, fresh) == 1      # ... but the absolute floor fails
+    assert gate(base, fresh, "--corpus-ratio-floor", "1.5") == 0
+
+
+def test_tier_restore_parity_required(gate):
+    # a page restored through host/disk decoding differently from the
+    # device-resident original is corruption, never a trade-off
+    fresh = result(**{"hierarchical_cache.token_parity": False})
+    base = copy.deepcopy(fresh)
+    assert gate(base, fresh) == 1
+
+
+def test_hierarchical_cache_parity_flag_missing_fails(gate):
+    fresh = result(**{"hierarchical_cache.token_parity": ...})
+    base = copy.deepcopy(fresh)
+    assert gate(base, fresh) == 1
+
+
+def test_hierarchical_cache_section_missing_from_fresh_fails(gate):
+    # like degradation/latency: the tiered-cache probe going silent IS
+    # the regression, it is not NEW-tolerated on the fresh side
+    fresh = result(**{"hierarchical_cache": ...})
+    base = result(**{"hierarchical_cache": ...})
+    assert gate(base, fresh) == 1
+
+
+def test_hierarchical_cache_new_in_baseline_passes(gate, capsys):
+    # the PR that introduces the tiered cache has no baseline for it yet:
+    # relative gates report NEW, absolute gates run on fresh alone
+    base = result(**{"hierarchical_cache": ...})
+    assert gate(base, result()) == 0
+    assert "NEW" in capsys.readouterr().out

@@ -25,8 +25,8 @@ from repro.core.offload import BackingStoreError, HostBackingStore
 from repro.core.tracing import EventType, TraceBuffer
 from repro.models import model as M
 from repro.runtime import (
-    EngineConfig, FaultInjector, FaultSpec, GenerationRequest,
-    SamplingParams, ShardedPagedServer, make_engine,
+    CacheConfig, EngineConfig, FaultInjector, FaultSpec,
+    GenerationRequest, SamplingParams, ShardedPagedServer, make_engine,
     FINISH_ERROR, FINISH_SHED, FINISH_TIMEOUT,
 )
 
@@ -53,8 +53,9 @@ def _prompts(vocab, n=4, seed=2):
 def _engine(cfg, params, *, page_size=4, **kw):
     tracer = TraceBuffer(capacity=1 << 14)
     return make_engine(cfg, params, EngineConfig(
-        num_pages=NUM_PAGES, page_size=page_size, max_lanes=2,
-        max_pages_per_seq=8, chunk=4, use_kernel=False, **kw),
+        cache=CacheConfig(num_pages=NUM_PAGES, page_size=page_size,
+                          max_pages_per_seq=8),
+        max_lanes=2, chunk=4, use_kernel=False, **kw),
         tracer=tracer)
 
 
@@ -451,9 +452,11 @@ def test_sharded_engine_survives_faults(cfg, params):
     inj = FaultInjector(seed=5, rate=0.4, kinds=(FaultSpec("io"),))
     tracer = TraceBuffer(capacity=1 << 14)
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=NUM_PAGES, page_size=4, max_lanes=2, max_pages_per_seq=8,
-        chunk=4, use_kernel=False, sharded=True, clusters=1, heads=1,
-        fault_injector=inj, swap_retries=4), tracer=tracer)
+        cache=CacheConfig(num_pages=NUM_PAGES, page_size=4,
+                          max_pages_per_seq=8),
+        max_lanes=2, chunk=4, use_kernel=False, sharded=True,
+        clusters=1, heads=1, fault_injector=inj, swap_retries=4),
+        tracer=tracer)
     assert isinstance(srv, ShardedPagedServer)
     _submit_all(srv, _prompts(cfg.vocab_size))
     res = _drive_with_preempts(srv, at=(2, 6))

@@ -21,7 +21,8 @@ from repro.core.analysis import layer1_decode, layer2_latency
 from repro.core.tracing import EventType, TraceBuffer
 from repro.models import model as M
 from repro.runtime import (
-    Arrival, EngineConfig, FaultInjector, FaultSpec, FrontDoor,
+    Arrival, CacheConfig, EngineConfig, FaultInjector, FaultSpec,
+    FrontDoor,
     GenerationRequest, GreedyChunkPolicy, MonotonicClock, SamplingParams,
     TokenBudgetPolicy, VirtualClock, latency_report, make_engine,
     FINISH_LENGTH, FINISH_SHED, FINISH_TIMEOUT,
@@ -50,8 +51,9 @@ def _prompts(vocab, n=2, seed=3):
 def _engine(cfg, params, **kw):
     tracer = TraceBuffer(capacity=1 << 14)
     return make_engine(cfg, params, EngineConfig(
-        num_pages=NUM_PAGES, page_size=4, max_lanes=2,
-        max_pages_per_seq=8, chunk=4, use_kernel=False, **kw),
+        cache=CacheConfig(num_pages=NUM_PAGES, page_size=4,
+                          max_pages_per_seq=8),
+        max_lanes=2, chunk=4, use_kernel=False, **kw),
         tracer=tracer)
 
 

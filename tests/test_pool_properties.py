@@ -14,9 +14,19 @@ the pool's conservation laws:
 * block tables of running sequences always translate through live RAB
   entries that agree with the page table.
 
+The tiered variant (``TieredSchedulerModel``) additionally drives the
+hierarchical prefix cache the way the engine does — evictions demote
+indexed pages to a modeled backing store, tiered admissions adopt
+spilled hits back onto device (the pool half of async promotion), and
+fetch faults drop entries everywhere — and must preserve:
+
+* every indexed page is resident in exactly ONE tier: a content key is
+  either device-indexed or spilled, never both, and after the demotion/
+  drop queues drain the backing store holds exactly the spilled ids.
+
 Skipped wholesale when hypothesis is not installed (see
 requirements-dev.txt); the deterministic unit tests in ``test_rab.py``
-always run.
+and ``test_hierarchical_cache.py`` always run.
 """
 import pytest
 
@@ -254,6 +264,104 @@ class SchedulerModel:
                 assert not (mapped & set(v["swapped"]))
 
 
+class TieredSchedulerModel(SchedulerModel):
+    """The scheduler model with the spill hierarchy enabled: the pool
+    demotes evicted indexed pages instead of dropping them, and this
+    model mirrors the engine's ``_drain_tier_ops`` (park demotions into
+    a host-side store, apply queued drops) plus the admission-time
+    adopt-spilled path of ``_place`` — promotion's pool half, with the
+    async landing modeled as immediate (lane gating is engine state the
+    pool never sees)."""
+
+    def __init__(self):
+        super().__init__()
+        self.pool.spill_enabled = True
+        self.store = {}                  # eid -> content key (the "tiers")
+
+    def drain_tiers(self):
+        """Mirror ``PagedServer._drain_tier_ops``: park queued demotions
+        (skipping superseded entries) and apply queued spill drops."""
+        pool = self.pool
+        for _p, key in pool.drain_demotions():
+            if key in pool.spilled:      # not superseded meanwhile
+                self.store[pool.spilled[key]] = key
+        for eid in pool.drain_spill_drops():
+            self.store.pop(eid, None)
+
+    def submit(self, prompt_idx, max_new):
+        """Tiered admission: device hits are shared, spilled hits are
+        fetched from the store and adopted back onto device (consuming
+        the reservation the way ``alloc_page`` does in the engine)."""
+        prompt = list(PROMPTS[prompt_idx % len(PROMPTS)])
+        total = -(-(len(prompt) + max_new - 1) // PAGE_SIZE) \
+            + self._cow_budget(prompt, max_new)
+        if total > NUM_PAGES or total > MAX_PAGES_PER_SEQ:
+            return
+        pool = self.pool
+        usable, hits = 0, []
+        if len(prompt) > 1:
+            pages, n = pool.match_prefix_tiered(prompt)
+            usable = min(n, len(prompt) - 1)
+            hits = pages[:-(-usable // PAGE_SIZE)] if usable else []
+            hits = hits[:usable // PAGE_SIZE]      # full pages only
+            usable = len(hits) * PAGE_SIZE
+        dev_full = sum(1 for kind, _v in hits if kind == "device")
+        need = total - dev_full
+        cached = sum(1 for kind, v in hits
+                     if kind == "device" and v in pool.cached_free)
+        if pool.available() < need + cached:
+            if pool.available() < total:
+                return                  # admission would not fit: skip
+            usable, hits, need, cached = 0, [], total, 0
+        seq = self.next_seq
+        self.next_seq += 1
+        # fetch-before-reserve: the engine pulls spilled payloads first
+        for kind, v in hits:
+            if kind == "spilled":
+                assert pool.spilled[v] in self.store, \
+                    "spilled hit not parked in the backing store"
+        if need:
+            pool.reserve(seq, need)
+        for lp, (kind, v) in enumerate(hits):
+            if kind == "device":
+                pool.share_page(seq, lp, v)
+            else:
+                eid = pool.spilled[v]
+                pool.adopt_spilled(seq, lp, v)
+                del self.store[eid]     # promoted: store copy dropped
+        if usable:
+            pool.seq_len[seq] = usable
+        self.live[seq] = {"prompt": prompt, "max_new": max_new,
+                          "reg_pages": usable // PAGE_SIZE,
+                          "preempted": False, "swapped": []}
+
+    def drop_spilled(self, k):
+        """Mirror the fetch-fault path: a spilled entry whose payload the
+        store cannot restore is dropped everywhere."""
+        pool = self.pool
+        keys = sorted(pool.spilled)
+        if not keys:
+            return
+        key = keys[k % len(keys)]
+        eid = pool.spilled[key]
+        pool.drop_spilled(key)
+        self.store.pop(eid, None)
+
+    def check(self):
+        super().check()
+        pool = self.pool
+        # exactly-one-tier: a content key is device-indexed XOR spilled
+        for key in pool.spilled:
+            assert key not in pool.prefix_index, \
+                f"key {key} resident on device AND spilled"
+        # queues drained -> the store holds exactly the spilled entries
+        assert set(self.store) == set(pool.spilled.values()), \
+            "backing store out of sync with the pool's spilled index"
+        # spilled entries keep their stable ids (promotion identity)
+        for key, eid in pool.spilled.items():
+            assert self.store[eid] == key
+
+
 OPS = st.sampled_from(["submit", "decode", "decode", "decode", "decode",
                        "finish", "preempt", "resume", "speculate",
                        "speculate", "cancel", "fault_swap_in"])
@@ -290,6 +398,52 @@ def test_pool_invariants_under_random_schedules(schedule):
     # drain everything: the pool must return to pristine capacity
     for s in list(m.live):
         m.pool.release(s)
+        m.check()
+    assert m.pool.free_pages() == NUM_PAGES
+    assert sum(m.pool.refcount.values()) == 0 == len(m.pool.page_table)
+
+
+TIERED_OPS = st.sampled_from(
+    ["submit", "submit", "decode", "decode", "decode", "decode",
+     "finish", "preempt", "resume", "speculate", "cancel",
+     "fault_swap_in", "drop_spilled"])
+
+
+@settings(deadline=None)
+@given(st.lists(st.tuples(TIERED_OPS, st.integers(0, 6),
+                          st.integers(1, 4), st.integers(0, 4)),
+                min_size=1, max_size=120))
+def test_tiered_pool_invariants_under_random_schedules(schedule):
+    """The spill-enabled pool under random schedules: demotions park in
+    the modeled store, tiered admissions adopt spilled hits back, fetch
+    faults drop entries — and after every op (queues drained, the way
+    the engine's ``_drain_tier_ops`` call sites guarantee) each indexed
+    page is resident in exactly one tier."""
+    m = TieredSchedulerModel()
+    for op, arg, max_new, acc in schedule:
+        if op == "submit":
+            m.submit(arg, max_new)
+        elif op == "decode":
+            m.decode(arg)
+        elif op == "finish":
+            m.finish(arg)
+        elif op == "preempt":
+            m.preempt(arg)
+        elif op == "resume":
+            m.resume(arg)
+        elif op == "speculate":
+            m.speculate(arg, max_new, acc)
+        elif op == "cancel":
+            m.cancel(arg)
+        elif op == "fault_swap_in":
+            m.fault_swap_in(arg, acc)
+        elif op == "drop_spilled":
+            m.drop_spilled(arg)
+        m.drain_tiers()
+        m.check()
+    for s in list(m.live):
+        m.pool.release(s)
+        m.drain_tiers()
         m.check()
     assert m.pool.free_pages() == NUM_PAGES
     assert sum(m.pool.refcount.values()) == 0 == len(m.pool.page_table)

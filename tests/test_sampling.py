@@ -14,8 +14,9 @@ import pytest
 from repro.configs import get_config
 from repro.models import model as M
 from repro.runtime import (
-    EngineConfig, GenerationRequest, GenerationResult, PagedServer,
-    SamplingParams, ShardedPagedServer, TokenDelta, make_engine,
+    CacheConfig, EngineConfig, GenerationRequest, GenerationResult,
+    PagedServer, SamplingParams, ShardedPagedServer, TokenDelta,
+    make_engine,
 )
 
 MAX_NEW = 8
@@ -40,8 +41,10 @@ def _prompts(vocab, n=3, seed=2):
 def _serve(cfg, params, prompts, sampling_for, *, page_size=4,
            use_kernel=False, sharded=False, chunk=4, **kw):
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=32, page_size=page_size, max_lanes=2, max_pages_per_seq=8,
-        chunk=chunk, use_kernel=use_kernel, sharded=sharded, **kw))
+        cache=CacheConfig(num_pages=32, page_size=page_size,
+                          max_pages_per_seq=8),
+        max_lanes=2, chunk=chunk, use_kernel=use_kernel, sharded=sharded,
+        **kw))
     for rid, p in enumerate(prompts):
         srv.submit(GenerationRequest(rid=rid, prompt=tuple(p),
                                      sampling=sampling_for(rid)))
@@ -185,8 +188,8 @@ def test_generate_max_iters_streams_abort_deltas(cfg, params):
     finish_reason='aborted' (the run(max_iters) regression, observed
     through generate())."""
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=32, page_size=4, max_lanes=2, max_pages_per_seq=8,
-        chunk=4, use_kernel=False))
+        cache=CacheConfig(num_pages=32, page_size=4, max_pages_per_seq=8),
+        max_lanes=2, chunk=4, use_kernel=False))
     reqs = [GenerationRequest(rid=rid, prompt=(rid + 1, 2, 3, 4),
                               sampling=SamplingParams(max_new=8))
             for rid in range(4)]
@@ -215,8 +218,8 @@ def test_stream_concatenation_equals_results(cfg, params):
         return SamplingParams(max_new=5)
 
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=16, page_size=4, max_lanes=2, max_pages_per_seq=8,
-        chunk=4, use_kernel=False))
+        cache=CacheConfig(num_pages=16, page_size=4, max_pages_per_seq=8),
+        max_lanes=2, chunk=4, use_kernel=False))
     reqs = [GenerationRequest(rid=rid, prompt=tuple(p),
                               sampling=sampling_for(rid),
                               priority=5 if rid == 4 else 0)
@@ -243,8 +246,8 @@ def test_preempt_between_iterations_surfaces_in_stream(cfg, params):
     dropping them), and the delta/result token contract must survive the
     preemption round-trip."""
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=32, page_size=4, max_lanes=2, max_pages_per_seq=8,
-        chunk=8, use_kernel=False))
+        cache=CacheConfig(num_pages=32, page_size=4, max_pages_per_seq=8),
+        max_lanes=2, chunk=8, use_kernel=False))
     reqs = [GenerationRequest(rid=rid, prompt=(rid + 1, 2, 3, 4, 5),
                               sampling=SamplingParams(max_new=6))
             for rid in range(2)]
@@ -268,8 +271,8 @@ def test_stream_spec_deltas_concatenate(cfg, params):
     rng = np.random.default_rng(9)
     pat = rng.integers(1, cfg.vocab_size, size=4).tolist()
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=32, page_size=4, max_lanes=2, max_pages_per_seq=8,
-        chunk=8, use_kernel=False, spec_k=4))
+        cache=CacheConfig(num_pages=32, page_size=4, max_pages_per_seq=8),
+        max_lanes=2, chunk=8, use_kernel=False, spec_k=4))
     reqs = [GenerationRequest(rid=0, prompt=tuple(pat * 3),
                               sampling=SamplingParams(max_new=10))]
     streamed: list = []
@@ -284,8 +287,9 @@ def test_stream_spec_deltas_concatenate(cfg, params):
 # ---------------------------------------------------------------- factory --
 
 def test_make_engine_selects_engine_class(cfg, params):
-    ec = EngineConfig(num_pages=8, page_size=4, max_lanes=1,
-                      max_pages_per_seq=4, use_kernel=False)
+    ec = EngineConfig(cache=CacheConfig(num_pages=8, page_size=4,
+                                        max_pages_per_seq=4),
+                      max_lanes=1, use_kernel=False)
     assert type(make_engine(cfg, params, ec)) is PagedServer
     assert isinstance(
         make_engine(cfg, params, dataclasses.replace(ec, sharded=True)),
@@ -314,8 +318,8 @@ def test_generation_request_is_frozen(cfg, params):
     with pytest.raises(Exception):
         req.prompt = (9,)
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=8, page_size=4, max_lanes=1, max_pages_per_seq=4,
-        use_kernel=False))
+        cache=CacheConfig(num_pages=8, page_size=4, max_pages_per_seq=4),
+        max_lanes=1, use_kernel=False))
     srv.submit(GenerationRequest(rid=0, prompt=(1, 2, 3),
                                  sampling=SamplingParams(max_new=2)))
     srv.run()
@@ -324,8 +328,8 @@ def test_generation_request_is_frozen(cfg, params):
 
 def test_submit_validation_errors(cfg, params):
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=4, page_size=4, max_lanes=1, max_pages_per_seq=4,
-        use_kernel=False))
+        cache=CacheConfig(num_pages=4, page_size=4, max_pages_per_seq=4),
+        max_lanes=1, use_kernel=False))
     with pytest.raises(ValueError):
         srv.submit(GenerationRequest(rid=0, prompt=()))
     with pytest.raises(ValueError):     # 4 pages * 4 slots < 13 + 8 - 1

@@ -18,8 +18,8 @@ from repro.core.tracing import EventType, TraceBuffer
 from repro.kernels.paged_attention.ops import validate_head_sharding
 from repro.models import model as M
 from repro.runtime import (
-    EngineConfig, GenerationRequest, SamplingParams, ShardedPagedServer,
-    make_engine,
+    CacheConfig, EngineConfig, GenerationRequest, SamplingParams,
+    ShardedPagedServer, make_engine,
 )
 
 PROMPTS = [[5, 6, 7, 8, 9, 10, 11], [3, 1, 4, 1, 5], [2, 7], [9, 9, 8]]
@@ -34,8 +34,10 @@ def _req(rid, prompt, max_new=4, **sampling):
 def _run(cfg, params, *, page_size, use_kernel, tracer=None, sharded=False,
          **kw):
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=32, page_size=page_size, max_lanes=2, max_pages_per_seq=8,
-        chunk=4, use_kernel=use_kernel, sharded=sharded, **kw),
+        cache=CacheConfig(num_pages=32, page_size=page_size,
+                          max_pages_per_seq=8),
+        max_lanes=2, chunk=4, use_kernel=use_kernel, sharded=sharded,
+        **kw),
         tracer=tracer)
     for rid, p in enumerate(PROMPTS):
         srv.submit(_req(rid, p, max_new=4))
@@ -72,9 +74,9 @@ def test_matrix_engine_combination(matrix_page_size, matrix_use_kernel):
 
     def run(chunk):
         srv = make_engine(cfg, params, EngineConfig(
-            num_pages=32, page_size=matrix_page_size, max_lanes=2,
-            max_pages_per_seq=8, chunk=chunk,
-            use_kernel=matrix_use_kernel))
+            cache=CacheConfig(num_pages=32, page_size=matrix_page_size,
+                              max_pages_per_seq=8),
+            max_lanes=2, chunk=chunk, use_kernel=matrix_use_kernel))
         for rid, p in enumerate(PROMPTS):
             srv.submit(_req(rid, p, max_new=3))
         return {r.rid: r.tokens for r in srv.run()}
@@ -120,8 +122,10 @@ def test_head_axis_must_divide_kv_heads():
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     with pytest.raises(ValueError):
         ShardedPagedServer(cfg, params, EngineConfig(
-            clusters=1, heads=max(3, len(jax.devices())), num_pages=8,
-            page_size=4, max_lanes=1, max_pages_per_seq=4))
+            clusters=1, heads=max(3, len(jax.devices())),
+            cache=CacheConfig(num_pages=8, page_size=4,
+                              max_pages_per_seq=4),
+            max_lanes=1))
 
 
 _MULTI_CLUSTER_SCRIPT = textwrap.dedent("""
@@ -130,8 +134,9 @@ _MULTI_CLUSTER_SCRIPT = textwrap.dedent("""
     assert len(jax.devices()) >= 8, jax.devices()
     from repro.configs import get_config
     from repro.models import model as M
-    from repro.runtime import (EngineConfig, GenerationRequest,
-                               SamplingParams, make_engine)
+    from repro.runtime import (CacheConfig, EngineConfig,
+                               GenerationRequest, SamplingParams,
+                               make_engine)
 
     cfg = get_config("yi-6b").smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -139,8 +144,9 @@ _MULTI_CLUSTER_SCRIPT = textwrap.dedent("""
 
     def run(preempt=False, sampled_rid=None, **kw):
         srv = make_engine(cfg, params, EngineConfig(
-            num_pages=16, page_size=4, max_lanes=2, max_pages_per_seq=8,
-            chunk=4, use_kernel=False, **kw))
+            cache=CacheConfig(num_pages=16, page_size=4,
+                              max_pages_per_seq=8),
+            max_lanes=2, chunk=4, use_kernel=False, **kw))
         for rid, p in enumerate(prompts):
             sp = SamplingParams(max_new=3) if rid != sampled_rid else \\
                 SamplingParams(max_new=3, temperature=0.8, seed=13)

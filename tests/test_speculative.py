@@ -17,8 +17,8 @@ from repro.core.rab import PagedKVPool
 from repro.core.tracing import EventType, TraceBuffer
 from repro.models import model as M
 from repro.runtime import (
-    DraftModelDrafter, EngineConfig, GenerationRequest, NGramDrafter,
-    SamplingParams, make_engine,
+    CacheConfig, DraftModelDrafter, EngineConfig, GenerationRequest,
+    NGramDrafter, SamplingParams, make_engine,
 )
 
 MAX_NEW = 16
@@ -46,8 +46,9 @@ def _serve(cfg, params, prompts, *, spec_k, page_size=4, use_kernel=False,
            max_lanes=2, max_new=MAX_NEW, preempt_rid=None, tracer=None,
            sampling_for=None, **kw):
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=64, page_size=page_size, max_lanes=max_lanes,
-        max_pages_per_seq=16, chunk=8, use_kernel=use_kernel,
+        cache=CacheConfig(num_pages=64, page_size=page_size,
+                          max_pages_per_seq=16),
+        max_lanes=max_lanes, chunk=8, use_kernel=use_kernel,
         spec_k=spec_k, **kw), tracer=tracer)
     for rid, p in enumerate(prompts):
         sp = sampling_for(rid) if sampling_for is not None else \

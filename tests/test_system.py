@@ -24,8 +24,8 @@ from repro.checkpoint import (
 from repro.data import MarkovChainData, SyntheticLMData, Prefetcher
 from repro.models import model as M
 from repro.runtime import Trainer, TrainerConfig, FailureInjector, \
-    PagedServer, EngineConfig, GenerationRequest, SamplingParams, \
-    make_engine
+    PagedServer, CacheConfig, EngineConfig, GenerationRequest, \
+    SamplingParams, make_engine
 
 
 def _req(rid, prompt, max_new=8, priority=0, **sampling):
@@ -205,8 +205,9 @@ def test_paged_server_continuous_batching():
     cfg = get_config("yi-6b").smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=32, page_size=4, max_lanes=2, max_pages_per_seq=8,
-        use_kernel=False))
+        cache=CacheConfig(num_pages=32, page_size=4,
+                          max_pages_per_seq=8),
+        max_lanes=2, use_kernel=False))
     for rid in range(4):
         srv.submit(_req(rid, [rid + 1, 2, 3], max_new=3))
     done = srv.run()
@@ -240,8 +241,9 @@ def test_paged_server_kernel_matches_ref():
 
     def run(use_kernel):
         srv = make_engine(cfg, params, EngineConfig(
-            num_pages=32, page_size=4, max_lanes=2, max_pages_per_seq=8,
-            use_kernel=use_kernel))
+            cache=CacheConfig(num_pages=32, page_size=4,
+                              max_pages_per_seq=8),
+            max_lanes=2, use_kernel=use_kernel))
         srv.submit(_req(0, [5, 6, 7], max_new=4))
         return srv.run()[0].tokens
 
@@ -257,8 +259,9 @@ def test_paged_server_chunked_prefill_matches_token_by_token():
 
     def run(chunk):
         srv = make_engine(cfg, params, EngineConfig(
-            num_pages=32, page_size=4, max_lanes=2, max_pages_per_seq=8,
-            chunk=chunk, use_kernel=False))
+            cache=CacheConfig(num_pages=32, page_size=4,
+                              max_pages_per_seq=8),
+            max_lanes=2, chunk=chunk, use_kernel=False))
         for rid, p in enumerate(prompts):
             srv.submit(_req(rid, p, max_new=3))
         done = srv.run()
@@ -279,8 +282,9 @@ def test_run_iteration_cap_aborts_pending_requests():
     cfg = get_config("yi-6b").smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=32, page_size=4, max_lanes=2, max_pages_per_seq=8,
-        chunk=4, use_kernel=False))
+        cache=CacheConfig(num_pages=32, page_size=4,
+                          max_pages_per_seq=8),
+        max_lanes=2, chunk=4, use_kernel=False))
     for rid in range(4):        # 4 requests, 2 lanes: two stay queued
         srv.submit(_req(rid, [rid + 1, 2, 3, 4, 5], max_new=8))
     done = srv.run(max_iters=3)
@@ -311,9 +315,10 @@ def test_prefix_cache_parity_and_forced_preemption(page_size):
     def run(enable, preempt_rid=None):
         tracer = TraceBuffer()
         srv = make_engine(cfg, params, EngineConfig(
-            num_pages=32, page_size=page_size, max_lanes=2,
-            max_pages_per_seq=8, chunk=4, use_kernel=False,
-            enable_prefix_cache=enable), tracer=tracer)
+            cache=CacheConfig(num_pages=32, page_size=page_size,
+                              max_pages_per_seq=8,
+                              enable_prefix_cache=enable),
+            max_lanes=2, chunk=4, use_kernel=False), tracer=tracer)
         srv.submit(_req(0, prompts[0], max_new=4))
         srv.step()
         srv.step()       # rid 0 reaches decode; its prefix pages published
@@ -352,8 +357,9 @@ def test_prefix_cache_never_starves_admission():
     cfg = get_config("yi-6b").smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     srv = make_engine(cfg, params, EngineConfig(
-        num_pages=3, page_size=4, max_lanes=2, max_pages_per_seq=4,
-        chunk=8, use_kernel=False))
+        cache=CacheConfig(num_pages=3, page_size=4,
+                          max_pages_per_seq=4),
+        max_lanes=2, chunk=8, use_kernel=False))
     srv.submit(_req(0, [1, 2, 3, 4, 5, 6], max_new=1))
     it = 0
     while srv.step():
@@ -377,9 +383,10 @@ def test_priority_preemption_under_pool_pressure():
 
     def run(num_pages):
         srv = make_engine(cfg, params, EngineConfig(
-            num_pages=num_pages, page_size=4, max_lanes=2,
-            max_pages_per_seq=8, chunk=4, use_kernel=False,
-            enable_prefix_cache=False))
+            cache=CacheConfig(num_pages=num_pages, page_size=4,
+                              max_pages_per_seq=8,
+                              enable_prefix_cache=False),
+            max_lanes=2, chunk=4, use_kernel=False))
         srv.submit(_req(0, [3, 1, 4, 1, 5, 9, 2, 6], max_new=10,
                         priority=0))
         srv.step()
