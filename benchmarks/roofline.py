@@ -22,6 +22,15 @@ MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N per token (decode),
 with N_active for MoE.  The reported ``roofline_fraction`` is
 useful-model-FLOP-time / dominant-term — the score of how close the cell
 sits to the hardware roofline.
+
+``--kv-dtype int8`` models the quantized KV serving path
+(``CacheConfig.kv_dtype="int8"``): decode-cache traffic shrinks to one
+byte per element plus the amortized per-(page, K/V, head) float32 scale,
+which roughly halves the memory term of decode shapes and shifts their
+arithmetic intensity (reported per cell as ``arith_intensity`` =
+HLO FLOPs / HBM bytes) correspondingly up the roofline.  Only paged
+attention KV pools quantize — MLA latent, SSM and mLSTM state stay at
+their native widths.
 """
 from __future__ import annotations
 
@@ -77,7 +86,8 @@ def model_flops(cfg, shape) -> float:
     return 2.0 * n * shape.global_batch          # decode: one token / request
 
 
-def analytic_bytes(cfg, shape, devices: int) -> float:
+def analytic_bytes(cfg, shape, devices: int,
+                   kv_dtype: str = "bf16") -> float:
     """Per-device HBM bytes per step (analytic lower-bound model)."""
     n_total = param_counts(cfg)["total"]
     bp = 2.0                                      # bf16 params
@@ -96,14 +106,31 @@ def analytic_bytes(cfg, shape, devices: int) -> float:
         return w + act
     # decode: weights once + full KV/state cache read + small writes
     w = n_total * bp / devices
-    cache = cache_bytes(cfg, shape) / devices
+    cache = cache_bytes(cfg, shape, kv_dtype) / devices
     return w + cache
 
 
-def cache_bytes(cfg, shape) -> float:
-    """Global decode-cache bytes (read once per decoded token)."""
+#: CacheConfig.page_size default — amortizes the per-page scale slab
+KV_PAGE_SIZE = 8
+
+
+def _kv_elt_bytes(kv_dtype: str, hd: int) -> float:
+    """Bytes per paged-KV element: int8 pages carry one f32 scale per
+    (page, K/V, head), i.e. 4 bytes amortized over hd * page_size
+    elements; bf16 pages are exact two-byte elements."""
+    if kv_dtype == "int8":
+        return 1.0 + 4.0 / (hd * KV_PAGE_SIZE)
+    return 2.0
+
+
+def cache_bytes(cfg, shape, kv_dtype: str = "bf16") -> float:
+    """Global decode-cache bytes (read once per decoded token).
+
+    ``kv_dtype`` rescales only the paged attention KV terms — MLA's
+    latent cache, SSM and mLSTM recurrent state are not paged int8."""
     B, T = shape.global_batch, cfg.cache_len(shape)
     hd = cfg.resolved_head_dim
+    kvb = _kv_elt_bytes(kv_dtype, hd)
     if cfg.block_kind == "mlstm":
         H = cfg.num_heads
         return cfg.num_layers * B * H * (hd * hd + hd + 1) * 4.0
@@ -113,19 +140,19 @@ def cache_bytes(cfg, shape) -> float:
     if cfg.block_kind == "hymba":
         from repro.models.ssm import mamba_dims
         di, _, N = mamba_dims(cfg)
-        attn = cfg.num_layers * B * T * cfg.num_kv_heads * hd * 2 * 2.0
+        attn = cfg.num_layers * B * T * cfg.num_kv_heads * hd * 2 * kvb
         ssm = cfg.num_layers * B * (di * N + (cfg.ssm_conv_width - 1) * di) * 4.0
         return attn + ssm
     if cfg.block_kind == "encdec":
-        self_c = cfg.num_layers * B * T * cfg.num_kv_heads * hd * 2 * 2.0
-        cross = cfg.num_layers * B * cfg.frontend_seq * cfg.num_kv_heads * hd * 2 * 2.0
+        self_c = cfg.num_layers * B * T * cfg.num_kv_heads * hd * 2 * kvb
+        cross = cfg.num_layers * B * cfg.frontend_seq * cfg.num_kv_heads * hd * 2 * kvb
         return self_c + cross
     if cfg.local_global_period:
         n_local = (cfg.num_layers + 1) // cfg.local_global_period
         n_global = cfg.num_layers - n_local
         W = min(cfg.sliding_window, T)
-        return (n_local * W + n_global * T) * B * cfg.num_kv_heads * hd * 2 * 2.0
-    return cfg.num_layers * B * T * cfg.num_kv_heads * hd * 2 * 2.0
+        return (n_local * W + n_global * T) * B * cfg.num_kv_heads * hd * 2 * kvb
+    return cfg.num_layers * B * T * cfg.num_kv_heads * hd * 2 * kvb
 
 
 # ---------------------------------------------------------------------------
@@ -142,7 +169,8 @@ def load_cell(arch: str, shape: str, mesh: str,
 
 
 def analyze_cell(arch: str, shape_name: str, mesh: str = "single",
-                 profile: str = "megatron") -> Optional[dict]:
+                 profile: str = "megatron",
+                 kv_dtype: str = "bf16") -> Optional[dict]:
     rec = load_cell(arch, shape_name, mesh, profile)
     if rec is None or rec.get("status") != "ok":
         return rec
@@ -156,7 +184,7 @@ def analyze_cell(arch: str, shape_name: str, mesh: str = "single",
     hlo_flops_dev = rec.get("dot_flops") or rec["cost"].get("flops", 0.0)
     mf_global = model_flops(cfg, shape)
     mf_dev = mf_global / dev
-    bytes_dev = analytic_bytes(cfg, shape, dev) + \
+    bytes_dev = analytic_bytes(cfg, shape, dev, kv_dtype) + \
         param_counts(cfg)["total"] * 2.0 * (1.0 / weight_div - 1.0 / dev)
     coll_dev = rec.get("collective_bytes_tpu", rec.get("collective_bytes", 0))
 
@@ -175,12 +203,13 @@ def analyze_cell(arch: str, shape_name: str, mesh: str = "single",
 
     return {
         "arch": arch, "shape": shape_name, "mesh": mesh, "status": "ok",
-        "profile": profile,
+        "profile": profile, "kv_dtype": kv_dtype,
         "devices": dev,
         "hlo_flops_dev": hlo_flops_dev,
         "model_flops_dev": mf_dev,
         "useful_ratio": mf_dev / max(hlo_flops_dev, 1e-30),
         "bytes_dev": bytes_dev,
+        "arith_intensity": hlo_flops_dev / max(bytes_dev, 1e-30),
         "cost_bytes_dev": rec["cost"].get("bytes accessed", 0.0),
         "coll_bytes_dev": coll_dev,
         "t_compute": t_comp, "t_memory": t_mem, "t_collective": t_coll,
@@ -193,7 +222,7 @@ def analyze_cell(arch: str, shape_name: str, mesh: str = "single",
     }
 
 
-def full_table(mesh: str = "single") -> List[dict]:
+def full_table(mesh: str = "single", kv_dtype: str = "bf16") -> List[dict]:
     rows = []
     for arch in sorted({f.name.split("__")[0] for f in ARTIFACTS.glob("*.json")}):
         for shape in SHAPES:
@@ -204,7 +233,8 @@ def full_table(mesh: str = "single") -> List[dict]:
                 rows.append({"arch": arch, "shape": shape, "mesh": mesh,
                              "status": "skipped", "reason": rec["reason"]})
             else:
-                rows.append(analyze_cell(arch, shape, mesh))
+                rows.append(analyze_cell(arch, shape, mesh,
+                                         kv_dtype=kv_dtype))
     return rows
 
 
@@ -234,7 +264,9 @@ def _improvement_hint(r: dict) -> str:
                 "or EP-local MoE dispatch")
     if r["dominant"] == "memory":
         if r["shape"].startswith("decode") or r["shape"].startswith("long"):
-            return "quantize KV cache / MLA-style compression; batch more requests"
+            if r.get("kv_dtype") == "int8":
+                return "KV already int8: batch more requests / MLA-style compression"
+            return "quantize KV cache (kv_dtype=int8) / MLA-style compression"
         return "fuse activations (flash kernel), larger remat leaves"
     if r["useful_ratio"] < 0.8:
         return "cut remat recompute (dots-saveable policy) / drop redundant fp32"
@@ -246,16 +278,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--kv-dtype", default="bf16", choices=("bf16", "int8"),
+                    help="KV-pool storage dtype for the decode-cache "
+                         "byte model (int8 = quantized serving path)")
     args = ap.parse_args()
-    rows = full_table(args.mesh)
+    rows = full_table(args.mesh, kv_dtype=args.kv_dtype)
     if args.csv:
-        print("arch,shape,t_compute,t_memory,t_collective,dominant,"
-              "useful_ratio,roofline_fraction")
+        print("arch,shape,kv_dtype,t_compute,t_memory,t_collective,dominant,"
+              "useful_ratio,arith_intensity,roofline_fraction")
         for r in rows:
             if r.get("status") == "ok":
-                print(f"{r['arch']},{r['shape']},{r['t_compute']:.4e},"
+                print(f"{r['arch']},{r['shape']},{r['kv_dtype']},"
+                      f"{r['t_compute']:.4e},"
                       f"{r['t_memory']:.4e},{r['t_collective']:.4e},"
                       f"{r['dominant']},{r['useful_ratio']:.3f},"
+                      f"{r['arith_intensity']:.3f},"
                       f"{r['roofline_fraction']:.4f}")
     else:
         print(render_markdown(rows))

@@ -101,19 +101,22 @@ def _make_prompts(n: int, length: int, vocab: int, seed: int = 0):
 def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
                max_lanes, max_pages_per_seq, use_kernel,
                enable_prefix_cache=True, clusters=None, heads=1,
-               keep_events=None, spec_k=0, sampling_for=None) -> dict:
+               keep_events=None, spec_k=0, sampling_for=None,
+               kv_dtype="bf16") -> dict:
     """One engine run through ``make_engine``.  ``clusters=None`` -> the
     unsharded ``PagedServer``; an int -> ``ShardedPagedServer`` over a
     (clusters, heads) mesh, with per-cluster occupancy and dispatch
     balance added to the result.  ``spec_k > 0`` enables speculative
     decoding (n-gram drafter) and adds acceptance metrics.
     ``sampling_for`` maps a request index to its ``SamplingParams``
-    (default: greedy with ``max_new``)."""
+    (default: greedy with ``max_new``); ``kv_dtype`` selects the KV-pool
+    storage dtype ("bf16" | "int8")."""
     tracer = TraceBuffer(capacity=1 << 16)
     engine_cfg = EngineConfig(
         cache=CacheConfig(num_pages=num_pages, page_size=page_size,
                           max_pages_per_seq=max_pages_per_seq,
-                          enable_prefix_cache=enable_prefix_cache),
+                          enable_prefix_cache=enable_prefix_cache,
+                          kv_dtype=kv_dtype),
         max_lanes=max_lanes, chunk=chunk, use_kernel=use_kernel,
         spec_k=spec_k, clusters=clusters or 1, heads=heads,
         sharded=clusters is not None)
@@ -144,7 +147,8 @@ def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
     if keep_events is not None:
         keep_events.extend(np.asarray(events).tolist())
     prompt_tokens = sum(len(p) for p in prompts)
-    hit_tokens = srv.cache_stats().prefix_hit_tokens
+    stats = srv.cache_stats()
+    hit_tokens = stats.prefix_hit_tokens
     extra = {}
     if clusters is not None:
         bal = layer2_cluster_balance(layer1_decode(events),
@@ -180,6 +184,8 @@ def run_engine(cfg, params, prompts, *, chunk, max_new, num_pages, page_size,
         "h2d_per_generated_token": h2d / max(gen, 1),
         "d2h_per_generated_token": d2h / max(gen, 1),
         "prefill_tokens": srv.prefill_tokens,
+        "kv_dtype": kv_dtype,
+        "bytes_per_token": stats.bytes_per_token,
         "prefix_hit_tokens": hit_tokens,
         "prefix_hit_rate": hit_tokens / max(prompt_tokens, 1),
         "pages_saved": srv.pool.stats["prefix_hit_pages"],
@@ -251,6 +257,78 @@ def run_spec_workload(cfg, params, *, spec_k, max_new, page_size, max_lanes,
         "iters_per_token_reduction":
             off["iters_per_generated_token"] /
             max(on["iters_per_generated_token"], 1e-9),
+    }
+
+
+def run_quantized_kv(cfg, params, *, page_size, max_lanes, use_kernel,
+                     max_new=8, requests=8, pat_len=4, reps=5, tail_len=2,
+                     chunk=8) -> dict:
+    """int8 KV pool vs the bf16 baseline on the repeated-suffix greedy
+    workload (the serving shape speculation also uses).
+
+    Three engine runs with identical configuration except the pool dtype:
+    the bf16 reference, the int8 pool on the same path, and the int8 pool
+    on the *other* attention path (kernel vs oracle) for in-kernel-dequant
+    parity.  Quality is scored as **teacher-forced next-token agreement**
+    — for every reference position j the int8 engine is fed
+    ``prompt + ref_out[:j]`` and asked for ONE token, so each comparison
+    sees the same context and a single early flip cannot cascade (the
+    standard perplexity-style proxy; free-running output equality is also
+    reported, but it measures divergence, not quality).  Like the bench's
+    other token-parity properties, the score is deterministic for the
+    fixed seeded workload; disagreements are argmax near-ties of the
+    random-weight smoke model, so the workload leans on long periodic
+    prompts whose greedy continuations are decisive.  Memory is scored
+    from ``CacheStats.bytes_per_token``: int8 pays 1 byte + 4/page_size
+    scale bytes per (layer, K/V, head, dim) where the baseline pays the
+    param dtype's width."""
+    prompts = _make_repeated_suffix_prompts(requests, pat_len, reps,
+                                            tail_len, cfg.vocab_size)
+    plen = pat_len * reps + tail_len
+    per_seq = -(-(plen + max_new) // page_size) + 1
+    common = dict(chunk=chunk, max_new=max_new,
+                  num_pages=per_seq * max_lanes + 32, page_size=page_size,
+                  max_lanes=max_lanes, max_pages_per_seq=per_seq,
+                  use_kernel=use_kernel)
+    base = run_engine(cfg, params, prompts, kv_dtype="bf16", **common)
+    quant = run_engine(cfg, params, prompts, kv_dtype="int8", **common)
+    other = run_engine(cfg, params, prompts, kv_dtype="int8",
+                       **dict(common, use_kernel=not use_kernel))
+    ref_outputs = base.pop("outputs")
+    quant_outputs = quant.pop("outputs")
+    free_match = quant_outputs == ref_outputs
+    paths_match = other.pop("outputs") == quant_outputs
+    # teacher-forced sweep: every (prompt, position) pair is one
+    # single-token request against a fresh int8 engine (prefix caching
+    # makes the incremental prefixes cheap)
+    tf_prompts, tf_refs = [], []
+    for rid, p in enumerate(prompts):
+        ref = ref_outputs[rid]
+        for j in range(len(ref)):
+            tf_prompts.append(list(p) + ref[:j])
+            tf_refs.append(ref[j])
+    tf_per_seq = -(-(plen + max_new + 1) // page_size) + 1
+    tf = run_engine(cfg, params, tf_prompts, kv_dtype="int8",
+                    **dict(common, max_new=1, max_pages_per_seq=tf_per_seq,
+                           num_pages=tf_per_seq * max_lanes + 64))
+    tf_out = tf.pop("outputs")
+    agree = sum(int(tf_out[i][0] == tf_refs[i]) for i in range(len(tf_refs)))
+    return {
+        "workload": {"requests": requests, "prompt_len": plen,
+                     "pat_len": pat_len, "reps": reps, "tail_len": tail_len,
+                     "max_new": max_new,
+                     "teacher_forced_positions": len(tf_refs)},
+        "bf16": base,
+        "int8": quant,
+        "bytes_per_token_bf16": base["bytes_per_token"],
+        "bytes_per_token_int8": quant["bytes_per_token"],
+        "bytes_per_token_ratio":
+            quant["bytes_per_token"] / max(base["bytes_per_token"], 1e-9),
+        "page_pool_headroom":
+            base["bytes_per_token"] / max(quant["bytes_per_token"], 1e-9),
+        "token_agreement": agree / max(len(tf_refs), 1),
+        "free_running_outputs_match": free_match,
+        "kernel_ref_outputs_match": paths_match,
     }
 
 
@@ -749,6 +827,10 @@ def main(argv=None) -> dict:
                                     max_lanes=args.max_lanes,
                                     use_kernel=use_kernel)
 
+    quantized = run_quantized_kv(cfg, params, page_size=args.page_size,
+                                 max_lanes=args.max_lanes,
+                                 use_kernel=use_kernel)
+
     sampling = run_sampling_workload(cfg, params, max_new=sample_max_new,
                                      page_size=args.page_size,
                                      max_lanes=args.max_lanes,
@@ -808,6 +890,7 @@ def main(argv=None) -> dict:
         },
         "preemption": preemption,
         "speculation": speculation,
+        "quantized_kv": quantized,
         "sampling": sampling,
         "degradation": degradation,
         "hierarchical_cache": hier,
@@ -854,6 +937,16 @@ def main(argv=None) -> dict:
           f"acceptance={sd['acceptance_rate']:.2f}  "
           f"wasted verify tokens={sd['wasted_verify_tokens']}  "
           f"outputs match={sd['outputs_match']}")
+    qk = result["quantized_kv"]
+    print(f"quantized kv (int8): bytes/tok="
+          f"{qk['bytes_per_token_bf16']:.0f}->"
+          f"{qk['bytes_per_token_int8']:.0f} "
+          f"(ratio={qk['bytes_per_token_ratio']:.3f}, "
+          f"headroom={qk['page_pool_headroom']:.2f}x)  "
+          f"token agreement={qk['token_agreement']:.4f} "
+          f"({qk['workload']['teacher_forced_positions']} pos)  "
+          f"kernel==ref={qk['kernel_ref_outputs_match']}  "
+          f"free-running match={qk['free_running_outputs_match']}")
     sa = result["sampling"]
     print(f"sampling (T={sa['workload']['temperature']}, "
           f"top-p={sa['workload']['top_p']}): "
@@ -914,6 +1007,12 @@ def main(argv=None) -> dict:
     assert sd["spec_on"]["iters_per_generated_token"] < \
         sd["spec_off"]["iters_per_generated_token"], \
         "speculation did not reduce engine iterations per token"
+    assert qk["bytes_per_token_ratio"] <= 0.6, \
+        "int8 KV pool did not halve the per-token cache footprint"
+    assert qk["token_agreement"] >= 0.98, \
+        "int8 KV teacher-forced token agreement fell below 0.98"
+    assert qk["kernel_ref_outputs_match"], \
+        "int8 kernel and oracle attention paths diverged"
     assert sa["sampled_reproducible"], \
         "seeded sampled decoding was not reproducible"
     assert sa["stop_token_early_exit"], "stop token did not end the request"

@@ -70,10 +70,28 @@ section fails outright):
 * ``hierarchical_cache.token_parity`` must be true — pages restored
   through the tiers must decode token-identically to device-only.
 
+The ``quantized_kv`` section is gated absolutely too (a missing section
+fails outright — the int8 path going unmeasured is the regression):
+
+* ``quantized_kv.bytes_per_token_ratio`` <= ``--kv-ratio-ceiling``
+  (default 0.6) — the int8 pool must keep roughly half the bf16
+  footprint, scales included;
+* ``quantized_kv.token_agreement`` >= ``--token-agreement-floor``
+  (default 0.98) — teacher-forced next-token agreement vs the bf16
+  engine, the bench's perplexity proxy;
+* ``quantized_kv.kernel_ref_outputs_match`` must be true — the in-kernel
+  dequant and the oracle must produce identical tokens.
+
 Robustness contract (tested by ``tests/test_check_bench.py``):
 
 * workload descriptor mismatch -> exit 2 (the comparison is meaningless);
 * malformed/unreadable JSON -> exit 2 with the offending file named;
+* a MISSING/unreadable baseline with ``--allow-missing-baseline`` ->
+  warn, skip the relative and workload-descriptor checks, and run the
+  absolute gates on the fresh result alone (exit 0/1) — the bootstrap
+  path for a branch that has no committed baseline yet.  Without the
+  flag a missing baseline stays exit 2; an unreadable FRESH result is
+  exit 2 regardless;
 * a gated metric missing from the FRESH result -> exit 1 (the benchmark
   stopped reporting something the gate guards);
 * a gated metric missing from the BASELINE -> reported as NEW and skipped
@@ -111,6 +129,10 @@ GATED = [
     (("latency", "slo_goodput"), "latency SLO goodput", "higher"),
     (("hierarchical_cache", "tiered", "prefix_hit_rate"),
      "tiered prefix-cache hit rate", "higher"),
+    (("quantized_kv", "bytes_per_token_ratio"),
+     "int8 KV bytes/token ratio", "lower"),
+    (("quantized_kv", "token_agreement"),
+     "int8 KV token agreement", "higher"),
 ]
 
 SPEC_ACCEPT_FLOOR = 0.25
@@ -118,6 +140,8 @@ GOODPUT_FLOOR = 0.4
 DEADLINE_FLOOR = 0.5
 SLO_GOODPUT_FLOOR = 0.5
 CORPUS_RATIO_FLOOR = 4.0
+KV_RATIO_CEILING = 0.6
+TOKEN_AGREEMENT_FLOOR = 0.98
 
 
 def _dig(d, path):
@@ -317,6 +341,51 @@ def check_hierarchical_cache_absolute(
     return ok
 
 
+def check_quantized_kv_absolute(
+        fresh: dict, ratio_ceiling: float = KV_RATIO_CEILING,
+        agreement_floor: float = TOKEN_AGREEMENT_FLOOR) -> bool:
+    """Absolute int8-KV gates on the fresh result alone.
+
+    A missing ``quantized_kv`` section fails (like the other
+    property-style sections): the quantized path going unmeasured is the
+    regression.  The memory win and the quality floor are both absolute
+    — neither may silently erode behind a drifting baseline."""
+    qk = fresh.get("quantized_kv")
+    if not isinstance(qk, dict):
+        print("FAIL quantized_kv section missing from fresh result")
+        return False
+    ok = True
+    try:
+        ratio = float(qk["bytes_per_token_ratio"])
+        agreement = float(qk["token_agreement"])
+        paths = qk["kernel_ref_outputs_match"]
+    except (KeyError, TypeError, ValueError) as e:
+        print(f"FAIL quantized_kv section incomplete in fresh result: {e}")
+        return False
+    if ratio > ratio_ceiling:
+        print(f"FAIL int8 KV bytes/token ratio {ratio:.3f} above ceiling "
+              f"{ratio_ceiling:.3f} (quantization stopped paying for "
+              f"itself)")
+        ok = False
+    else:
+        print(f"OK   int8 KV bytes/token ratio {ratio:.3f} <= ceiling "
+              f"{ratio_ceiling:.3f}")
+    if agreement < agreement_floor:
+        print(f"FAIL int8 KV token agreement {agreement:.4f} below floor "
+              f"{agreement_floor:.4f}")
+        ok = False
+    else:
+        print(f"OK   int8 KV token agreement {agreement:.4f} >= floor "
+              f"{agreement_floor:.4f}")
+    if paths is not True:
+        print("FAIL int8 kernel and oracle attention paths diverged "
+              "(kernel_ref_outputs_match must be true)")
+        ok = False
+    else:
+        print("OK   int8 kernel and oracle paths token-identical")
+    return ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True,
@@ -340,31 +409,56 @@ def main(argv=None) -> int:
                     default=CORPUS_RATIO_FLOOR,
                     help="absolute floor on hierarchical_cache."
                          "corpus_to_pool_ratio")
+    ap.add_argument("--kv-ratio-ceiling", type=float,
+                    default=KV_RATIO_CEILING,
+                    help="absolute ceiling on quantized_kv."
+                         "bytes_per_token_ratio")
+    ap.add_argument("--token-agreement-floor", type=float,
+                    default=TOKEN_AGREEMENT_FLOOR,
+                    help="absolute floor on quantized_kv.token_agreement")
+    ap.add_argument("--allow-missing-baseline", action="store_true",
+                    help="a missing/unreadable baseline becomes a warning: "
+                         "relative gates are skipped and the absolute "
+                         "gates run on the fresh result alone (the "
+                         "bootstrap path for branches without a committed "
+                         "baseline)")
     args = ap.parse_args(argv)
 
     base = _load(args.baseline, "baseline")
     fresh = _load(args.fresh, "fresh")
-    if base is None or fresh is None or not isinstance(base, dict) \
-            or not isinstance(fresh, dict):
-        print("bench gate ERROR (unreadable or non-object input)")
+    if fresh is None or not isinstance(fresh, dict):
+        print("bench gate ERROR (unreadable or non-object fresh input)")
         return 2
+    if base is None or not isinstance(base, dict):
+        if not args.allow_missing_baseline:
+            print("bench gate ERROR (unreadable or non-object baseline; "
+                  "pass --allow-missing-baseline to run the absolute "
+                  "gates without one)")
+            return 2
+        print(f"WARN baseline {args.baseline!r} missing or unreadable — "
+              f"skipping relative gates, running absolute gates only")
+        base = None
 
-    if base.get("workload") != fresh.get("workload"):
-        print(f"FAIL workload mismatch — the gate compares nothing useful\n"
-              f"  baseline: {base.get('workload')}\n"
-              f"  fresh:    {fresh.get('workload')}")
-        return 2
-
-    ok = check_relative(base, fresh, args.max_regress)
+    ok = True
+    if base is not None:
+        if base.get("workload") != fresh.get("workload"):
+            print(f"FAIL workload mismatch — the gate compares nothing "
+                  f"useful\n"
+                  f"  baseline: {base.get('workload')}\n"
+                  f"  fresh:    {fresh.get('workload')}")
+            return 2
+        ok = check_relative(base, fresh, args.max_regress)
     ok &= check_speculation_absolute(fresh, args.spec_accept_floor)
     ok &= check_degradation_absolute(fresh, args.goodput_floor,
                                      args.deadline_floor)
     ok &= check_latency_absolute(fresh, args.slo_goodput_floor)
     ok &= check_hierarchical_cache_absolute(fresh, args.corpus_ratio_floor)
+    ok &= check_quantized_kv_absolute(fresh, args.kv_ratio_ceiling,
+                                      args.token_agreement_floor)
     if not ok:
         print(f"bench gate FAILED (>{args.max_regress:.0%} regression "
               f"or absolute speculation/degradation/latency/"
-              f"hierarchical-cache gate)")
+              f"hierarchical-cache/quantized-kv gate)")
         return 1
     print("bench gate passed")
     return 0

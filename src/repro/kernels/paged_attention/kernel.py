@@ -62,11 +62,14 @@ def paged_decode_fwd(q: jax.Array, kv_pages: jax.Array,
                      block_table: jax.Array, page_counts: jax.Array,
                      lengths: jax.Array, *, pages_per_step: int = 2,
                      scale: float | None = None,
-                     interpret: bool = False) -> jax.Array:
+                     interpret: bool = False,
+                     kv_scales: jax.Array | None = None) -> jax.Array:
     """q: (B,H,hd); kv_pages: (P, 2, page, Kv, hd) fused K/V pool;
     block_table: (B, max_pages) int32 physical page ids, repeat-padded (no
     -1; see module docstring); page_counts: (B,) mapped logical pages per
-    request; lengths: (B,) tokens per request.
+    request; lengths: (B,) tokens per request; kv_scales: optional
+    (P, 2, Kv) float32 per-page dequantization scales for an int8 pool
+    (see ``paged_prefill_fwd``).
 
     Decode is exactly the C=1 case of chunked prefill: with
     ``q_start = lengths - 1`` the prefill mask ``tok < len & tok <= qpos``
@@ -77,7 +80,8 @@ def paged_decode_fwd(q: jax.Array, kv_pages: jax.Array,
     return paged_prefill_fwd(q[:, None], kv_pages, block_table, page_counts,
                              lengths, lengths - 1,
                              pages_per_step=pages_per_step, scale=scale,
-                             interpret=interpret)[:, 0]
+                             interpret=interpret,
+                             kv_scales=kv_scales)[:, 0]
 
 
 # ===========================================================================
@@ -85,10 +89,14 @@ def paged_decode_fwd(q: jax.Array, kv_pages: jax.Array,
 # ===========================================================================
 
 def _prefill_kernel(bt_ref, cnt_ref, len_ref, start_ref, q_ref, *refs,
-                    scale: float, page_size: int, g_pages: int, groups: int):
+                    scale: float, page_size: int, g_pages: int, groups: int,
+                    quant: bool):
     kv_refs = refs[:g_pages]
-    o_ref = refs[g_pages]
-    m_ref, l_ref, acc_ref = refs[g_pages + 1:]
+    rest = refs[g_pages:]
+    sc_refs = rest[:g_pages] if quant else ()
+    rest = rest[g_pages:] if quant else rest
+    o_ref = rest[0]
+    m_ref, l_ref, acc_ref = rest[1:]
     b, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
@@ -102,8 +110,18 @@ def _prefill_kernel(bt_ref, cnt_ref, len_ref, start_ref, q_ref, *refs,
     @pl.when(j * g_pages < npages)
     def _accumulate():
         q = q_ref[0]                                   # (C, H, hd)
-        k = jnp.concatenate([r[0, 0] for r in kv_refs], axis=0)
-        v = jnp.concatenate([r[0, 1] for r in kv_refs], axis=0)
+        if quant:
+            # int8 pool: dequantize inside the fetch — one f32 scale per
+            # (page, K/V, kv-head) broadcast over page slots and head dim.
+            k = jnp.concatenate(
+                [r[0, 0].astype(jnp.float32) * s[0, 0][None, :, None]
+                 for r, s in zip(kv_refs, sc_refs)], axis=0)
+            v = jnp.concatenate(
+                [r[0, 1].astype(jnp.float32) * s[0, 1][None, :, None]
+                 for r, s in zip(kv_refs, sc_refs)], axis=0)
+        else:
+            k = jnp.concatenate([r[0, 0] for r in kv_refs], axis=0)
+            v = jnp.concatenate([r[0, 1] for r in kv_refs], axis=0)
         C, _, hd = q.shape
         Kv = k.shape[1]
         qg = q.reshape(C, Kv, groups, hd)
@@ -143,12 +161,19 @@ def paged_prefill_fwd(q: jax.Array, kv_pages: jax.Array,
                       block_table: jax.Array, page_counts: jax.Array,
                       lengths: jax.Array, q_start: jax.Array, *,
                       pages_per_step: int = 2, scale: float | None = None,
-                      interpret: bool = False) -> jax.Array:
+                      interpret: bool = False,
+                      kv_scales: jax.Array | None = None) -> jax.Array:
     """q: (B,C,H,hd) — a chunk of C query tokens per request, occupying
     positions ``q_start[b] .. q_start[b]+C-1``; their K/V must already be
     written into the pool (``lengths`` includes them).  Other args as
     ``paged_decode_fwd``.  Rows past a request's real chunk length attend
     to the full resident sequence (callers ignore them).
+
+    When ``kv_scales`` is given — (P, 2, Kv) float32, one scale per (page,
+    K/V, kv-head) — the pool is int8 and each fetched page block is
+    dequantized in-kernel before the attention math; the scale blocks ride
+    the same page-indexed DMA as their K/V pages, so the extra traffic is
+    4 bytes per (K/V, head) per page.
 
     Returns (B,C,H,hd)."""
     B, C, H, hd = q.shape
@@ -158,18 +183,35 @@ def paged_prefill_fwd(q: jax.Array, kv_pages: jax.Array,
     n_steps = _cdiv(n_pages, g)
     groups = H // Kv
     sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    quant = kv_scales is not None
 
-    def kv_spec(gi):
+    def page_imap(gi):
         def imap(b, j, bt, cnt, ln, st):
             idx = jnp.minimum(j * g + gi, n_pages - 1)
-            return (bt[b, idx], 0, 0, 0, 0)
-        return pl.BlockSpec((1, 2, page, Kv, hd), imap)
+            return bt[b, idx]
+        return imap
+
+    def kv_spec(gi):
+        im = page_imap(gi)
+        return pl.BlockSpec((1, 2, page, Kv, hd),
+                            lambda b, j, *a, _im=im: (_im(b, j, *a), 0, 0, 0, 0))
+
+    def sc_spec(gi):
+        im = page_imap(gi)
+        return pl.BlockSpec((1, 2, Kv),
+                            lambda b, j, *a, _im=im: (_im(b, j, *a), 0, 0))
+
+    in_specs = ([pl.BlockSpec((1, C, H, hd), lambda b, j, *_: (b, 0, 0, 0))] +
+                [kv_spec(gi) for gi in range(g)])
+    operands = [q] + [kv_pages] * g
+    if quant:
+        in_specs += [sc_spec(gi) for gi in range(g)]
+        operands += [kv_scales] * g
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(B, n_steps),
-        in_specs=[pl.BlockSpec((1, C, H, hd), lambda b, j, *_: (b, 0, 0, 0))] +
-                 [kv_spec(gi) for gi in range(g)],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, C, H, hd), lambda b, j, *_: (b, 0, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((C, Kv, groups, 1), jnp.float32),
@@ -179,8 +221,8 @@ def paged_prefill_fwd(q: jax.Array, kv_pages: jax.Array,
     )
     return pl.pallas_call(
         functools.partial(_prefill_kernel, scale=sc, page_size=page,
-                          g_pages=g, groups=groups),
+                          g_pages=g, groups=groups, quant=quant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, C, H, hd), q.dtype),
         interpret=interpret,
-    )(block_table, page_counts, lengths, q_start, q, *([kv_pages] * g))
+    )(block_table, page_counts, lengths, q_start, *operands)

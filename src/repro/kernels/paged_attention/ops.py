@@ -114,17 +114,22 @@ def paged_prefill(q, k_pages, v_pages, block_table, lengths, q_start, *,
 
 
 def paged_decode_fused(q, kv_pages, block_table, page_counts, lengths, *,
-                       interpret=None, pages_per_step: int = 2):
-    """Decode on a fused pool + repeat-padded device block table."""
+                       interpret=None, pages_per_step: int = 2,
+                       kv_scales=None):
+    """Decode on a fused pool + repeat-padded device block table.  Pass
+    ``kv_scales`` ((P, 2, Kv) f32) for an int8 pool — dequant happens
+    inside the kernel's K/V fetch."""
     return K.paged_decode_fwd(q, kv_pages, block_table, page_counts, lengths,
                               pages_per_step=pages_per_step,
-                              interpret=_itp(interpret))
+                              interpret=_itp(interpret), kv_scales=kv_scales)
 
 
 def paged_prefill_fused(q, kv_pages, block_table, page_counts, lengths,
-                        q_start, *, interpret=None, pages_per_step: int = 2):
-    """Chunked prefill on a fused pool + repeat-padded device block table."""
+                        q_start, *, interpret=None, pages_per_step: int = 2,
+                        kv_scales=None):
+    """Chunked prefill on a fused pool + repeat-padded device block table.
+    ``kv_scales`` as in ``paged_decode_fused``."""
     return K.paged_prefill_fwd(q, kv_pages, block_table, page_counts,
                                lengths, q_start,
                                pages_per_step=pages_per_step,
-                               interpret=_itp(interpret))
+                               interpret=_itp(interpret), kv_scales=kv_scales)

@@ -11,8 +11,14 @@ NEG_INF = -1e30
 
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                         block_table: jax.Array, lengths: jax.Array, *,
-                        scale: float | None = None) -> jax.Array:
-    """Same contract as kernel.paged_attention_fwd."""
+                        scale: float | None = None,
+                        k_scales: jax.Array | None = None,
+                        v_scales: jax.Array | None = None) -> jax.Array:
+    """Same contract as kernel.paged_attention_fwd.  ``k_scales``/
+    ``v_scales`` — (P, Kv) float32 per-(page, kv-head) dequant scales —
+    mark the pages as int8 and are applied to the gathered pages before
+    the attention math (the bf16 path is untouched, byte-identical to
+    before the knob existed)."""
     B, H, hd = q.shape
     P, page, Kv, _ = k_pages.shape
     n_pages = block_table.shape[1]
@@ -22,6 +28,9 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     safe_bt = jnp.maximum(block_table, 0)                     # (B, n_pages)
     k = k_pages[safe_bt]                                      # (B,n,page,Kv,hd)
     v = v_pages[safe_bt]
+    if k_scales is not None:
+        k = k.astype(jnp.float32) * k_scales[safe_bt][:, :, None, :, None]
+        v = v.astype(jnp.float32) * v_scales[safe_bt][:, :, None, :, None]
     T = n_pages * page
     k = k.reshape(B, T, Kv, hd)
     v = v.reshape(B, T, Kv, hd)
@@ -42,9 +51,12 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 def paged_prefill_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                       block_table: jax.Array, lengths: jax.Array,
                       q_start: jax.Array, *,
-                      scale: float | None = None) -> jax.Array:
+                      scale: float | None = None,
+                      k_scales: jax.Array | None = None,
+                      v_scales: jax.Array | None = None) -> jax.Array:
     """Oracle for chunked prefill: same contract as kernel.paged_prefill_fwd
-    (q: (B,C,H,hd); lengths include the chunk's pool-resident tokens)."""
+    (q: (B,C,H,hd); lengths include the chunk's pool-resident tokens).
+    ``k_scales``/``v_scales`` as in ``paged_attention_ref``."""
     B, C, H, hd = q.shape
     P, page, Kv, _ = k_pages.shape
     n_pages = block_table.shape[1]
@@ -53,8 +65,13 @@ def paged_prefill_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 
     safe_bt = jnp.maximum(block_table, 0)
     T = n_pages * page
-    k = k_pages[safe_bt].reshape(B, T, Kv, hd)
-    v = v_pages[safe_bt].reshape(B, T, Kv, hd)
+    k = k_pages[safe_bt]
+    v = v_pages[safe_bt]
+    if k_scales is not None:
+        k = k.astype(jnp.float32) * k_scales[safe_bt][:, :, None, :, None]
+        v = v.astype(jnp.float32) * v_scales[safe_bt][:, :, None, :, None]
+    k = k.reshape(B, T, Kv, hd)
+    v = v.reshape(B, T, Kv, hd)
 
     qg = q.reshape(B, C, Kv, G, hd)
     s = jnp.einsum("bckgh,btkh->bckgt", qg.astype(jnp.float32),

@@ -1,10 +1,17 @@
-"""int8 error-feedback gradient compression for the cross-pod DP hop.
+"""int8 quantization primitives: gradient compression + per-head KV scales.
 
-Large-fleet trick: the per-step gradient all-reduce across pods rides the
-slow DCN link; quantizing to int8 with an error-feedback residual cuts that
-traffic 4x (bf16) with negligible convergence impact.  Applied as a tree
-transform around the gradient before the optimizer; the residual lives in
-the train state.
+Two consumers share the same absmax/127 scheme:
+
+* the cross-pod DP hop (``ef_compress_grads``) — one scale per gradient
+  leaf, with an error-feedback residual riding in the train state;
+* the quantized KV serving path — the paged engines store int8 KV pages
+  with one float32 scale per (page, K/V, kv-head); the fused scatter
+  quantizes at write (``headwise_scales`` + ``quantize_int8``) and the
+  attention kernels dequantize inside the K/V fetch.  Scales only ever
+  *grow* per page (running absmax), so re-quantizing an untouched page
+  under its own unchanged scale is exactly lossless (``round(q * 1) ==
+  q``) — the rescale-on-grow repack perturbs only pages a new token
+  actually extended.
 """
 from __future__ import annotations
 
@@ -12,6 +19,9 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+
+#: guards divisions by an all-zero slice's scale
+SCALE_EPS = 1e-30
 
 
 def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -22,6 +32,21 @@ def compress_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
+
+
+def headwise_scales(x: jax.Array, axis: int = -1) -> jax.Array:
+    """absmax/127 over ``axis`` — ``compress_int8``'s scale, one per
+    remaining slice instead of one per tensor (the per-(page, head) grain
+    the KV pool stores).  Zero slices get scale 0 (they quantize to 0)."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis) / 127.0
+
+
+def quantize_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Quantize under an externally supplied scale (must broadcast against
+    ``x``) — the KV write path computes the page's running-max scale first
+    and then quantizes the new tokens under it."""
+    q = jnp.round(x.astype(jnp.float32) / jnp.maximum(scale, SCALE_EPS))
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
 
 
 def ef_compress_grads(grads: Any, residual: Any) -> Tuple[Any, Any]:

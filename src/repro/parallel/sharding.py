@@ -303,14 +303,18 @@ def cluster_engine_specs(params: Any) -> Dict[str, Any]:
 
     ``kv`` is the fused (L, C*(P+1), 2, page, Kv, hd) slab — pages sharded
     over ``cluster`` (each cluster's contiguous block includes its own
-    trash page), kv heads over ``head``; ``lane``/``lane2`` shard
-    lane-indexed (B,) / (B, n) arrays' leading batch dim over ``cluster``;
-    ``params`` is the head-sharded attention-weight tree.  The engine step
-    returns (sampled, kv_pages, new_lens) -> (lane, kv, lane).
+    trash page), kv heads over ``head``; ``kv_scales`` is its
+    (L, C*(P+1), 2, Kv) per-page dequant-scale companion for the int8 KV
+    mode, sharded the same two ways; ``lane``/``lane2`` shard lane-indexed
+    (B,) / (B, n) arrays' leading batch dim over ``cluster``; ``params`` is
+    the head-sharded attention-weight tree.  The engine step returns
+    (sampled, kv_pages, kv_scales, new_lens) ->
+    (lane, kv, kv_scales, lane).
     """
     return {
         "params": head_param_pspecs(params),
         "kv": P(None, "cluster", None, None, "head", None),
+        "kv_scales": P(None, "cluster", None, "head"),
         "lane": P("cluster"),
         "lane2": P("cluster", None),
     }

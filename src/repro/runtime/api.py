@@ -179,11 +179,21 @@ class CacheConfig:
     the engine clock: a batch of ``prefetch_depth`` pages costs one
     ``promote_latency_s`` quantum, during which the admitted request waits
     (other lanes keep decoding) — under a ``VirtualClock`` the schedule
-    replays byte-identically."""
+    replays byte-identically.
+
+    ``kv_dtype`` selects the page representation: ``"bf16"`` stores pages
+    in the model's parameter dtype (exact), ``"int8"`` stores quantized
+    pages with one float32 scale per (page, K/V, kv-head) riding beside
+    the pool — the fused scatter quantizes at write, the attention kernels
+    dequantize inside the K/V fetch, and attention math stays fp32.  The
+    quantized form flows through CoW, speculative trim, preemption swap
+    and tier demote/promote unchanged (spilled payloads carry page bytes +
+    scales under one checksum)."""
     num_pages: int = 64             # device pool capacity (per cluster)
     page_size: int = 8              # tokens per KV page
     max_pages_per_seq: int = 16     # logical address space per sequence
     enable_prefix_cache: bool = True
+    kv_dtype: str = "bf16"          # "bf16" (exact) | "int8" (quantized)
     host_tier_pages: int = 0        # 0 = spill off (entries drop on evict)
     disk_tier_pages: int = 0        # 0 = no disk tier below the host tier
     disk_dir: Optional[str] = None  # None -> store-owned temp dir
@@ -203,6 +213,9 @@ class CacheConfig:
             raise ValueError("prefetch_depth must be >= 1")
         if self.promote_latency_s < 0:
             raise ValueError("promote_latency_s must be >= 0")
+        if self.kv_dtype not in ("bf16", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'bf16' or 'int8', got {self.kv_dtype!r}")
 
     @property
     def spill_enabled(self) -> bool:
@@ -218,7 +231,11 @@ class CacheStats:
     Hit counts are in *pages served at admission*, split by the tier the
     page was resident in when the request hit it; ``miss_pages`` counts
     prompt pages that had to prefill fresh.  Byte counters measure payload
-    traffic crossing tier boundaries in each direction."""
+    traffic crossing tier boundaries in each direction.
+    ``bytes_per_token`` is the KV-cache footprint of one resident token
+    across all layers (page bytes plus the amortized per-page scale slab
+    in int8 mode) — the quantization win reads directly off the ratio of
+    two engines' values."""
     device_pages: int = 0           # device pool capacity (all clusters)
     device_indexed: int = 0         # prefix entries resident on device
     device_cached_free: int = 0     # ... of which parked on the LRU
@@ -236,6 +253,7 @@ class CacheStats:
     bytes_demoted: int = 0
     bytes_promoted: int = 0
     evictions: int = 0              # device LRU evictions (spill or drop)
+    bytes_per_token: float = 0.0    # KV bytes/resident token, all layers
 
 
 #: EngineConfig fields that moved into CacheConfig (PR 8); accepted flat

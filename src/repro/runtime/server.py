@@ -133,6 +133,7 @@ from repro.kernels.paged_attention.ops import (
     paged_prefill_fused, page_counts_for,
 )
 from repro.kernels.paged_attention.ref import paged_prefill_ref
+from repro.optim.compress import SCALE_EPS, headwise_scales, quantize_int8
 from repro.runtime.api import (
     CacheStats, EngineConfig, GenerationRequest, GenerationResult,
     SamplingParams, TokenDelta, FINISH_ABORTED, FINISH_ERROR, FINISH_LENGTH,
@@ -189,6 +190,26 @@ class SeqState:
         return self.sampling.max_new
 
 
+def _pack_kv_page(pages: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    """Fuse one page's int8 payload + f32 scales into a single 1-D uint8
+    blob — the backing store's park/put contract is one ndarray per page
+    (one CRC32 covers both, so a corrupted scale fails the checksum the
+    same way corrupted page bytes do)."""
+    return np.concatenate([
+        np.ascontiguousarray(pages).view(np.uint8).reshape(-1),
+        np.ascontiguousarray(scales).view(np.uint8).reshape(-1)])
+
+
+def _unpack_kv_page(blob: np.ndarray, page_shape: tuple,
+                    scale_shape: tuple) -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of ``_pack_kv_page``."""
+    split = int(np.prod(page_shape))
+    blob = np.asarray(blob).view(np.uint8).reshape(-1)
+    pages = blob[:split].view(np.int8).reshape(page_shape)
+    scales = blob[split:].view(np.float32).reshape(scale_shape)
+    return pages, scales
+
+
 class PagedServer:
     def __init__(self, cfg: ArchConfig, params,
                  engine: Optional[EngineConfig] = None, *,
@@ -204,6 +225,9 @@ class PagedServer:
         # grouped CacheConfig and mirrored them back, so `engine.cache` is
         # always the authoritative spelling here
         self.cache_cfg = engine.cache
+        # quantized KV serving: int8 pages + per-(page, K/V, head) scales.
+        # Attention math stays fp32/bf16 — only residency/traffic shrink.
+        self.quant_kv = self.cache_cfg.kv_dtype == "int8"
         self.page_size, self.max_lanes = self.cache_cfg.page_size, \
             engine.max_lanes
         self.max_pages = self.cache_cfg.max_pages_per_seq
@@ -304,11 +328,15 @@ class PagedServer:
     def _build_device_state(self, num_pages: int, pages_per_step: int):
         cfg = self.cfg
         L_, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
-        dt = jnp.dtype(cfg.param_dtype)
+        dt = jnp.int8 if self.quant_kv else jnp.dtype(cfg.param_dtype)
         # fused K/V pool; the extra page (index num_pages) is the trash page
         # masked writes are routed to
         self.kv_pages = jnp.zeros(
             (L_, num_pages + 1, 2, self.page_size, kv, hd), dt)
+        # per-(page, K/V, kv-head) dequant scales riding with the pool.
+        # Allocated in both modes so every step has one signature; in bf16
+        # mode the quant=False trace never reads it and jit DCEs the input.
+        self.kv_scales = jnp.zeros((L_, num_pages + 1, 2, kv), jnp.float32)
         itp = jax.default_backend() != "tpu"
 
         # two variants per step, keyed by "does any active lane sample?":
@@ -319,7 +347,8 @@ class PagedServer:
         def mk(step_fn):
             return {s: jax.jit(functools.partial(
                 step_fn, cfg, self.use_kernel, pages_per_step, itp,
-                num_pages, sample=s)) for s in (False, True)}
+                num_pages, quant=self.quant_kv, sample=s))
+                for s in (False, True)}
 
         self._chunk_step = mk(_paged_chunk_step)
         self._decode_step = mk(_paged_decode_step)
@@ -690,6 +719,46 @@ class PagedServer:
         req.lane = -1
         self.queue.append(req)
 
+    # -------------------------------------------------- page payload seam --
+    # Every D2H snapshot / H2D restore of whole pages routes through these,
+    # so the quantized path can carry the scales alongside the int8 bytes
+    # (packed into one blob per page — one checksum, one tier entry) while
+    # bf16 payloads keep their historical raw-array format.
+    def _page_shapes(self) -> Tuple[tuple, tuple]:
+        """(per-page payload shape, per-page scale shape) across layers."""
+        L_ = self.cfg.num_layers
+        kv, hd = self.cfg.num_kv_heads, self.cfg.resolved_head_dim
+        return (L_, 2, self.page_size, kv, hd), (L_, 2, kv)
+
+    def _snap_pages(self, idx: List[int]) -> List[np.ndarray]:
+        """One gathered D2H pull of ``idx``'s pages; returns one payload
+        per page (packed blobs in int8 mode)."""
+        gi = jnp.asarray(idx)
+        payload = np.asarray(self.kv_pages[:, gi])
+        if not self.quant_kv:
+            return [payload[:, j] for j in range(len(idx))]
+        scales = np.asarray(self.kv_scales[:, gi])
+        return [_pack_kv_page(payload[:, j], scales[:, j])
+                for j in range(len(idx))]
+
+    def _load_pages(self, phys: List[int], payloads: List[np.ndarray]):
+        """One batched H2D restore of ``payloads`` into pool slots
+        ``phys`` (unpacking blob payloads into pages + scales in int8
+        mode)."""
+        gi = jnp.asarray(phys)
+        if not self.quant_kv:
+            payload = jnp.stack([jnp.asarray(p) for p in payloads], axis=1)
+            self.kv_pages = self.kv_pages.at[:, gi].set(
+                payload.astype(self.kv_pages.dtype))
+            return
+        pshape, sshape = self._page_shapes()
+        parts = [_unpack_kv_page(p, pshape, sshape) for p in payloads]
+        pages = jnp.stack([jnp.asarray(pg) for pg, _ in parts], axis=1)
+        scales = jnp.stack([jnp.asarray(sc) for _, sc in parts], axis=1)
+        self.kv_pages = self.kv_pages.at[:, gi].set(
+            pages.astype(self.kv_pages.dtype))
+        self.kv_scales = self.kv_scales.at[:, gi].set(scales)
+
     def _preempt(self, req: SeqState):
         """Reclaim a running lane: every mapped page's payload goes D2H
         into the host backing store and the mapping drops.  Non-shared
@@ -708,13 +777,13 @@ class PagedServer:
             self._land_promotions(force_rid=rid)
         mapped = pool.seq_pages(rid)
         if mapped:
-            idx = jnp.asarray([self._gpage(req, p) for _, p in mapped])
-            payload = np.asarray(self.kv_pages[:, idx])
+            payloads = self._snap_pages([self._gpage(req, p)
+                                         for _, p in mapped])
             self._d2h(len(mapped))    # one gather, len(mapped) pages pulled
             try:
                 for j, (lp, _p) in enumerate(mapped):
                     self._with_retries(functools.partial(
-                        self.backing.put, rid, lp, payload[:, j]), rid)
+                        self.backing.put, rid, lp, payloads[j]), rid)
                     pool.unmap_page(rid, lp)
             except BackingStoreError as e:
                 # checkpoint failed persistently mid-sweep: the victim
@@ -788,9 +857,7 @@ class PagedServer:
         # allocating may have evicted+spilled indexed pages: park their
         # payloads before this restore's upload can overwrite them
         self._drain_tier_ops()
-        payload = jnp.stack([jnp.asarray(p) for p in payloads], axis=1)
-        self.kv_pages = self.kv_pages.at[:, jnp.asarray(phys)].set(
-            payload.astype(self.kv_pages.dtype))
+        self._load_pages(phys, payloads)
         self._h2d(len(lps))
         pool.stats["swapped_in"] += len(lps)
         self.tracer.record_host(EventType.SWAP_IN, rid, len(lps))
@@ -848,12 +915,12 @@ class PagedServer:
             # skip entries superseded between eviction and this drain
             live = [(p, key) for p, key in moves if key in pool.spilled]
             if live:
-                idx = jnp.asarray([self._gpage_c(c, p) for p, _ in live])
-                payload = np.asarray(self.kv_pages[:, idx])
+                payloads = self._snap_pages([self._gpage_c(c, p)
+                                             for p, _ in live])
                 self._d2h(len(live))
                 for j, (_p, key) in enumerate(live):
                     eid = pool.key_ids[key]
-                    store.park_cache(eid, payload[:, j])
+                    store.park_cache(eid, payloads[j])
                     self.tracer.record_host(EventType.PAGE_DEMOTE, eid,
                                             TIER_DEVICE * 4 + TIER_HOST)
             for key in pool.drain_spill_drops():
@@ -873,11 +940,8 @@ class PagedServer:
         ``self.clock`` (never raw time.*), so a VirtualClock replays the
         whole overlap byte-identically."""
         cc = self.cache_cfg
-        idx = jnp.asarray([g for g, _eid, _pl, _t in promo])
-        payload = jnp.stack([jnp.asarray(pl) for _g, _eid, pl, _t in promo],
-                            axis=1)
-        self.kv_pages = self.kv_pages.at[:, idx].set(
-            payload.astype(self.kv_pages.dtype))
+        self._load_pages([g for g, _eid, _pl, _t in promo],
+                         [pl for _g, _eid, pl, _t in promo])
         self._h2d(len(promo))
         quanta = -(-len(promo) // max(1, cc.prefetch_depth))
         due = self.clock.now() + cc.promote_latency_s * quanta
@@ -933,7 +997,18 @@ class PagedServer:
             bytes_dem += st.cache_bytes_demoted
             bytes_pro += st.cache_bytes_promoted
             dropped += st.cache_dropped
+        cfg = self.cfg
+        kv_hd = cfg.num_kv_heads * cfg.resolved_head_dim
+        if self.quant_kv:
+            # int8 page bytes plus the per-page scale slab amortized over
+            # the page's token slots (4 bytes per (K/V, head) per page)
+            bpt = cfg.num_layers * 2 * (
+                kv_hd + 4.0 * cfg.num_kv_heads / self.page_size)
+        else:
+            bpt = cfg.num_layers * 2 * kv_hd * \
+                jnp.dtype(cfg.param_dtype).itemsize
         return CacheStats(
+            bytes_per_token=float(bpt),
             device_pages=sum(p.num_pages for p in pools),
             device_indexed=sum(len(p.prefix_index) for p in pools),
             device_cached_free=sum(len(p.cached_free) for p in pools),
@@ -1117,6 +1192,7 @@ class PagedServer:
         dirty, self._dirty = self._dirty, set()
         cow_src: List[int] = []
         cow_dst: List[int] = []
+        fresh_pages: List[int] = []
         for r in active:
             i = r.lane
             pool = self._pool(r)
@@ -1126,6 +1202,7 @@ class PagedServer:
                     phys = pool.translate(r.rid, lpage)
                     self.tracer.record_host(EventType.PAGE_ALLOC, r.rid, phys)
                     self._bt_host[i, lpage:] = phys
+                    fresh_pages.append(self._gpage(r, phys))
                     dirty.add(i)
                 for (s, lp, src, dst) in pool.drain_cow():
                     # the writer was remapped off a shared page: patch its
@@ -1139,11 +1216,22 @@ class PagedServer:
         # park payloads of pages the appends just evicted-and-spilled
         # BEFORE the CoW copy / K-V scatter can write into them
         self._drain_tier_ops()
+        if self.quant_kv and fresh_pages:
+            # a recycled page must not inherit its previous owner's scale:
+            # the running-max would only ever grow across pool reuse and
+            # quantization precision would decay with pool age
+            self.kv_scales = self.kv_scales.at[
+                :, jnp.asarray(fresh_pages)].set(0.0)
         if cow_src:
             # one batched on-device page copy, applied before this step's
             # K/V scatter so the write lands in the private copy
             self.kv_pages = self.kv_pages.at[:, jnp.asarray(cow_dst)].set(
                 self.kv_pages[:, jnp.asarray(cow_src)])
+            if self.quant_kv:
+                # the private copy inherits the donor page's scales too
+                self.kv_scales = self.kv_scales.at[
+                    :, jnp.asarray(cow_dst)].set(
+                    self.kv_scales[:, jnp.asarray(cow_src)])
         self._register_prompt_pages(active, n_new)
         # registration may supersede spilled entries; drop them down-tier
         self._drain_tier_ops()
@@ -1230,19 +1318,20 @@ class PagedServer:
         smp = any(not r.sampling.greedy for r in active)
         if decode_only:
             # sync-free: every input already lives on device
-            self.last_tok, self.kv_pages, self.len_dev = \
+            self.last_tok, self.kv_pages, self.kv_scales, self.len_dev = \
                 self._decode_step[smp](
-                    self.params, self.kv_pages, self.bt_dev, self.len_dev,
-                    self.active_dev, self.last_tok, self.seed_dev,
-                    self.temp_dev, self.topk_dev, self.topp_dev)
+                    self.params, self.kv_pages, self.kv_scales, self.bt_dev,
+                    self.len_dev, self.active_dev, self.last_tok,
+                    self.seed_dev, self.temp_dev, self.topk_dev,
+                    self.topp_dev)
         else:
             self._h2d(1)            # the prompt-chunk feed bundle
-            self.last_tok, self.kv_pages, self.len_dev = \
+            self.last_tok, self.kv_pages, self.kv_scales, self.len_dev = \
                 self._chunk_step[smp](
-                    self.params, self.kv_pages, self.bt_dev, self.len_dev,
-                    jnp.asarray(n_new), jnp.asarray(feed), self.last_tok,
-                    jnp.asarray(use_last), self.seed_dev, self.temp_dev,
-                    self.topk_dev, self.topp_dev)
+                    self.params, self.kv_pages, self.kv_scales, self.bt_dev,
+                    self.len_dev, jnp.asarray(n_new), jnp.asarray(feed),
+                    self.last_tok, jnp.asarray(use_last), self.seed_dev,
+                    self.temp_dev, self.topk_dev, self.topp_dev)
 
         tok = np.asarray(self.last_tok)     # one pull per iteration
         self._d2h(1)
@@ -1388,12 +1477,12 @@ class PagedServer:
 
         self._h2d(1)                # the draft feed bundle
         smp = any(not r.sampling.greedy for r in active)
-        verdict, self.kv_pages, self.last_tok, self.len_dev = \
-            self._spec_step[smp](
-                self.params, self.kv_pages, self.bt_dev, self.len_dev,
-                self.active_dev, self.last_tok, jnp.asarray(drafts),
-                jnp.asarray(n_spec), self.seed_dev, self.temp_dev,
-                self.topk_dev, self.topp_dev)
+        verdict, self.kv_pages, self.kv_scales, self.last_tok, \
+            self.len_dev = self._spec_step[smp](
+                self.params, self.kv_pages, self.kv_scales, self.bt_dev,
+                self.len_dev, self.active_dev, self.last_tok,
+                jnp.asarray(drafts), jnp.asarray(n_spec), self.seed_dev,
+                self.temp_dev, self.topk_dev, self.topp_dev)
         v = np.asarray(verdict)     # one pull per iteration
         self._d2h(1)
 
@@ -1560,15 +1649,25 @@ def _sample_tokens(logits, seeds, pos, temps, top_ks, top_ps):
 
 def _paged_forward(cfg: ArchConfig, use_kernel: bool,
                    pages_per_step: int, interpret: bool,
-                   num_pages: int, params, kv_pages, bt, lens, n_new,
-                   feed, last_tok, use_last, *, axis_name=None):
+                   num_pages: int, params, kv_pages, kv_scales, bt, lens,
+                   n_new, feed, last_tok, use_last, *, axis_name=None,
+                   quant=False):
     """Shared forward for the chunk / decode / spec-verify steps: consume up
     to C tokens per lane (prompt chunks from ``feed``; lanes with
     ``use_last`` take the device-resident previous sample at position 0)
     and return the logits at EVERY fed position.
 
-    kv_pages: (L, P+1, 2, page, kv, hd); bt: (B, n_pages) repeat-padded.
-    Returns (logits (B, C, V), kv_pages).
+    kv_pages: (L, P+1, 2, page, kv, hd); kv_scales: (L, P+1, 2, kv) f32;
+    bt: (B, n_pages) repeat-padded.  Returns (logits (B, C, V), kv_pages,
+    kv_scales).
+
+    ``quant`` (compile-time) marks the pool int8: the fused scatter
+    quantizes each lane's new K/V under its page's running-max
+    per-(page, K/V, head) scale — a grown scale re-packs the page's
+    existing bytes under the new scale (untouched pages see factor 1.0
+    exactly, so they round-trip losslessly) — and the attention fetch
+    (kernel or oracle) dequantizes in-line.  In bf16 mode ``kv_scales``
+    flows through untouched (jit DCEs it off the hot path).
 
     ``axis_name`` names the tensor-parallel head mesh axis when this runs
     as a ``shard_map`` body (sharded engine): q/k/v/o weights and the pool's
@@ -1590,12 +1689,38 @@ def _paged_forward(cfg: ArchConfig, use_kernel: bool,
     for i in range(cfg.num_layers):
         lp = M._sub(params["layers"], i)
         q, k, v = _layer_qkv(cfg, lp, x, pos)
-        # one fused scatter writes K AND V for all lanes' chunk tokens
-        kv_pages = kv_pages.at[i, phys, :, sl].set(jnp.stack([k, v], axis=2))
+        kv_new = jnp.stack([k, v], axis=2)          # (B,C,2,Kv,hd)
+        if quant:
+            # running-max page scales: scatter-max the new tokens' absmax
+            # into the touched pages (duplicate-index safe), re-pack pages
+            # whose scale grew, then quantize the new tokens in place
+            sc_i = kv_scales[i]                     # (P+1,2,Kv)
+            tok_scale = headwise_scales(kv_new)     # (B,C,2,Kv)
+            new_sc = sc_i.at[phys].max(tok_scale)
+            factor = jnp.where(
+                new_sc > 0.0, sc_i / jnp.maximum(new_sc, SCALE_EPS), 0.0)
+            repacked = jnp.clip(
+                jnp.round(kv_pages[i].astype(jnp.float32)
+                          * factor[:, :, None, :, None]),
+                -127, 127).astype(jnp.int8)
+            q_new = quantize_int8(kv_new, new_sc[phys][..., None])
+            kv_pages = kv_pages.at[i].set(
+                repacked.at[phys, :, sl].set(q_new))
+            kv_scales = kv_scales.at[i].set(new_sc)
+        else:
+            # one fused scatter writes K AND V for all lanes' chunk tokens
+            kv_pages = kv_pages.at[i, phys, :, sl].set(kv_new)
         if use_kernel:
             a = paged_prefill_fused(q, kv_pages[i], bt, counts, new_lens,
                                     lens, interpret=interpret,
-                                    pages_per_step=pages_per_step)
+                                    pages_per_step=pages_per_step,
+                                    kv_scales=kv_scales[i] if quant
+                                    else None)
+        elif quant:
+            a = paged_prefill_ref(q, kv_pages[i, :, 0], kv_pages[i, :, 1],
+                                  bt_masked, new_lens, lens,
+                                  k_scales=kv_scales[i, :, 0],
+                                  v_scales=kv_scales[i, :, 1])
         else:
             a = paged_prefill_ref(q, kv_pages[i, :, 0], kv_pages[i, :, 1],
                                   bt_masked, new_lens, lens)
@@ -1608,14 +1733,14 @@ def _paged_forward(cfg: ArchConfig, use_kernel: bool,
 
     x = L.norm_forward(cfg, params["final_norm"], x)
     logits = L.logits_from_hidden(cfg, params["embed"], x)  # (B,C,V)
-    return logits, kv_pages
+    return logits, kv_pages, kv_scales
 
 
 def _paged_chunk_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
                       interpret: bool, num_pages: int, params, kv_pages,
-                      bt, lens, n_new, feed, last_tok, use_last, seeds,
-                      temps, top_ks, top_ps, *, axis_name=None,
-                      sample=True):
+                      kv_scales, bt, lens, n_new, feed, last_tok, use_last,
+                      seeds, temps, top_ks, top_ps, *, axis_name=None,
+                      quant=False, sample=True):
     """Consume up to C tokens per lane: prompt chunks from ``feed``, decode
     lanes (``use_last``) from the device-resident previous sample; the next
     token is selected at the last fed position by the per-lane sampling
@@ -1624,11 +1749,11 @@ def _paged_chunk_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
     active lane is greedy, so the historical hot path never traces the
     sampler at all.
 
-    Returns (sampled_tokens (B,), kv_pages, new_lens)."""
-    logits, kv_pages = _paged_forward(
+    Returns (sampled_tokens (B,), kv_pages, kv_scales, new_lens)."""
+    logits, kv_pages, kv_scales = _paged_forward(
         cfg, use_kernel, pages_per_step, interpret, num_pages, params,
-        kv_pages, bt, lens, n_new, feed, last_tok, use_last,
-        axis_name=axis_name)
+        kv_pages, kv_scales, bt, lens, n_new, feed, last_tok, use_last,
+        axis_name=axis_name, quant=quant)
     row = jnp.maximum(n_new - 1, 0)
     last_logits = jnp.take_along_axis(
         logits, row[:, None, None], axis=1)[:, 0]           # (B,V)
@@ -1640,14 +1765,14 @@ def _paged_chunk_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
     else:
         nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
     nxt = jnp.where(n_new > 0, nxt, last_tok)   # idle lanes keep their token
-    return nxt, kv_pages, lens + n_new
+    return nxt, kv_pages, kv_scales, lens + n_new
 
 
 def _paged_spec_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
                      interpret: bool, num_pages: int, params, kv_pages,
-                     bt, lens, active, last_tok, drafts, n_spec, seeds,
-                     temps, top_ks, top_ps, *, axis_name=None,
-                     sample=True):
+                     kv_scales, bt, lens, active, last_tok, drafts, n_spec,
+                     seeds, temps, top_ks, top_ps, *, axis_name=None,
+                     quant=False, sample=True):
     """Speculative verify step: score all K+1 candidate positions of every
     lane in ONE chunked forward and count the accepted draft prefix.
 
@@ -1665,17 +1790,17 @@ def _paged_spec_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
     by ``accepted + 1`` on device; the host applies the same trim to the
     pool.
 
-    Returns (verdict (B, K+2), kv_pages, last_tok, new_lens) where
-    ``verdict[:, :K+1]`` holds the per-position verify tokens (with the
-    bonus token at column ``accepted``) and ``verdict[:, K+1]`` the
+    Returns (verdict (B, K+2), kv_pages, kv_scales, last_tok, new_lens)
+    where ``verdict[:, :K+1]`` holds the per-position verify tokens (with
+    the bonus token at column ``accepted``) and ``verdict[:, K+1]`` the
     accepted count."""
     B, K = drafts.shape
     feed = jnp.concatenate([jnp.zeros((B, 1), jnp.int32), drafts], axis=1)
     n_new = jnp.where(active == 1, n_spec + 1, 0)
-    logits, kv_pages = _paged_forward(
+    logits, kv_pages, kv_scales = _paged_forward(
         cfg, use_kernel, pages_per_step, interpret, num_pages, params,
-        kv_pages, bt, lens, n_new, feed, last_tok, active,
-        axis_name=axis_name)
+        kv_pages, kv_scales, bt, lens, n_new, feed, last_tok, active,
+        axis_name=axis_name, quant=quant)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     idx = jnp.arange(K, dtype=jnp.int32)[None, :]
     ok = (drafts == greedy[:, :K]) & (idx < n_spec[:, None])
@@ -1691,22 +1816,23 @@ def _paged_spec_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
     last = jnp.where(active == 1, bonus, last_tok)
     toks = greedy.at[jnp.arange(B), accepted].set(last)
     verdict = jnp.concatenate([toks, accepted[:, None]], axis=1)
-    return verdict, kv_pages, last, new_lens
+    return verdict, kv_pages, kv_scales, last, new_lens
 
 
 def _paged_decode_step(cfg: ArchConfig, use_kernel: bool, pages_per_step: int,
                        interpret: bool, num_pages: int, params, kv_pages,
-                       bt, lens, active, last_tok, seeds, temps, top_ks,
-                       top_ps, *, axis_name=None, sample=True):
+                       kv_scales, bt, lens, active, last_tok, seeds, temps,
+                       top_ks, top_ps, *, axis_name=None, quant=False,
+                       sample=True):
     """One decode token for every active lane, entirely from device state —
     the C=1 case of the chunk step (mirroring paged_decode_fwd, which is the
     C=1 case of the prefill kernel), with every lane fed its device-resident
     previous sample.
 
-    Returns (sampled_tokens (B,), kv_pages, new_lens)."""
+    Returns (sampled_tokens (B,), kv_pages, kv_scales, new_lens)."""
     B = lens.shape[0]
     return _paged_chunk_step(
         cfg, use_kernel, pages_per_step, interpret, num_pages, params,
-        kv_pages, bt, lens, active, jnp.zeros((B, 1), jnp.int32), last_tok,
-        jnp.ones((B,), jnp.int32), seeds, temps, top_ks, top_ps,
-        axis_name=axis_name, sample=sample)
+        kv_pages, kv_scales, bt, lens, active, jnp.zeros((B, 1), jnp.int32),
+        last_tok, jnp.ones((B,), jnp.int32), seeds, temps, top_ks, top_ps,
+        axis_name=axis_name, quant=quant, sample=sample)

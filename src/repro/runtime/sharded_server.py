@@ -115,13 +115,18 @@ class ShardedPagedServer(PagedServer):
         # its batch dim over `cluster`
         cfg, C = self.cfg, self.clusters
         L_, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
-        dt = jnp.dtype(cfg.param_dtype)
+        dt = jnp.int8 if self.quant_kv else jnp.dtype(cfg.param_dtype)
         specs = cluster_engine_specs(self.params)
         mesh_ = self.cmesh.mesh
         ns = functools.partial(NamedSharding, mesh_)
         self.kv_pages = jax.device_put(
             jnp.zeros((L_, C * (num_pages + 1), 2, self.page_size, kv, hd),
                       dt), ns(specs["kv"]))
+        # per-page dequant scales for the int8 KV mode; allocated in both
+        # modes so the step signatures stay uniform (bf16 jit DCEs it)
+        self.kv_scales = jax.device_put(
+            jnp.zeros((L_, C * (num_pages + 1), 2, kv), jnp.float32),
+            ns(specs["kv_scales"]))
         B = self.max_lanes
         self.bt_dev = jax.device_put(
             jnp.zeros((B, self.max_pages), jnp.int32), ns(specs["lane2"]))
@@ -148,7 +153,8 @@ class ShardedPagedServer(PagedServer):
         # page block and local heads — HERO's "the per-cluster body is
         # literally the single-cluster program" discipline
         itp = jax.default_backend() != "tpu"
-        out_specs = (specs["lane"], specs["kv"], specs["lane"])
+        out_specs = (specs["lane"], specs["kv"], specs["kv_scales"],
+                     specs["lane"])
         sampling_specs = (specs["lane"],) * 4   # seeds, temps, topk, topp
 
         # the same two-variant dispatch as the unsharded engine (all-greedy
@@ -158,7 +164,8 @@ class ShardedPagedServer(PagedServer):
             def one(s):
                 body = functools.partial(
                     step_fn, cfg, self.use_kernel, pages_per_step, itp,
-                    num_pages, axis_name="head", sample=s)
+                    num_pages, axis_name="head", quant=self.quant_kv,
+                    sample=s)
                 return jax.jit(shard_map(body, mesh=mesh_,
                                          in_specs=in_specs, out_specs=outs,
                                          check_rep=False))
@@ -166,23 +173,25 @@ class ShardedPagedServer(PagedServer):
 
         self._chunk_step = mk(
             _paged_chunk_step,
-            (specs["params"], specs["kv"], specs["lane2"], specs["lane"],
-             specs["lane"], specs["lane2"], specs["lane"],
-             specs["lane"]) + sampling_specs, out_specs)
+            (specs["params"], specs["kv"], specs["kv_scales"],
+             specs["lane2"], specs["lane"], specs["lane"], specs["lane2"],
+             specs["lane"], specs["lane"]) + sampling_specs, out_specs)
         self._decode_step = mk(
             _paged_decode_step,
-            (specs["params"], specs["kv"], specs["lane2"], specs["lane"],
-             specs["lane"], specs["lane"]) + sampling_specs, out_specs)
+            (specs["params"], specs["kv"], specs["kv_scales"],
+             specs["lane2"], specs["lane"], specs["lane"],
+             specs["lane"]) + sampling_specs, out_specs)
         if self.spec_k:
             # the speculative verify step is the same shard_map discipline:
             # drafts/verdicts shard their lane dim over `cluster`, the
             # acceptance count is computed shard-locally per lane group
             self._spec_step = mk(
                 _paged_spec_step,
-                (specs["params"], specs["kv"], specs["lane2"], specs["lane"],
-                 specs["lane"], specs["lane"], specs["lane2"],
-                 specs["lane"]) + sampling_specs,
-                (specs["lane2"], specs["kv"], specs["lane"], specs["lane"]))
+                (specs["params"], specs["kv"], specs["kv_scales"],
+                 specs["lane2"], specs["lane"], specs["lane"], specs["lane"],
+                 specs["lane2"], specs["lane"]) + sampling_specs,
+                (specs["lane2"], specs["kv"], specs["kv_scales"],
+                 specs["lane"], specs["lane"]))
 
     def _build_backing_store(self) -> HostBackingStore:
         # cache spill tiers are per cluster (like the pools and prefix

@@ -37,3 +37,10 @@ def matrix_use_kernel() -> bool:
     """Attention path under test — the CI matrix sets REPRO_ATTN_PATH to
     'kernel' (Pallas, interpret mode on CPU) or 'ref' (XLA oracle)."""
     return os.environ.get("REPRO_ATTN_PATH", "ref") == "kernel"
+
+
+@pytest.fixture(scope="session")
+def matrix_kv_dtype() -> str:
+    """KV-pool storage dtype under test — the CI quantization matrix sets
+    REPRO_KV_DTYPE to 'int8' in dedicated legs (default 'bf16')."""
+    return os.environ.get("REPRO_KV_DTYPE", "bf16")

@@ -11,7 +11,10 @@ TTFT/TPOT relative gates in both directions, SLO-goodput floor,
 replay-identical requirement, missing section fails), and the tiered
 prefix-cache gates on the ``hierarchical_cache`` section (tiered hit
 rate strictly above device-only, corpus/pool ratio floor, token-parity
-requirement, missing section fails)."""
+requirement, missing section fails), and the int8 gates on the
+``quantized_kv`` section (bytes/token-ratio ceiling, teacher-forced
+token-agreement floor, kernel/oracle parity flag, missing section
+fails), and the ``--allow-missing-baseline`` bootstrap path."""
 import copy
 import json
 import sys
@@ -56,6 +59,12 @@ def result(**over):
             "device_only": {"prefix_hit_rate": 0.23},
             "tiered": {"prefix_hit_rate": 0.43},
             "token_parity": True,
+        },
+        "quantized_kv": {
+            "bytes_per_token_ratio": 0.53,
+            "page_pool_headroom": 1.88,
+            "token_agreement": 1.0,
+            "kernel_ref_outputs_match": True,
         },
     }
     for k, v in over.items():
@@ -351,3 +360,93 @@ def test_hierarchical_cache_new_in_baseline_passes(gate, capsys):
     base = result(**{"hierarchical_cache": ...})
     assert gate(base, result()) == 0
     assert "NEW" in capsys.readouterr().out
+
+
+# -------------------------------------------------- quantized-kv gates --
+
+def test_kv_ratio_relative_regression_fails(gate):
+    # lower-better direction: the int8 footprint creeping up 15% fails
+    # the relative gate even while still under the absolute ceiling
+    fresh = result(**{"quantized_kv.bytes_per_token_ratio": 0.609})
+    assert gate(result(), fresh, "--kv-ratio-ceiling", "0.7") == 1
+
+
+def test_kv_ratio_ceiling_gates(gate):
+    fresh = result(**{"quantized_kv.bytes_per_token_ratio": 0.65})
+    base = copy.deepcopy(fresh)        # relative gate is clean: same values
+    assert gate(base, fresh) == 1      # ... but the absolute ceiling fails
+    assert gate(base, fresh, "--kv-ratio-ceiling", "0.7") == 0
+
+
+def test_token_agreement_floor_gates(gate):
+    fresh = result(**{"quantized_kv.token_agreement": 0.95})
+    base = copy.deepcopy(fresh)
+    assert gate(base, fresh) == 1
+    assert gate(base, fresh, "--token-agreement-floor", "0.9") == 0
+
+
+def test_token_agreement_relative_regression_fails(gate):
+    # higher-better direction: agreement dropping 15% below the baseline
+    # fails even when it still clears a loosened absolute floor
+    fresh = result(**{"quantized_kv.token_agreement": 0.85})
+    assert gate(result(), fresh, "--token-agreement-floor", "0.8") == 1
+
+
+def test_quantized_kernel_ref_parity_required(gate):
+    # the in-kernel dequant and the oracle disagreeing on tokens is a
+    # kernel bug, never a quantization trade-off
+    fresh = result(**{"quantized_kv.kernel_ref_outputs_match": False})
+    base = copy.deepcopy(fresh)
+    assert gate(base, fresh) == 1
+
+
+def test_quantized_kv_section_missing_from_fresh_fails(gate):
+    # like degradation/latency: the int8 probe going silent IS the
+    # regression, it is not NEW-tolerated on the fresh side
+    fresh = result(**{"quantized_kv": ...})
+    base = result(**{"quantized_kv": ...})
+    assert gate(base, fresh) == 1
+
+
+def test_quantized_kv_new_in_baseline_passes(gate, capsys):
+    # the PR that introduces the int8 path has no baseline for it yet:
+    # relative gates report NEW, absolute gates run on fresh alone
+    base = result(**{"quantized_kv": ...})
+    assert gate(base, result()) == 0
+    assert "NEW" in capsys.readouterr().out
+
+
+# ---------------------------------------------- missing-baseline path --
+
+def test_missing_baseline_with_flag_passes(tmp_path, capsys):
+    # bootstrap path: no committed baseline yet, absolute gates only
+    fp = tmp_path / "fresh.json"
+    fp.write_text(json.dumps(result()))
+    assert check_bench.main(["--baseline", str(tmp_path / "nope.json"),
+                             "--fresh", str(fp),
+                             "--allow-missing-baseline"]) == 0
+    assert "WARN" in capsys.readouterr().out
+
+
+def test_missing_baseline_with_flag_still_runs_absolute_gates(tmp_path):
+    # the flag tolerates the missing baseline, not a failing fresh result
+    fp = tmp_path / "fresh.json"
+    fp.write_text(json.dumps(result(
+        **{"quantized_kv.token_agreement": 0.5})))
+    assert check_bench.main(["--baseline", str(tmp_path / "nope.json"),
+                             "--fresh", str(fp),
+                             "--allow-missing-baseline"]) == 1
+
+
+def test_malformed_baseline_with_flag_passes(gate):
+    # an unreadable baseline is the same bootstrap case as a missing one
+    assert gate("{not json", result(), "--allow-missing-baseline") == 0
+
+
+def test_missing_fresh_exits_2_despite_flag(tmp_path):
+    # --allow-missing-baseline never excuses the fresh side
+    bp = tmp_path / "base.json"
+    bp.write_text(json.dumps(result()))
+    assert check_bench.main(["--baseline", str(bp),
+                             "--fresh", str(tmp_path / "nope.json"),
+                             "--allow-missing-baseline"]) == 2

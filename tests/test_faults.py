@@ -9,8 +9,10 @@ layer-3 trace analyses that make it all observable.
 
 The fault-matrix tests carry ``@pytest.mark.chaos`` and run in the CI
 ``chaos`` job across page sizes {4, 8} (via ``REPRO_PAGE_SIZE`` and the
-``matrix_page_size`` fixture); everything here also runs in the plain
-suite at the default page size.
+``matrix_page_size`` fixture) and, in the nightly int8 leg, with the
+quantized KV pool (``REPRO_KV_DTYPE=int8`` / ``matrix_kv_dtype``) so
+faults land on packed int8-page+scales swap blobs too; everything here
+also runs in the plain suite at the default page size.
 """
 import numpy as np
 import pytest
@@ -50,11 +52,11 @@ def _prompts(vocab, n=4, seed=2):
             for ln in rng.integers(3, 11, size=n)]
 
 
-def _engine(cfg, params, *, page_size=4, **kw):
+def _engine(cfg, params, *, page_size=4, kv_dtype="bf16", **kw):
     tracer = TraceBuffer(capacity=1 << 14)
     return make_engine(cfg, params, EngineConfig(
         cache=CacheConfig(num_pages=NUM_PAGES, page_size=page_size,
-                          max_pages_per_seq=8),
+                          max_pages_per_seq=8, kv_dtype=kv_dtype),
         max_lanes=2, chunk=4, use_kernel=False, **kw),
         tracer=tracer)
 
@@ -87,9 +89,11 @@ def _assert_pristine(srv):
 
 
 @pytest.fixture(scope="module")
-def baseline(cfg, params):
-    """Fault-free greedy outputs every survivor-parity check compares to."""
-    srv = _engine(cfg, params)
+def baseline(cfg, params, matrix_kv_dtype):
+    """Fault-free greedy outputs every survivor-parity check compares to
+    — computed at the matrix KV dtype so int8 runs compare int8-to-int8
+    (quantization shifts tokens relative to bf16, faults must not)."""
+    srv = _engine(cfg, params, kv_dtype=matrix_kv_dtype)
     _submit_all(srv, _prompts(cfg.vocab_size))
     return {r.rid: r.tokens for r in srv.run()}
 
@@ -258,8 +262,10 @@ def test_deadline_s_times_out(cfg, params):
 
 
 @pytest.mark.chaos
-def test_cancel_from_stream_loop(cfg, params, matrix_page_size, baseline):
-    srv = _engine(cfg, params, page_size=matrix_page_size)
+def test_cancel_from_stream_loop(cfg, params, matrix_page_size,
+                                 matrix_kv_dtype, baseline):
+    srv = _engine(cfg, params, page_size=matrix_page_size,
+                  kv_dtype=matrix_kv_dtype)
     _submit_all(srv, _prompts(cfg.vocab_size))
     cancelled = False
     deltas = []
@@ -280,11 +286,12 @@ def test_cancel_from_stream_loop(cfg, params, matrix_page_size, baseline):
     _assert_pristine(srv)
 
 
-def test_break_and_close_leave_pool_consistent(cfg, params, baseline):
+def test_break_and_close_leave_pool_consistent(cfg, params, matrix_kv_dtype,
+                                               baseline):
     """Regression: a consumer that ``break``s (or ``.close()``s) the
     streaming iterator mid-run must leave the pool consistent — and the
     engine resumable to the exact fault-free outputs."""
-    srv = _engine(cfg, params)
+    srv = _engine(cfg, params, kv_dtype=matrix_kv_dtype)
     _submit_all(srv, _prompts(cfg.vocab_size))
     gen = srv.generate()
     for i, _ in enumerate(gen):
@@ -295,7 +302,7 @@ def test_break_and_close_leave_pool_consistent(cfg, params, baseline):
     assert res == baseline, "resume after break diverged"
     _assert_pristine(srv)
 
-    srv = _engine(cfg, params)
+    srv = _engine(cfg, params, kv_dtype=matrix_kv_dtype)
     _submit_all(srv, _prompts(cfg.vocab_size))
     gen = srv.generate()
     next(gen)
@@ -306,9 +313,10 @@ def test_break_and_close_leave_pool_consistent(cfg, params, baseline):
 
 @pytest.mark.chaos
 def test_transient_faults_recovered_by_retry(cfg, params, matrix_page_size,
-                                             baseline):
+                                             matrix_kv_dtype, baseline):
     inj = FaultInjector(seed=2, rate=0.5, kinds=(FaultSpec("io"),))
     srv = _engine(cfg, params, page_size=matrix_page_size,
+                  kv_dtype=matrix_kv_dtype,
                   fault_injector=inj, swap_retries=6)
     _submit_all(srv, _prompts(cfg.vocab_size))
     res = _drive_with_preempts(srv, at=(2, 6))
@@ -329,10 +337,11 @@ def test_transient_faults_recovered_by_retry(cfg, params, matrix_page_size,
 
 @pytest.mark.chaos
 def test_persistent_fault_demotes_one_request(cfg, params, matrix_page_size,
-                                              baseline):
+                                              matrix_kv_dtype, baseline):
     inj = FaultInjector(plan={i: FaultSpec("io", op="pop", persistent=True)
                               for i in range(64)})
     srv = _engine(cfg, params, page_size=matrix_page_size,
+                  kv_dtype=matrix_kv_dtype,
                   fault_injector=inj, swap_retries=2)
     _submit_all(srv, _prompts(cfg.vocab_size))
     res = _drive_with_preempts(srv)
@@ -351,10 +360,11 @@ def test_persistent_fault_demotes_one_request(cfg, params, matrix_page_size,
 
 
 @pytest.mark.chaos
-def test_corruption_detected_at_swap_in(cfg, params, matrix_page_size):
+def test_corruption_detected_at_swap_in(cfg, params, matrix_page_size,
+                                        matrix_kv_dtype):
     inj = FaultInjector(plan={0: FaultSpec("corrupt", op="put")})
     srv = _engine(cfg, params, page_size=matrix_page_size,
-                  fault_injector=inj)
+                  kv_dtype=matrix_kv_dtype, fault_injector=inj)
     _submit_all(srv, _prompts(cfg.vocab_size))
     res = _drive_with_preempts(srv)
     errs = [r for r in res.values() if r.finish_reason == FINISH_ERROR]
@@ -364,10 +374,11 @@ def test_corruption_detected_at_swap_in(cfg, params, matrix_page_size):
 
 
 @pytest.mark.chaos
-def test_stall_fault_slows_but_completes(cfg, params, baseline):
+def test_stall_fault_slows_but_completes(cfg, params, matrix_kv_dtype,
+                                         baseline):
     inj = FaultInjector(plan={0: FaultSpec("stall", stall_s=0.01),
                               1: FaultSpec("stall", stall_s=0.01)})
-    srv = _engine(cfg, params, fault_injector=inj)
+    srv = _engine(cfg, params, kv_dtype=matrix_kv_dtype, fault_injector=inj)
     _submit_all(srv, _prompts(cfg.vocab_size))
     res = _drive_with_preempts(srv)
     assert all(r.finish_reason == "length" for r in res.values())
@@ -471,10 +482,10 @@ def test_sharded_engine_survives_faults(cfg, params):
 
 
 @pytest.mark.chaos
-def test_timeout_releases_swapped_out_request(cfg, params):
+def test_timeout_releases_swapped_out_request(cfg, params, matrix_kv_dtype):
     """A request that times out while parked in the backing store must
     release its host payloads too — the discard path, not just pages."""
-    srv = _engine(cfg, params)
+    srv = _engine(cfg, params, kv_dtype=matrix_kv_dtype)
     ps = _prompts(cfg.vocab_size)
     _submit_all(srv, ps, deadline_iters=lambda rid: 6 if rid == 0 else None)
     for i, _ in enumerate(srv.generate()):

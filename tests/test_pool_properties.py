@@ -24,6 +24,19 @@ fetch faults drop entries everywhere — and must preserve:
   either device-indexed or spilled, never both, and after the demotion/
   drop queues drain the backing store holds exactly the spilled ids.
 
+The quantized variant (``QuantizedSchedulerModel``) additionally shadows
+the int8 engine's per-page dequant-scale slab through the same action
+mix — quantize-writes grow a page's running-max scale, CoW copies the
+source page's scale to the private copy, preemption swaps scales out
+and back in with the page bytes, and demotion parks the scale in the
+backing store for promotion to restore — and must keep the scale shadow
+in lockstep with content-holding pages:
+
+* a scale row exists for exactly the pages that hold content (mapped or
+  cached-free); a cached page never loses its scale before eviction;
+* every spilled entry parks a scale alongside its bytes (the engine's
+  single packed blob + CRC).
+
 Skipped wholesale when hypothesis is not installed (see
 requirements-dev.txt); the deterministic unit tests in ``test_rab.py``
 and ``test_hierarchical_cache.py`` always run.
@@ -103,6 +116,17 @@ class SchedulerModel:
                           "reg_pages": usable // PAGE_SIZE,
                           "preempted": False, "swapped": []}
 
+    # Quantized-model hooks: the int8 variant shadows the scales slab by
+    # observing the same pool transitions the server's accounting sees.
+    def _on_append(self, seq):
+        pass
+
+    def _on_cow(self, src, dst):
+        pass
+
+    def _on_adopt(self, seq, lp, eid):
+        pass
+
     def _running(self, k):
         seqs = [s for s, v in self.live.items() if not v["preempted"]]
         return seqs[k % len(seqs)] if seqs else None
@@ -124,6 +148,8 @@ class SchedulerModel:
         for (s, lp, src, dst) in pool.drain_cow():
             assert s == seq and pool.page_table[(s, lp)] == dst
             assert dst != src
+            self._on_cow(src, dst)
+        self._on_append(seq)
         written = min(pool.seq_len[seq], len(prompt))
         if pool.seq_len[seq] <= len(prompt):   # still a prompt token
             for lp in range(st_["reg_pages"], written // PAGE_SIZE):
@@ -163,6 +189,8 @@ class SchedulerModel:
             for (s, lp, src, dst) in pool.drain_cow():
                 assert s == seq and pool.page_table[(s, lp)] == dst
                 assert dst != src
+                self._on_cow(src, dst)
+            self._on_append(seq)
         accepted = acc_sel % (kk + 1)        # any prefix may be rejected
         freed = pool.trim(seq, start + accepted + 1)
         assert pool.seq_len[seq] == start + accepted + 1
@@ -329,6 +357,7 @@ class TieredSchedulerModel(SchedulerModel):
                 eid = pool.spilled[v]
                 pool.adopt_spilled(seq, lp, v)
                 del self.store[eid]     # promoted: store copy dropped
+                self._on_adopt(seq, lp, eid)
         if usable:
             pool.seq_len[seq] = usable
         self.live[seq] = {"prompt": prompt, "max_new": max_new,
@@ -360,6 +389,107 @@ class TieredSchedulerModel(SchedulerModel):
         # spilled entries keep their stable ids (promotion identity)
         for key, eid in pool.spilled.items():
             assert self.store[eid] == key
+
+
+class QuantizedSchedulerModel(TieredSchedulerModel):
+    """The tiered model with the int8 KV pool's scale slab shadowed: a
+    per-physical-page running-max dequant scale, driven exactly the way
+    ``PagedServer`` drives its device scales array — reset on fresh
+    allocation, grown by every quantize-write (scatter-max), copied
+    src→dst on CoW before the private write lands, packed with the page
+    bytes through preemption swap-out/in, and parked in the backing
+    store by demotion for promotion to restore."""
+
+    def __init__(self):
+        super().__init__()
+        self.scale = {}          # phys -> running-max scale (the "slab")
+        self.store_scale = {}    # eid -> scale parked with spilled bytes
+        self._pre = {}           # scale state at op start (demotion parks
+        self._tok = 0            # bytes as of eviction, not drain, time)
+
+    # ------------------------------------------------- base-model hooks --
+    def _on_append(self, seq):
+        pool = self.pool
+        n = pool.seq_len[seq]
+        p = pool.page_table[(seq, (n - 1) // PAGE_SIZE)]
+        self._tok += 1
+        tok_scale = 1.0 + (self._tok % 5) / 4.0    # varying |max| per token
+        self.scale[p] = max(self.scale.get(p, 0.0), tok_scale)
+
+    def _on_cow(self, src, dst):
+        self.scale[dst] = self.scale.get(src, 0.0)
+
+    def _on_adopt(self, seq, lp, eid):
+        # promotion restores exactly the scale demotion parked
+        assert eid in self.store_scale, "promoted bytes without a scale"
+        self.scale[self.pool.page_table[(seq, lp)]] = \
+            self.store_scale.pop(eid)
+
+    # --------------------------------------------------------- lifecycle --
+    def snapshot(self):
+        self._pre = dict(self.scale)
+
+    def preempt(self, k):
+        seq = self._running(k)
+        if seq is not None:
+            # the swap blob packs page bytes AND their scales (one CRC)
+            self.live[seq]["swapped_scale"] = {
+                lp: self.scale.get(p, 0.0)
+                for lp, p in self.pool.seq_pages(seq)}
+        super().preempt(k)
+
+    def resume(self, k):
+        seq = self._preempted(k)
+        super().resume(k)
+        if seq is not None and seq in self.live \
+                and not self.live[seq]["preempted"]:
+            saved = self.live[seq].pop("swapped_scale", {})
+            for lp, sc in saved.items():    # H2D restore lands the scales
+                self.scale[self.pool.page_table[(seq, lp)]] = sc
+
+    def drop_spilled(self, k):
+        pool = self.pool
+        keys = sorted(pool.spilled)
+        if keys:                            # same key the base op drops
+            self.store_scale.pop(pool.spilled[keys[k % len(keys)]], None)
+        super().drop_spilled(k)
+
+    def drain_tiers(self):
+        pool = self.pool
+        for p, key in pool.drain_demotions():
+            if key in pool.spilled:          # not superseded meanwhile
+                eid = pool.spilled[key]
+                self.store[eid] = key
+                self.store_scale[eid] = self._pre.get(
+                    p, self.scale.get(p, 0.0))
+        for eid in pool.drain_spill_drops():
+            self.store.pop(eid, None)
+            self.store_scale.pop(eid, None)
+
+    def reconcile(self):
+        """Mirror ``_account_appends``' fresh-page scale reset and the
+        slab rows going dead when pages leave the content set."""
+        content = set(self.pool.page_table.values()) \
+            | set(self.pool.cached_free)
+        for p in list(self.scale):
+            if p not in content:
+                del self.scale[p]            # freed: the row is dead
+        for p in content - set(self.scale):
+            assert p not in self.pool.cached_free, \
+                "a cached page lost its scale before eviction"
+            self.scale[p] = 0.0              # fresh allocation: reset
+
+    # ------------------------------------------------------- invariants --
+    def check(self):
+        super().check()
+        pool = self.pool
+        content = set(pool.page_table.values()) | set(pool.cached_free)
+        assert set(self.scale) == content, \
+            "scale rows out of sync with content-holding pages"
+        assert all(s >= 0.0 for s in self.scale.values())
+        # every spilled entry parks a scale alongside its bytes
+        assert set(pool.spilled.values()) <= set(self.store_scale), \
+            "spilled bytes without a parked scale"
 
 
 OPS = st.sampled_from(["submit", "decode", "decode", "decode", "decode",
@@ -443,6 +573,51 @@ def test_tiered_pool_invariants_under_random_schedules(schedule):
         m.check()
     for s in list(m.live):
         m.pool.release(s)
+        m.drain_tiers()
+        m.check()
+    assert m.pool.free_pages() == NUM_PAGES
+    assert sum(m.pool.refcount.values()) == 0 == len(m.pool.page_table)
+
+
+@settings(deadline=None)
+@given(st.lists(st.tuples(TIERED_OPS, st.integers(0, 6),
+                          st.integers(1, 4), st.integers(0, 4)),
+                min_size=1, max_size=120))
+def test_quantized_scale_slab_under_random_schedules(schedule):
+    """The int8 pool's scale slab shadow under the full action mix —
+    quantize-writes, CoW, speculative trim, preemption swap, tiered
+    demote/promote, fetch faults — must track content-holding pages
+    exactly: no live page without a scale row, no cached page losing its
+    scale before eviction, no spilled bytes without a parked scale, and
+    promotion restoring exactly what demotion parked."""
+    m = QuantizedSchedulerModel()
+    for op, arg, max_new, acc in schedule:
+        m.snapshot()            # demotion parks scales as of eviction time
+        if op == "submit":
+            m.submit(arg, max_new)
+        elif op == "decode":
+            m.decode(arg)
+        elif op == "finish":
+            m.finish(arg)
+        elif op == "preempt":
+            m.preempt(arg)
+        elif op == "resume":
+            m.resume(arg)
+        elif op == "speculate":
+            m.speculate(arg, max_new, acc)
+        elif op == "cancel":
+            m.cancel(arg)
+        elif op == "fault_swap_in":
+            m.fault_swap_in(arg, acc)
+        elif op == "drop_spilled":
+            m.drop_spilled(arg)
+        m.reconcile()
+        m.drain_tiers()
+        m.check()
+    for s in list(m.live):
+        m.snapshot()
+        m.pool.release(s)
+        m.reconcile()
         m.drain_tiers()
         m.check()
     assert m.pool.free_pages() == NUM_PAGES

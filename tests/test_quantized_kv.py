@@ -1,0 +1,239 @@
+"""Quantized KV serving path: ``CacheConfig.kv_dtype="int8"`` stores
+pages as int8 with one float32 scale per (page, K/V, kv-head), the fused
+scatter quantizes at write, and both attention paths dequantize inside
+the K/V fetch.
+
+Deterministic suite (runs in every CI leg; the matrix fixtures pick the
+page size / attention path, the int8 engines here are explicit):
+
+* quantization primitives: re-quantizing under an unchanged page scale
+  is exactly lossless (the rescale-on-grow repack invariant) and the
+  absmax/127 grid bounds per-element error by half a step;
+* config surface: ``kv_dtype`` validation, ``CacheStats.bytes_per_token``
+  matching the closed-form footprint in both modes, ratio under the
+  bench gate's ceiling;
+* engine parity: int8 Pallas kernel == int8 ref oracle token-for-token;
+  int8 output streams track bf16 closely (agreement floor — int8 may
+  legitimately flip near-argmax-ties, so this is NOT an equality gate);
+* lifecycle: int8 pages survive preemption swap-out/in, shared-prefix
+  CoW, speculative trim/rollback, tier demote/promote, and the
+  1-cluster sharded engine — each must reproduce the corresponding
+  undisturbed int8 stream exactly (quantization error must be
+  deterministic, not path-dependent).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.optim.compress import (
+    decompress_int8, headwise_scales, quantize_int8,
+)
+from repro.runtime import (
+    CacheConfig, EngineConfig, GenerationRequest, SamplingParams,
+    VirtualClock, make_engine,
+)
+
+MAX_NEW = 8
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("yi-6b").smoke()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(vocab, seed=0):
+    """Repetitive + random prompts (shared 4-token pattern twice so the
+    prefix cache and the drafter both engage)."""
+    rng = np.random.default_rng(seed)
+    pat = rng.integers(1, vocab, size=4).tolist()
+    return [pat * 3, rng.integers(1, vocab, size=12).tolist(),
+            pat * 3 + [5, 6], rng.integers(1, vocab, size=9).tolist()]
+
+
+def _serve(cfg, params, prompts, *, kv_dtype="int8", page_size=4,
+           use_kernel=False, max_lanes=2, max_new=MAX_NEW, num_pages=64,
+           preempt_rid=None, cache_kw=None, **kw):
+    srv = make_engine(cfg, params, EngineConfig(
+        cache=CacheConfig(num_pages=num_pages, page_size=page_size,
+                          max_pages_per_seq=16, kv_dtype=kv_dtype,
+                          **(cache_kw or {})),
+        max_lanes=max_lanes, chunk=8, use_kernel=use_kernel, **kw))
+    try:
+        for rid, p in enumerate(prompts):
+            srv.submit(GenerationRequest(
+                rid=rid, prompt=tuple(p),
+                sampling=SamplingParams(max_new=max_new)))
+        if preempt_rid is not None:
+            for _ in range(6):          # into mid-decode before preempting
+                srv.step()
+            assert srv.preempt(preempt_rid)
+        done = srv.run()
+        assert len(done) == len(prompts)
+        out = {r.rid: r.tokens for r in done}
+        stats = srv.cache_stats()
+        (srv.cpool if hasattr(srv, "cpool") else srv.pool).check_invariants()
+    finally:
+        srv.close()
+    return out, stats
+
+
+# ------------------------------------------------------- primitives --
+
+def test_requantize_under_unchanged_scale_is_lossless():
+    """The repack multiplies stored bytes by old_scale/new_scale and
+    re-rounds; for pages a new token did not extend that factor is
+    exactly 1.0, so round(q * 1.0) == q — byte-identical."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 4, 16), jnp.float32)
+    scale = headwise_scales(x)[..., None]
+    q = quantize_int8(x, scale)
+    again = jnp.round(q.astype(jnp.float32) * 1.0)
+    assert jnp.array_equal(again.astype(jnp.int8), q)
+    # and quantizing the dequantized value under the same scale is a
+    # fixed point (no drift across repeated repacks)
+    q2 = quantize_int8(decompress_int8(q, scale), scale)
+    assert jnp.array_equal(q2, q)
+
+
+def test_quantization_error_bounded_by_half_step():
+    x = jax.random.normal(jax.random.PRNGKey(7), (8, 32), jnp.float32) * 5.0
+    scale = headwise_scales(x)[..., None]
+    err = jnp.abs(decompress_int8(quantize_int8(x, scale), scale) - x)
+    assert float(jnp.max(err)) <= float(jnp.max(scale)) * 0.5 + 1e-6
+    # zero slices carry scale 0 and quantize to exact zeros
+    z = jnp.zeros((3, 8))
+    assert float(jnp.max(jnp.abs(headwise_scales(z)))) == 0.0
+    assert jnp.array_equal(quantize_int8(z, headwise_scales(z)[..., None]),
+                           jnp.zeros((3, 8), jnp.int8))
+
+
+def test_running_max_scale_only_grows():
+    """Page scales are a running absmax: folding in a smaller token
+    leaves the scale (and existing bytes) untouched."""
+    big = jnp.full((1, 4), 8.0)
+    small = jnp.full((1, 4), 1.0)
+    s0 = headwise_scales(big)
+    s1 = jnp.maximum(s0, headwise_scales(small))    # the scatter's .max()
+    assert jnp.array_equal(s0, s1)
+
+
+# ----------------------------------------------------------- config --
+
+def test_kv_dtype_validated():
+    with pytest.raises(ValueError):
+        CacheConfig(kv_dtype="fp8")
+    assert CacheConfig(kv_dtype="int8").kv_dtype == "int8"
+    assert CacheConfig().kv_dtype == "bf16"
+
+
+def test_bytes_per_token_matches_closed_form(cfg, params):
+    """bytes_per_token = L * 2 * (Kv*hd * itemsize + scale bytes/token);
+    the int8/bf16 ratio is the quantization win the bench gates on."""
+    prompts = _prompts(cfg.vocab_size)[:2]
+    page = 4
+    _, st8 = _serve(cfg, params, prompts, kv_dtype="int8", page_size=page)
+    _, st16 = _serve(cfg, params, prompts, kv_dtype="bf16", page_size=page)
+    kv, hd, L = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    param_bytes = jnp.dtype(cfg.param_dtype).itemsize
+    assert st8.bytes_per_token == L * 2 * (kv * hd * 1 + 4.0 * kv / page)
+    assert st16.bytes_per_token == L * 2 * kv * hd * param_bytes
+    assert st8.bytes_per_token / st16.bytes_per_token <= 0.6
+
+
+# ----------------------------------------------------------- parity --
+
+def test_int8_kernel_matches_ref(cfg, params, matrix_page_size):
+    prompts = _prompts(cfg.vocab_size)
+    ref, _ = _serve(cfg, params, prompts, page_size=matrix_page_size,
+                    use_kernel=False)
+    ker, _ = _serve(cfg, params, prompts, page_size=matrix_page_size,
+                    use_kernel=True)
+    assert ker == ref, "int8 Pallas kernel diverged from the int8 oracle"
+
+
+def test_int8_tracks_bf16_within_agreement_floor(cfg, params,
+                                                 matrix_use_kernel):
+    """Greedy int8 streams may flip near-argmax-ties relative to bf16 —
+    deterministically, but legitimately — so this asserts a floor on
+    positionwise agreement, not equality."""
+    prompts = _prompts(cfg.vocab_size)
+    base, _ = _serve(cfg, params, prompts, kv_dtype="bf16",
+                     use_kernel=matrix_use_kernel)
+    out, _ = _serve(cfg, params, prompts, kv_dtype="int8",
+                    use_kernel=matrix_use_kernel)
+    agree = sum(int(a == b) for r in base
+                for a, b in zip(base[r], out[r]))
+    total = sum(len(t) for t in base.values())
+    assert agree / total >= 0.9, \
+        f"int8 agreed with bf16 on only {agree}/{total} tokens"
+
+
+# -------------------------------------------------------- lifecycle --
+
+def test_int8_parity_under_preemption(cfg, params, matrix_page_size,
+                                      matrix_use_kernel):
+    """Swap-out packs int8 page bytes + scales into one checksummed blob;
+    the restored lane must continue the exact undisturbed stream."""
+    prompts = _prompts(cfg.vocab_size)
+    base, _ = _serve(cfg, params, prompts, page_size=matrix_page_size,
+                     use_kernel=matrix_use_kernel)
+    out, _ = _serve(cfg, params, prompts, page_size=matrix_page_size,
+                    use_kernel=matrix_use_kernel, preempt_rid=0)
+    assert out == base, "int8 preemption swap changed tokens"
+
+
+def test_int8_shared_prefix_cow_parity(cfg, params):
+    """Prefix sharing + copy-on-write on quantized pages (the CoW copy
+    carries bytes AND the page's scale row): sharing must not change any
+    stream relative to the no-sharing int8 engine."""
+    prompts = _prompts(cfg.vocab_size)
+    base, _ = _serve(cfg, params, prompts,
+                     cache_kw={"enable_prefix_cache": False})
+    out, stats = _serve(cfg, params, prompts)
+    assert out == base, "int8 prefix sharing/CoW changed tokens"
+    assert stats.prefix_hit_tokens > 0, "workload never shared a prefix"
+
+
+def test_int8_spec_parity(cfg, params, matrix_page_size, matrix_use_kernel):
+    """Speculative verify writes draft tokens through the quant scatter
+    and trims rejections; the spec-on int8 stream must equal spec-off."""
+    prompts = _prompts(cfg.vocab_size)
+    base, _ = _serve(cfg, params, prompts, page_size=matrix_page_size,
+                     use_kernel=matrix_use_kernel)
+    out, _ = _serve(cfg, params, prompts, page_size=matrix_page_size,
+                    use_kernel=matrix_use_kernel, spec_k=4)
+    assert out == base, "int8 speculation changed tokens"
+
+
+def test_int8_tier_demote_promote_parity(cfg, params):
+    """Spilled payloads carry int8 page bytes + scales under one CRC;
+    prefix hits restored from the host tier must reproduce the
+    device-only int8 streams exactly."""
+    # 6 tenants x 16-token system prompts = 24 pages of prefix corpus
+    # revisited twice, against a 12-page device pool: revisits after
+    # eviction hit the host tier and promote quantized pages back
+    systems = {t: [t * 7 + 1, t + 2, t + 3, t + 4] * 4 for t in range(6)}
+    reps = [systems[t] + [90 + r, 95 + r] for r in range(2)
+            for t in range(6)]
+    base, _ = _serve(cfg, params, reps, num_pages=12, max_new=3)
+    out, stats = _serve(cfg, params, reps, num_pages=12, max_new=3,
+                        cache_kw={"host_tier_pages": 64},
+                        clock=VirtualClock())
+    assert out == base, "int8 tier round-trip changed tokens"
+    assert stats.demoted_pages > 0, "workload never demoted a page"
+    assert stats.promoted_pages > 0, "workload never promoted a page"
+
+
+def test_int8_sharded_one_cluster_parity(cfg, params, matrix_page_size):
+    prompts = _prompts(cfg.vocab_size)
+    base, _ = _serve(cfg, params, prompts, page_size=matrix_page_size)
+    out, _ = _serve(cfg, params, prompts, page_size=matrix_page_size,
+                    sharded=True, clusters=1, heads=1)
+    assert out == base, "1-cluster sharded int8 diverged from unsharded"

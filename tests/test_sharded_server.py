@@ -31,11 +31,11 @@ def _req(rid, prompt, max_new=4, **sampling):
                                                      **sampling))
 
 
-def _run(cfg, params, *, page_size, use_kernel, tracer=None, sharded=False,
-         **kw):
+def _run(cfg, params, *, page_size, use_kernel, kv_dtype="bf16",
+         tracer=None, sharded=False, **kw):
     srv = make_engine(cfg, params, EngineConfig(
         cache=CacheConfig(num_pages=32, page_size=page_size,
-                          max_pages_per_seq=8),
+                          max_pages_per_seq=8, kv_dtype=kv_dtype),
         max_lanes=2, chunk=4, use_kernel=use_kernel, sharded=sharded,
         **kw),
         tracer=tracer)
@@ -48,34 +48,37 @@ def _run(cfg, params, *, page_size, use_kernel, tracer=None, sharded=False,
 
 @pytest.mark.parametrize("page_size", [4, 8])
 def test_one_cluster_parity_with_unsharded_engine(page_size,
-                                                  matrix_use_kernel):
+                                                  matrix_use_kernel,
+                                                  matrix_kv_dtype):
     """The 1-cluster sharded engine must be token-for-token identical to
     the unsharded engine — same scheduling, same kernels, the mesh
     collapsed to a single device."""
     cfg = get_config("yi-6b").smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     base, _ = _run(cfg, params, page_size=page_size,
-                   use_kernel=matrix_use_kernel)
+                   use_kernel=matrix_use_kernel, kv_dtype=matrix_kv_dtype)
     shard, srv = _run(cfg, params, page_size=page_size,
-                      use_kernel=matrix_use_kernel, sharded=True,
-                      clusters=1, heads=1)
+                      use_kernel=matrix_use_kernel, kv_dtype=matrix_kv_dtype,
+                      sharded=True, clusters=1, heads=1)
     assert isinstance(srv, ShardedPagedServer)
     assert shard == base
     srv.cpool.check_invariants()
     assert srv.pool.free_pages() == 32
 
 
-def test_matrix_engine_combination(matrix_page_size, matrix_use_kernel):
-    """The CI matrix's (page size, attention path) cell, exercised on the
-    unsharded engine's hot path: chunked admission must match
-    token-by-token admission exactly in this configuration."""
+def test_matrix_engine_combination(matrix_page_size, matrix_use_kernel,
+                                   matrix_kv_dtype):
+    """The CI matrix's (page size, attention path, KV dtype) cell,
+    exercised on the unsharded engine's hot path: chunked admission must
+    match token-by-token admission exactly in this configuration."""
     cfg = get_config("yi-6b").smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
 
     def run(chunk):
         srv = make_engine(cfg, params, EngineConfig(
             cache=CacheConfig(num_pages=32, page_size=matrix_page_size,
-                              max_pages_per_seq=8),
+                              max_pages_per_seq=8,
+                              kv_dtype=matrix_kv_dtype),
             max_lanes=2, chunk=chunk, use_kernel=matrix_use_kernel))
         for rid, p in enumerate(PROMPTS):
             srv.submit(_req(rid, p, max_new=3))
@@ -129,6 +132,7 @@ def test_head_axis_must_divide_kv_heads():
 
 
 _MULTI_CLUSTER_SCRIPT = textwrap.dedent("""
+    import os
     import jax
     jax.config.update("jax_platform_name", "cpu")
     assert len(jax.devices()) >= 8, jax.devices()
@@ -138,6 +142,7 @@ _MULTI_CLUSTER_SCRIPT = textwrap.dedent("""
                                GenerationRequest, SamplingParams,
                                make_engine)
 
+    KV_DTYPE = os.environ.get("REPRO_KV_DTYPE", "bf16")
     cfg = get_config("yi-6b").smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     prompts = [[5, 6, 7, 8, 9, 10, 11], [3, 1, 4, 1, 5], [2, 7], [9, 9, 8]]
@@ -145,7 +150,7 @@ _MULTI_CLUSTER_SCRIPT = textwrap.dedent("""
     def run(preempt=False, sampled_rid=None, **kw):
         srv = make_engine(cfg, params, EngineConfig(
             cache=CacheConfig(num_pages=16, page_size=4,
-                              max_pages_per_seq=8),
+                              max_pages_per_seq=8, kv_dtype=KV_DTYPE),
             max_lanes=2, chunk=4, use_kernel=False, **kw))
         for rid, p in enumerate(prompts):
             sp = SamplingParams(max_new=3) if rid != sampled_rid else \\

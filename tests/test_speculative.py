@@ -43,11 +43,11 @@ def _prompts(vocab, seed=0):
 
 
 def _serve(cfg, params, prompts, *, spec_k, page_size=4, use_kernel=False,
-           max_lanes=2, max_new=MAX_NEW, preempt_rid=None, tracer=None,
-           sampling_for=None, **kw):
+           kv_dtype="bf16", max_lanes=2, max_new=MAX_NEW, preempt_rid=None,
+           tracer=None, sampling_for=None, **kw):
     srv = make_engine(cfg, params, EngineConfig(
         cache=CacheConfig(num_pages=64, page_size=page_size,
-                          max_pages_per_seq=16),
+                          max_pages_per_seq=16, kv_dtype=kv_dtype),
         max_lanes=max_lanes, chunk=8, use_kernel=use_kernel,
         spec_k=spec_k, **kw), tracer=tracer)
     for rid, p in enumerate(prompts):
@@ -118,12 +118,12 @@ def test_draft_model_drafter_self_draft_fully_accepted(cfg, params):
 
 @pytest.mark.parametrize("page_size", [4, 8])
 def test_spec_parity_across_page_sizes(cfg, params, page_size,
-                                       matrix_use_kernel):
+                                       matrix_use_kernel, matrix_kv_dtype):
     prompts = _prompts(cfg.vocab_size)
     base, _ = _serve(cfg, params, prompts, spec_k=0, page_size=page_size,
-                     use_kernel=matrix_use_kernel)
+                     use_kernel=matrix_use_kernel, kv_dtype=matrix_kv_dtype)
     out, srv = _serve(cfg, params, prompts, spec_k=4, page_size=page_size,
-                      use_kernel=matrix_use_kernel)
+                      use_kernel=matrix_use_kernel, kv_dtype=matrix_kv_dtype)
     assert out == base
     assert srv.spec_accepted > 0, "workload never accepted a draft"
     srv.pool.check_invariants()
@@ -131,35 +131,36 @@ def test_spec_parity_across_page_sizes(cfg, params, page_size,
 
 
 def test_spec_parity_under_preemption(cfg, params, matrix_page_size,
-                                      matrix_use_kernel):
+                                      matrix_use_kernel, matrix_kv_dtype):
     """Forced mid-decode preemption with speculation on: the victim swaps
     out (possibly with just-verified pages), resumes, and still emits the
     exact spec-off token stream."""
     prompts = _prompts(cfg.vocab_size)
     base, _ = _serve(cfg, params, prompts, spec_k=0,
                      page_size=matrix_page_size,
-                     use_kernel=matrix_use_kernel)
+                     use_kernel=matrix_use_kernel, kv_dtype=matrix_kv_dtype)
     out, srv = _serve(cfg, params, prompts, spec_k=4,
                       page_size=matrix_page_size,
-                      use_kernel=matrix_use_kernel, preempt_rid=0)
+                      use_kernel=matrix_use_kernel, kv_dtype=matrix_kv_dtype,
+                      preempt_rid=0)
     assert out == base
     assert srv.preemptions >= 1
     srv.pool.check_invariants()
 
 
 def test_spec_parity_sharded_one_cluster(cfg, params, matrix_page_size,
-                                         matrix_use_kernel):
+                                         matrix_use_kernel, matrix_kv_dtype):
     """The sharded engine runs the same verify step as a shard_map body;
     at 1 cluster it must be token-for-token identical to both the
     unsharded spec-on engine and the plain spec-off stream."""
     prompts = _prompts(cfg.vocab_size)
     base, _ = _serve(cfg, params, prompts, spec_k=0,
                      page_size=matrix_page_size,
-                     use_kernel=matrix_use_kernel)
+                     use_kernel=matrix_use_kernel, kv_dtype=matrix_kv_dtype)
     out, srv = _serve(cfg, params, prompts, spec_k=4,
                       page_size=matrix_page_size,
-                      use_kernel=matrix_use_kernel, sharded=True,
-                      clusters=1, heads=1)
+                      use_kernel=matrix_use_kernel, kv_dtype=matrix_kv_dtype,
+                      sharded=True, clusters=1, heads=1)
     assert out == base
     assert srv.spec_accepted > 0
     srv.cpool.check_invariants()
