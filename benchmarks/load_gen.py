@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as M
+from repro.planner.workload import WorkloadSpec
 from repro.runtime import (
     Arrival, CacheConfig, EngineConfig, FrontDoor, GenerationRequest,
     SamplingParams,
@@ -34,32 +35,34 @@ from repro.runtime import (
 )
 
 
+def arrivals_from_spec(spec: WorkloadSpec, vocab: int):
+    """Sample ``spec``'s schedule and wrap it for the front door: one
+    :class:`Arrival` per :class:`repro.planner.SampledRequest`.  This is
+    the bridge between the shared workload schema and the engine — the
+    planner's simulator consumes the *same* sampled schedule, so a
+    prediction and this generator's measurement describe identical
+    traffic."""
+    return [Arrival(t=r.t, request=GenerationRequest(
+                rid=r.rid, prompt=r.prompt,
+                sampling=SamplingParams(max_new=r.max_new)))
+            for r in spec.sample_arrivals(vocab)]
+
+
 def make_arrivals(*, rate_rps: float, requests: int, prompt_min: int,
                   prompt_max: int, output_min: int, output_max: int,
                   vocab: int, seed: int = 0):
     """Seeded arrival schedule: Poisson arrivals at ``rate_rps``, prompt
     lengths uniform in [prompt_min, prompt_max], output budgets uniform
-    in [output_min, output_max].  Deterministic for a given seed."""
-    if rate_rps <= 0:
-        raise ValueError("arrival rate must be > 0")
-    if not (1 <= prompt_min <= prompt_max):
-        raise ValueError("need 1 <= prompt_min <= prompt_max")
-    if not (1 <= output_min <= output_max):
-        raise ValueError("need 1 <= output_min <= output_max")
-    rng = np.random.default_rng(seed)
-    arrivals = []
-    t = 0.0
-    for rid in range(requests):
-        t += float(rng.exponential(1.0 / rate_rps))
-        plen = int(rng.integers(prompt_min, prompt_max + 1))
-        max_new = int(rng.integers(output_min, output_max + 1))
-        prompt = tuple(int(x) for x in rng.integers(1, vocab, size=plen))
-        arrivals.append(Arrival(
-            t=round(t, 9),
-            request=GenerationRequest(
-                rid=rid, prompt=prompt,
-                sampling=SamplingParams(max_new=max_new))))
-    return arrivals
+    in [output_min, output_max].  Deterministic for a given seed.
+
+    Delegates to :class:`repro.planner.WorkloadSpec` — the draw order is
+    that class's contract now, and historical seeds produce bit-identical
+    schedules."""
+    spec = WorkloadSpec(
+        rate_rps=rate_rps, requests=requests, prompt_min=prompt_min,
+        prompt_max=prompt_max, output_min=output_min,
+        output_max=output_max, seed=seed)
+    return arrivals_from_spec(spec, vocab)
 
 
 def run_load(cfg, params, arrivals, *, page_size: int, max_lanes: int,
@@ -91,22 +94,31 @@ def run_load(cfg, params, arrivals, *, page_size: int, max_lanes: int,
 def run_load_gen(*, arch: str = "yi-6b", rate_rps: float = 50.0,
                  requests: int = 16, prompt_min: int = 8,
                  prompt_max: int = 24, output_min: int = 2,
-                 output_max: int = 8, seed: int = 0, page_size: int = 4,
+                 output_max: int = 8, seed: int = 0,
+                 prefix_share_ratio: float = 0.0, page_size: int = 4,
                  max_lanes: int = 4, chunk: int = 8,
                  token_budget: int = 12, iter_time_s: float = 0.01,
                  slo_ttft_s: float = 0.25, slo_tpot_s: float = 0.05,
-                 use_kernel: bool = False, cfg=None, params=None) -> dict:
+                 use_kernel: bool = False, cfg=None, params=None,
+                 spec: WorkloadSpec = None) -> dict:
     """Full load-gen run: schedule + fresh engine + report.  ``cfg`` /
     ``params`` may be passed in to reuse an already-initialised model
-    (the engine itself is always built fresh)."""
+    (the engine itself is always built fresh).  Pass ``spec`` to drive
+    the generator from an existing :class:`WorkloadSpec` (e.g. one
+    deserialized from ``--workload``); the individual knobs are ignored
+    then.  The spec rides along in the report under
+    ``workload["spec"]``, so a report is always replayable."""
     if cfg is None:
         cfg = get_config(arch).smoke()
     if params is None:
         params = M.init_params(cfg, jax.random.PRNGKey(0))
-    arrivals = make_arrivals(
-        rate_rps=rate_rps, requests=requests, prompt_min=prompt_min,
-        prompt_max=prompt_max, output_min=output_min,
-        output_max=output_max, vocab=cfg.vocab_size, seed=seed)
+    if spec is None:
+        spec = WorkloadSpec(
+            rate_rps=rate_rps, requests=requests, prompt_min=prompt_min,
+            prompt_max=prompt_max, output_min=output_min,
+            output_max=output_max, seed=seed,
+            prefix_share_ratio=prefix_share_ratio)
+    arrivals = arrivals_from_spec(spec, cfg.vocab_size)
     rep = run_load(cfg, params, arrivals, page_size=page_size,
                    max_lanes=max_lanes, chunk=chunk,
                    token_budget=token_budget, iter_time_s=iter_time_s,
@@ -114,12 +126,15 @@ def run_load_gen(*, arch: str = "yi-6b", rate_rps: float = 50.0,
                    use_kernel=use_kernel)
     return {
         "workload": {
-            "arch": cfg.name, "rate_rps": rate_rps, "requests": requests,
-            "prompt_len": [prompt_min, prompt_max],
-            "output_len": [output_min, output_max], "seed": seed,
+            "arch": cfg.name, "rate_rps": spec.rate_rps,
+            "requests": spec.requests,
+            "prompt_len": [spec.prompt_min, spec.prompt_max],
+            "output_len": [spec.output_min, spec.output_max],
+            "seed": spec.seed,
             "page_size": page_size, "max_lanes": max_lanes,
             "chunk": chunk, "token_budget": token_budget,
             "iter_time_s": iter_time_s,
+            "spec": spec.to_json(),
         },
         **rep,
     }
@@ -136,6 +151,15 @@ def main(argv=None) -> dict:
     ap.add_argument("--output-min", type=int, default=2)
     ap.add_argument("--output-max", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefix-share", type=float, default=0.0,
+                    help="fraction of requests whose prompt starts with "
+                         "one shared prompt_min-token block")
+    ap.add_argument("--workload", default=None,
+                    help="read the WorkloadSpec from this JSON file "
+                         "(overrides the individual workload knobs)")
+    ap.add_argument("--workload-out", default=None,
+                    help="serialize the WorkloadSpec to this JSON file "
+                         "(round-trips through --workload)")
     ap.add_argument("--page-size", type=int, default=4)
     ap.add_argument("--max-lanes", type=int, default=4)
     ap.add_argument("--chunk", type=int, default=8)
@@ -164,15 +188,28 @@ def main(argv=None) -> dict:
 
     cfg = get_config(args.arch).smoke()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    spec = None
+    if args.workload:
+        with open(args.workload) as f:
+            spec = WorkloadSpec.from_json(json.load(f))
     knobs = dict(
         rate_rps=args.rate, requests=args.requests,
         prompt_min=args.prompt_min, prompt_max=args.prompt_max,
         output_min=args.output_min, output_max=args.output_max,
-        seed=args.seed, page_size=args.page_size,
+        seed=args.seed, prefix_share_ratio=args.prefix_share,
+        page_size=args.page_size,
         max_lanes=args.max_lanes, chunk=args.chunk,
         token_budget=args.token_budget, iter_time_s=args.iter_time,
         slo_ttft_s=args.slo_ttft, slo_tpot_s=args.slo_tpot,
-        cfg=cfg, params=params)
+        cfg=cfg, params=params, spec=spec)
+    if args.workload_out:
+        dump = spec if spec is not None else WorkloadSpec(
+            rate_rps=args.rate, requests=args.requests,
+            prompt_min=args.prompt_min, prompt_max=args.prompt_max,
+            output_min=args.output_min, output_max=args.output_max,
+            seed=args.seed, prefix_share_ratio=args.prefix_share)
+        with open(args.workload_out, "w") as f:
+            json.dump(dump.to_json(), f, indent=2)
 
     result = run_load_gen(**knobs)
     if args.selfcheck:

@@ -31,128 +31,31 @@ arithmetic intensity (reported per cell as ``arith_intensity`` =
 HLO FLOPs / HBM bytes) correspondingly up the roofline.  Only paged
 attention KV pools quantize — MLA latent, SSM and mLSTM state stay at
 their native widths.
+
+The analytic byte/FLOP terms themselves live in
+:mod:`repro.core.roofline` (pure functions, no artifacts) so the
+capacity planner (``repro.planner``) prices engine iterations from the
+same model this table renders; this module keeps the artifact loading,
+table assembly and CLI.
 """
 from __future__ import annotations
 
 import json
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 
 from repro.configs import SHAPES, get_config
+from repro.core.roofline import (  # noqa: F401  (re-exported: the analytic
+    KV_PAGE_SIZE, analytic_bytes, cache_bytes,  # model moved to the library;
+    kv_elt_bytes, model_flops, param_counts,    # old import paths keep
+)                                               # working)
 from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_LINK_BW
 
 ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 
-
-# ---------------------------------------------------------------------------
-# analytic parameter / FLOP / byte models
-# ---------------------------------------------------------------------------
-
-def _flat_paths(tree, prefix=""):
-    out = []
-    if isinstance(tree, dict):
-        for k in sorted(tree):
-            out += _flat_paths(tree[k], prefix + "/" + str(k))
-    else:
-        out.append((prefix, tree))
-    return out
-
-
-def param_counts(cfg) -> Dict[str, float]:
-    """total N and active N (MoE: routed experts scaled by top_k/E)."""
-    from repro.models import model as M
-    specs = M.param_specs(cfg)
-    total = active = 0.0
-    for path, leaf in _flat_paths(specs):
-        n = 1
-        for d in leaf.shape:
-            n *= d
-        total += n
-        if "/moe/w_" in path:
-            active += n * cfg.moe_top_k / max(cfg.moe_num_experts, 1)
-        else:
-            active += n
-    return {"total": total, "active": active}
-
-
-def model_flops(cfg, shape) -> float:
-    """Global MODEL_FLOPS per step (6*N_active*D train, 2*N_active*D fwd)."""
-    n = param_counts(cfg)["active"]
-    if shape.kind == "train":
-        return 6.0 * n * shape.global_batch * shape.seq_len
-    if shape.kind == "prefill":
-        return 2.0 * n * shape.global_batch * shape.seq_len
-    return 2.0 * n * shape.global_batch          # decode: one token / request
-
-
-def analytic_bytes(cfg, shape, devices: int,
-                   kv_dtype: str = "bf16") -> float:
-    """Per-device HBM bytes per step (analytic lower-bound model)."""
-    n_total = param_counts(cfg)["total"]
-    bp = 2.0                                      # bf16 params
-    if shape.kind == "train":
-        # fwd read + bwd read (remat re-read) + grad write + adam m/v rw +
-        # param write; all param-state is fully sharded (FSDP x TP)
-        w = n_total * (bp * 3 + 4 * 4 + bp) / devices
-        # activations: residual saves + recompute IO, 2 bytes, seq-sharded
-        act = (cfg.num_layers + (cfg.encoder_layers or 0)) * \
-            shape.global_batch * shape.seq_len * cfg.d_model * 2 * 4 / devices
-        return w + act
-    if shape.kind == "prefill":
-        w = n_total * bp / devices
-        act = (cfg.num_layers + (cfg.encoder_layers or 0)) * \
-            shape.global_batch * shape.seq_len * cfg.d_model * 2 * 2 / devices
-        return w + act
-    # decode: weights once + full KV/state cache read + small writes
-    w = n_total * bp / devices
-    cache = cache_bytes(cfg, shape, kv_dtype) / devices
-    return w + cache
-
-
-#: CacheConfig.page_size default — amortizes the per-page scale slab
-KV_PAGE_SIZE = 8
-
-
-def _kv_elt_bytes(kv_dtype: str, hd: int) -> float:
-    """Bytes per paged-KV element: int8 pages carry one f32 scale per
-    (page, K/V, head), i.e. 4 bytes amortized over hd * page_size
-    elements; bf16 pages are exact two-byte elements."""
-    if kv_dtype == "int8":
-        return 1.0 + 4.0 / (hd * KV_PAGE_SIZE)
-    return 2.0
-
-
-def cache_bytes(cfg, shape, kv_dtype: str = "bf16") -> float:
-    """Global decode-cache bytes (read once per decoded token).
-
-    ``kv_dtype`` rescales only the paged attention KV terms — MLA's
-    latent cache, SSM and mLSTM recurrent state are not paged int8."""
-    B, T = shape.global_batch, cfg.cache_len(shape)
-    hd = cfg.resolved_head_dim
-    kvb = _kv_elt_bytes(kv_dtype, hd)
-    if cfg.block_kind == "mlstm":
-        H = cfg.num_heads
-        return cfg.num_layers * B * H * (hd * hd + hd + 1) * 4.0
-    if cfg.attention_kind == "mla":
-        return cfg.num_layers * B * T * (cfg.mla_kv_lora_rank +
-                                         cfg.mla_qk_rope_dim) * 2.0
-    if cfg.block_kind == "hymba":
-        from repro.models.ssm import mamba_dims
-        di, _, N = mamba_dims(cfg)
-        attn = cfg.num_layers * B * T * cfg.num_kv_heads * hd * 2 * kvb
-        ssm = cfg.num_layers * B * (di * N + (cfg.ssm_conv_width - 1) * di) * 4.0
-        return attn + ssm
-    if cfg.block_kind == "encdec":
-        self_c = cfg.num_layers * B * T * cfg.num_kv_heads * hd * 2 * kvb
-        cross = cfg.num_layers * B * cfg.frontend_seq * cfg.num_kv_heads * hd * 2 * kvb
-        return self_c + cross
-    if cfg.local_global_period:
-        n_local = (cfg.num_layers + 1) // cfg.local_global_period
-        n_global = cfg.num_layers - n_local
-        W = min(cfg.sliding_window, T)
-        return (n_local * W + n_global * T) * B * cfg.num_kv_heads * hd * 2 * kvb
-    return cfg.num_layers * B * T * cfg.num_kv_heads * hd * 2 * kvb
+#: Backwards-compatible private alias (pre-refactor name).
+_kv_elt_bytes = kv_elt_bytes
 
 
 # ---------------------------------------------------------------------------

@@ -82,6 +82,25 @@ fails outright — the int8 path going unmeasured is the regression):
 * ``quantized_kv.kernel_ref_outputs_match`` must be true — the in-kernel
   dequant and the oracle must produce identical tokens.
 
+The ``planner_accuracy`` section (written by
+``benchmarks/plan_accuracy.py``) is gated absolutely as well (a missing
+section fails outright — the capacity planner's engine replica going
+unvalidated is the regression):
+
+* every metric in ``planner_accuracy.gated`` must have
+  ``|rel_err| <= --planner-err-ceiling`` (default 0.25) — the simulator's
+  prediction of each bench workload stays within tolerance of the
+  measured engine;
+* at least ``--planner-min-workloads`` (default 3) workloads must be
+  represented among the gated metrics;
+* ``planner_accuracy.capacity_demo.slo_met`` must be true — the config
+  ``plan_capacity`` recommends must meet the SLO it was asked for in its
+  own predicted report.
+
+Additionally ``planner_accuracy.max_gated_abs_rel_err`` joins the
+relative gates (lower is better), so planner accuracy may not silently
+erode even inside the ceiling.
+
 Robustness contract (tested by ``tests/test_check_bench.py``):
 
 * workload descriptor mismatch -> exit 2 (the comparison is meaningless);
@@ -133,6 +152,8 @@ GATED = [
      "int8 KV bytes/token ratio", "lower"),
     (("quantized_kv", "token_agreement"),
      "int8 KV token agreement", "higher"),
+    (("planner_accuracy", "max_gated_abs_rel_err"),
+     "planner max gated |rel err|", "lower"),
 ]
 
 SPEC_ACCEPT_FLOOR = 0.25
@@ -142,6 +163,8 @@ SLO_GOODPUT_FLOOR = 0.5
 CORPUS_RATIO_FLOOR = 4.0
 KV_RATIO_CEILING = 0.6
 TOKEN_AGREEMENT_FLOOR = 0.98
+PLANNER_ERR_CEILING = 0.25
+PLANNER_MIN_WORKLOADS = 3
 
 
 def _dig(d, path):
@@ -386,6 +409,65 @@ def check_quantized_kv_absolute(
     return ok
 
 
+def check_planner_accuracy_absolute(
+        fresh: dict, err_ceiling: float = PLANNER_ERR_CEILING,
+        min_workloads: int = PLANNER_MIN_WORKLOADS) -> bool:
+    """Absolute planner-accuracy gates on the fresh result alone.
+
+    A missing ``planner_accuracy`` section fails (like the other
+    property-style sections): the capacity planner's engine replica
+    going unvalidated is the regression.  Every gated metric (the flat
+    ``gated`` map of ``workload.metric -> rel_err`` emitted by
+    ``benchmarks/plan_accuracy.py``) must sit within ``err_ceiling`` of
+    the measured engine, at least ``min_workloads`` distinct workloads
+    must be represented, and the ``capacity_demo`` recommendation must
+    meet its own SLO in its own predicted report."""
+    pa = fresh.get("planner_accuracy")
+    if not isinstance(pa, dict):
+        print("FAIL planner_accuracy section missing from fresh result")
+        return False
+    ok = True
+    try:
+        gated = dict(pa["gated"])
+        slo_met = _dig(pa, ("capacity_demo", "slo_met"))
+    except (KeyError, TypeError, ValueError) as e:
+        print(f"FAIL planner_accuracy section incomplete in fresh "
+              f"result: {e}")
+        return False
+    if not gated:
+        print("FAIL planner_accuracy.gated is empty — nothing validated")
+        return False
+    over = {k: v for k, v in gated.items()
+            if not (isinstance(v, (int, float)) and abs(v) <= err_ceiling)}
+    if over:
+        worst = sorted(over.items(),
+                       key=lambda kv: -abs(float(kv[1] or 0)))[:5]
+        print(f"FAIL {len(over)}/{len(gated)} planner metrics outside "
+              f"+-{err_ceiling:.0%}: "
+              + ", ".join(f"{k}={v}" for k, v in worst))
+        ok = False
+    else:
+        worst = max(abs(float(v)) for v in gated.values())
+        print(f"OK   all {len(gated)} gated planner metrics within "
+              f"+-{err_ceiling:.0%} (worst |rel err| = {worst:.4f})")
+    workloads = {k.split(".", 1)[0] for k in gated}
+    if len(workloads) < min_workloads:
+        print(f"FAIL planner validated only {len(workloads)} workload(s) "
+              f"({sorted(workloads)}), need >= {min_workloads}")
+        ok = False
+    else:
+        print(f"OK   planner validated against {len(workloads)} bench "
+              f"workloads: {sorted(workloads)}")
+    if slo_met is not True:
+        print("FAIL plan_capacity's recommended config does not meet its "
+              "own SLO in its predicted report (slo_met must be true)")
+        ok = False
+    else:
+        print("OK   plan_capacity recommendation meets its SLO "
+              "in its predicted report")
+    return ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True,
@@ -416,6 +498,14 @@ def main(argv=None) -> int:
     ap.add_argument("--token-agreement-floor", type=float,
                     default=TOKEN_AGREEMENT_FLOOR,
                     help="absolute floor on quantized_kv.token_agreement")
+    ap.add_argument("--planner-err-ceiling", type=float,
+                    default=PLANNER_ERR_CEILING,
+                    help="absolute ceiling on |rel_err| of every metric "
+                         "in planner_accuracy.gated")
+    ap.add_argument("--planner-min-workloads", type=int,
+                    default=PLANNER_MIN_WORKLOADS,
+                    help="minimum distinct workloads the planner must be "
+                         "validated against")
     ap.add_argument("--allow-missing-baseline", action="store_true",
                     help="a missing/unreadable baseline becomes a warning: "
                          "relative gates are skipped and the absolute "
@@ -455,10 +545,12 @@ def main(argv=None) -> int:
     ok &= check_hierarchical_cache_absolute(fresh, args.corpus_ratio_floor)
     ok &= check_quantized_kv_absolute(fresh, args.kv_ratio_ceiling,
                                       args.token_agreement_floor)
+    ok &= check_planner_accuracy_absolute(fresh, args.planner_err_ceiling,
+                                          args.planner_min_workloads)
     if not ok:
         print(f"bench gate FAILED (>{args.max_regress:.0%} regression "
               f"or absolute speculation/degradation/latency/"
-              f"hierarchical-cache/quantized-kv gate)")
+              f"hierarchical-cache/quantized-kv/planner-accuracy gate)")
         return 1
     print("bench gate passed")
     return 0

@@ -122,6 +122,28 @@ except Exception as e:
     traceback.print_exc()
     failures.append("serve_throughput")
 
+# analytical capacity planner: replay the bench just produced above
+# through the discrete-event simulator and assert the predictions land
+# inside the accuracy gate (plan_accuracy sys.exits non-zero otherwise);
+# the annotated copy goes to a scratch file so this script mutates
+# nothing beyond what serve_throughput already wrote
+try:
+    import tempfile
+    from benchmarks import plan_accuracy
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tf:
+        scratch = tf.name
+    section = plan_accuracy.main(["--bench", "BENCH_serve.json",
+                                  "--out", scratch])
+    assert section["capacity_demo"]["slo_met"], \
+        "plan_capacity recommendation missed its own SLO"
+    print(f"OK   planner accuracy: max gated |rel err| = "
+          f"{section['max_gated_abs_rel_err']:.4f} over "
+          f"{len(section['gated'])} metrics")
+except (Exception, SystemExit) as e:
+    print(f"FAIL plan_accuracy: {e}")
+    traceback.print_exc()
+    failures.append("plan_accuracy")
+
 if failures:
     print(f"SMOKE FAILURES ({len(failures)}): " + ", ".join(failures))
     sys.exit(1)

@@ -140,6 +140,72 @@ def layer2_latency(events: Iterable[Event]) -> Dict:
     }
 
 
+def layer2_calibration(events: Iterable[Event],
+                       iter_time_s: Optional[float] = None) -> Dict:
+    """Planner calibration: per-iteration service structure from a trace.
+
+    ``layer2_latency`` reports queue/service spans in *logical event
+    counts*, which depend on how chatty the tracer was.  The capacity
+    planner needs those spans in *engine iterations* — the unit its
+    simulator steps in and the unit ``iter_time_s`` prices.  The engine
+    emits exactly one ``D2H`` token-pull event per iteration, so D2H
+    events serve as iteration ticks: this walks the stream once,
+    counting D2H ticks, and stamps each request's arrive / first-admit /
+    finish with the tick count at that point.  Within an iteration the
+    tick fires after admission and before finishes, so ``service_iters``
+    (first admit -> finish) counts the iterations the request was
+    actually active, inclusive, and ``queue_delay_iters`` (arrive ->
+    first admit) the full iterations it waited.  Caveat: preemption
+    swap-outs and tier demotions also pull pages D2H, so calibrate from
+    a trace without swap traffic (the smoke bench) or treat the result
+    as an upper bound on the tick count.  When ``iter_time_s`` is
+    given, also returns the seconds conversions (``mean_service_s``
+    etc.) — exactly the :class:`repro.planner.costs.Calibration`
+    input."""
+    per: Dict[int, Dict] = {}
+    it = 0
+    for e in events:
+        if e.etype == EventType.D2H:
+            it += 1
+        elif e.etype == EventType.REQUEST_ARRIVE:
+            per.setdefault(e.a0, {"arrive_iter": it, "admit_iter": None,
+                                  "finish_iter": None})
+        elif e.etype == EventType.REQUEST_ADMIT and e.a0 in per:
+            if per[e.a0]["admit_iter"] is None:
+                per[e.a0]["admit_iter"] = it
+        elif e.etype == EventType.REQUEST_FINISH and e.a0 in per:
+            per[e.a0]["finish_iter"] = it
+    rows: Dict[int, Dict] = {}
+    for rid, r in sorted(per.items()):
+        queue = (r["admit_iter"] - r["arrive_iter"]
+                 if r["admit_iter"] is not None else None)
+        service = (r["finish_iter"] - r["admit_iter"]
+                   if r["admit_iter"] is not None
+                   and r["finish_iter"] is not None else None)
+        rows[rid] = dict(r, queue_delay_iters=queue, service_iters=service)
+    qd = [v["queue_delay_iters"] for v in rows.values()
+          if v["queue_delay_iters"] is not None]
+    sv = [v["service_iters"] for v in rows.values()
+          if v["service_iters"] is not None]
+    out = {
+        "requests": rows,
+        "iterations": it,
+        "arrived": len(rows),
+        "finished": sum(1 for v in rows.values()
+                        if v["finish_iter"] is not None),
+        "mean_queue_delay_iters": sum(qd) / len(qd) if qd else 0.0,
+        "max_queue_delay_iters": max(qd) if qd else 0,
+        "mean_service_iters": sum(sv) / len(sv) if sv else 0.0,
+        "max_service_iters": max(sv) if sv else 0,
+    }
+    if iter_time_s is not None:
+        out["iter_time_s"] = iter_time_s
+        out["mean_queue_delay_s"] = out["mean_queue_delay_iters"] * iter_time_s
+        out["mean_service_s"] = out["mean_service_iters"] * iter_time_s
+        out["duration_s"] = it * iter_time_s
+    return out
+
+
 def layer2_cluster_balance(events: Iterable[Event],
                            n_clusters: Optional[int] = None) -> Dict:
     """Platform: per-cluster placement balance for the sharded engine.

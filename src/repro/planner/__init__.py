@@ -1,0 +1,41 @@
+"""Analytical capacity planner: predict the bench, then invert it.
+
+Three layers (HERO's lumos-style design-space exploration, applied to
+the serving engine):
+
+* :mod:`repro.planner.workload` — :class:`WorkloadSpec` / :class:`SLOSpec`,
+  the frozen workload schema shared with ``benchmarks/load_gen.py``;
+* :mod:`repro.planner.costs` + :mod:`repro.core.roofline` — what one
+  engine iteration costs (measured constant or analytic roofline);
+* :mod:`repro.planner.simulator` — a deterministic discrete-event
+  replica of the scheduler on a virtual clock, composing step costs
+  into a predicted serving report;
+* :mod:`repro.planner.capacity` — :func:`plan_capacity`, the search
+  that inverts prediction into the cheapest SLO-meeting EngineConfig.
+
+Accuracy is measured (and CI-gated) by ``benchmarks/plan_accuracy.py``
+against the real engine's ``BENCH_serve.json``.
+"""
+from repro.planner.capacity import (
+    PlanResult, candidate_grid, config_cost, plan_capacity,
+)
+from repro.planner.costs import (
+    AnalyticCostModel, Calibration, FixedIterationCost,
+)
+from repro.planner.simulator import IterationStats, simulate
+from repro.planner.workload import SampledRequest, SLOSpec, WorkloadSpec
+
+__all__ = [
+    "AnalyticCostModel",
+    "Calibration",
+    "FixedIterationCost",
+    "IterationStats",
+    "PlanResult",
+    "SLOSpec",
+    "SampledRequest",
+    "WorkloadSpec",
+    "candidate_grid",
+    "config_cost",
+    "plan_capacity",
+    "simulate",
+]

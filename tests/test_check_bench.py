@@ -66,6 +66,19 @@ def result(**over):
             "token_agreement": 1.0,
             "kernel_ref_outputs_match": True,
         },
+        "planner_accuracy": {
+            "tolerance": 0.25,
+            "gated": {
+                "latency.throughput_rps": 0.0,
+                "latency.ttft_p95_s": 0.0,
+                "quantized_kv.bf16.iterations": 0.0,
+                "cluster_sweep.1.iterations": 0.0,
+                "hierarchical_cache.tiered.demoted_pages": -0.018,
+            },
+            "workloads_within_tolerance": 4,
+            "max_gated_abs_rel_err": 0.018,
+            "capacity_demo": {"slo_met": True},
+        },
     }
     for k, v in over.items():
         parts = k.split(".")
@@ -450,3 +463,64 @@ def test_missing_fresh_exits_2_despite_flag(tmp_path):
     assert check_bench.main(["--baseline", str(bp),
                              "--fresh", str(tmp_path / "nope.json"),
                              "--allow-missing-baseline"]) == 2
+
+
+# --------------------------------------------- planner-accuracy gates --
+
+def test_planner_section_missing_fails(gate):
+    assert gate(result(), result(**{"planner_accuracy": ...})) == 1
+
+
+def _gated(**errs):
+    """The fixture's gated map with per-metric overrides (the metric
+    names themselves contain dots, so the fixture's dotted-path override
+    cannot reach into them)."""
+    g = dict(result()["planner_accuracy"]["gated"])
+    g.update(errs)
+    return g
+
+
+def test_planner_rel_err_above_ceiling_fails(gate):
+    fresh = result(**{"planner_accuracy.gated":
+                      _gated(**{"latency.throughput_rps": 0.4})})
+    assert gate(result(), fresh) == 1
+
+
+def test_planner_rel_err_within_ceiling_passes(gate):
+    fresh = result(**{"planner_accuracy.gated":
+                      _gated(**{"latency.throughput_rps": -0.2})})
+    assert gate(result(), fresh) == 0
+
+
+def test_planner_custom_ceiling(gate):
+    fresh = result(**{"planner_accuracy.gated":
+                      _gated(**{"latency.throughput_rps": -0.2})})
+    assert gate(result(), fresh, "--planner-err-ceiling", "0.1") == 1
+
+
+def test_planner_too_few_workloads_fails(gate):
+    fresh = result(**{"planner_accuracy.gated": {
+        "latency.throughput_rps": 0.0, "latency.ttft_p95_s": 0.0}})
+    assert gate(result(), fresh) == 1
+
+
+def test_planner_empty_gated_fails(gate):
+    assert gate(result(), result(**{"planner_accuracy.gated": {}})) == 1
+
+
+def test_planner_non_numeric_rel_err_fails(gate):
+    fresh = result(**{"planner_accuracy.gated":
+                      _gated(**{"latency.throughput_rps": None})})
+    assert gate(result(), fresh) == 1
+
+
+def test_planner_capacity_demo_slo_not_met_fails(gate):
+    fresh = result(**{"planner_accuracy.capacity_demo.slo_met": False})
+    assert gate(result(), fresh) == 1
+
+
+def test_planner_accuracy_erosion_fails_relative_gate(gate):
+    # still inside the absolute ceiling, but 67% worse than the
+    # committed baseline -> the relative gate catches the drift
+    fresh = result(**{"planner_accuracy.max_gated_abs_rel_err": 0.03})
+    assert gate(result(), fresh) == 1

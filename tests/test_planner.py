@@ -1,0 +1,413 @@
+"""Capacity planner: the WorkloadSpec schema shared with the load
+generator, the discrete-event simulator's accuracy against the
+committed bench artifact, trace-driven calibration, and the
+``plan_capacity`` inversion — determinism, SLO feasibility of the
+recommendation, and the monotonicity properties (a tighter SLO is never
+cheaper; a higher arrival rate never shrinks the recommended pool) in
+the scripted-random style of ``test_pool_properties.py`` (seeded
+``default_rng`` schedules, no hypothesis dependency).
+"""
+import dataclasses
+import inspect
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core.analysis import layer1_decode, layer2_calibration
+from repro.core.tracing import TraceBuffer
+from repro.models import model as M
+from repro.planner import (
+    AnalyticCostModel, Calibration, FixedIterationCost, IterationStats,
+    SLOSpec, WorkloadSpec, candidate_grid, config_cost, plan_capacity,
+    simulate,
+)
+from repro.runtime import (
+    Arrival, CacheConfig, EngineConfig, FrontDoor, GenerationRequest,
+    SamplingParams, TokenBudgetPolicy, VirtualClock, make_engine,
+)
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def model_cfg():
+    return get_config("yi-6b").smoke()
+
+
+@pytest.fixture(scope="module")
+def bench():
+    with open(ROOT / "BENCH_serve.json") as f:
+        return json.load(f)
+
+
+def _spec(**over):
+    base = dict(rate_rps=50.0, requests=8, prompt_min=4, prompt_max=10,
+                output_min=2, output_max=4, seed=0)
+    base.update(over)
+    return WorkloadSpec(**base)
+
+
+def _engine_for(arrivals, *, page_size=4, max_lanes=2, chunk=4,
+                token_budget=None, clusters=1, kv_dtype="bf16",
+                spec_k=0):
+    longest = max(len(a.prompt) + a.max_new for a in arrivals)
+    per_seq = -(-longest // page_size) + 1
+    policy = TokenBudgetPolicy(token_budget) if token_budget else None
+    return EngineConfig(
+        cache=CacheConfig(num_pages=per_seq * max_lanes + 8,
+                          page_size=page_size,
+                          max_pages_per_seq=per_seq, kv_dtype=kv_dtype),
+        max_lanes=max_lanes, chunk=chunk, clusters=clusters,
+        spec_k=spec_k, use_kernel=False, scheduler_policy=policy)
+
+
+# ===========================================================================
+# WorkloadSpec schema
+# ===========================================================================
+
+def test_sample_arrivals_deterministic():
+    a = _spec().sample_arrivals(256)
+    b = _spec().sample_arrivals(256)
+    assert a == b
+
+
+def test_sample_arrivals_shape():
+    arr = _spec(requests=16).sample_arrivals(256)
+    assert [r.rid for r in arr] == list(range(16))
+    assert all(arr[i].t <= arr[i + 1].t for i in range(15))
+    for r in arr:
+        assert 4 <= len(r.prompt) <= 10
+        assert 2 <= r.max_new <= 4
+        assert all(1 <= tok < 256 for tok in r.prompt)
+
+
+def test_json_round_trip():
+    spec = _spec(prefix_share_ratio=0.5, spec_acceptance_rate=0.7,
+                 seed=9)
+    back = WorkloadSpec.from_json(json.loads(json.dumps(spec.to_json())))
+    assert back == spec
+    assert back.sample_arrivals(64) == spec.sample_arrivals(64)
+
+
+def test_from_json_rejects_unknown_fields():
+    d = _spec().to_json()
+    d["surprise"] = 1
+    with pytest.raises(ValueError, match="unknown WorkloadSpec"):
+        WorkloadSpec.from_json(d)
+
+
+@pytest.mark.parametrize("over", [
+    {"rate_rps": 0.0}, {"requests": 0}, {"prompt_min": 0},
+    {"prompt_min": 12, "prompt_max": 4}, {"output_min": 0},
+    {"prefix_share_ratio": 1.5}, {"spec_acceptance_rate": -0.1},
+])
+def test_validation_rejects(over):
+    with pytest.raises(ValueError):
+        _spec(**over)
+
+
+def test_prefix_share_prompts_share_head():
+    arr = _spec(prefix_share_ratio=1.0, requests=6).sample_arrivals(256)
+    head = arr[0].prompt[:4]                  # prompt_min-token block
+    assert all(r.prompt[:min(4, len(r.prompt))] ==
+               head[:min(4, len(r.prompt))] for r in arr)
+    # the zero-ratio stream is a different (historical) draw order
+    plain = _spec(requests=6).sample_arrivals(256)
+    assert [r.prompt for r in plain] != [r.prompt for r in arr]
+
+
+# ===========================================================================
+# simulator vs the committed bench artifact
+# ===========================================================================
+
+def test_simulator_replays_committed_latency_bench(bench, model_cfg):
+    lat = bench["latency"]
+    wl = lat["workload"]
+    spec = WorkloadSpec(
+        rate_rps=wl["rate_rps"], requests=wl["requests"],
+        prompt_min=wl["prompt_len"][0], prompt_max=wl["prompt_len"][1],
+        output_min=wl["output_len"][0], output_max=wl["output_len"][1],
+        seed=wl["seed"])
+    arrivals = spec.sample_arrivals(model_cfg.vocab_size)
+    engine = _engine_for(arrivals, page_size=wl["page_size"],
+                         max_lanes=wl["max_lanes"], chunk=wl["chunk"],
+                         token_budget=wl["token_budget"])
+    rep = simulate(arrivals, engine,
+                   iteration_cost=FixedIterationCost(wl["iter_time_s"]),
+                   slo_ttft_s=lat["slo"]["ttft_s"],
+                   slo_tpot_s=lat["slo"]["tpot_s"])
+    # the simulator reproduces the measured engine run EXACTLY — same
+    # iteration count, same virtual clock, same latency percentiles
+    assert rep["iterations"] == lat["iterations"]
+    assert rep["virtual_duration_s"] == lat["virtual_duration_s"]
+    assert rep["completed"] == lat["completed"]
+    for k in ("ttft_p50_s", "ttft_p95_s", "ttft_p99_s", "tpot_p50_s",
+              "tpot_p95_s", "tpot_p99_s", "slo_goodput"):
+        assert rep[k] == pytest.approx(lat[k], rel=1e-9), k
+
+
+def test_simulator_replays_committed_spec_off_bench(bench, model_cfg):
+    sp = bench["speculation"]
+    wl = sp["workload"]
+    # token values do not change iteration structure for distinct
+    # same-length prompts, so any seeded prompts replay the bench
+    rng = np.random.default_rng(0)
+    arrivals = []
+    from repro.planner import SampledRequest
+    for rid in range(wl["requests"]):
+        prompt = tuple(int(x) for x in rng.integers(
+            1, model_cfg.vocab_size, size=wl["prompt_len"]))
+        arrivals.append(SampledRequest(rid=rid, t=0.0, prompt=prompt,
+                                       max_new=wl["max_new"]))
+    engine = _engine_for(arrivals, max_lanes=wl["requests"], chunk=8)
+    rep = simulate(arrivals, engine,
+                   iteration_cost=FixedIterationCost(0.01))
+    off = sp["spec_off"]
+    assert rep["iterations"] == off["iterations"]
+    assert rep["generated_tokens"] == off["generated_tokens"]
+
+
+# ===========================================================================
+# simulator invariants (engine-free)
+# ===========================================================================
+
+def test_simulate_conserves_tokens():
+    spec = _spec(requests=6, seed=3)
+    arrivals = spec.sample_arrivals(256)
+    engine = _engine_for(arrivals, token_budget=6)
+    rep = simulate(arrivals, engine,
+                   iteration_cost=FixedIterationCost(0.01))
+    assert rep["completed"] == 6
+    assert rep["generated_tokens"] == sum(r.max_new for r in arrivals)
+    assert rep["prefill_tokens"] + rep["prefix_hit_tokens"] == \
+        sum(len(r.prompt) for r in arrivals)
+    assert all(p <= engine.cache.num_pages
+               for p in rep["peak_pages_per_cluster"])
+
+
+def test_simulate_deterministic():
+    spec = _spec(requests=6, seed=5)
+    arrivals = spec.sample_arrivals(256)
+    engine = _engine_for(arrivals, clusters=2)
+    kw = dict(iteration_cost=FixedIterationCost(0.01))
+    assert simulate(arrivals, engine, **kw) == \
+        simulate(arrivals, engine, **kw)
+
+
+def test_simulate_speculation_reduces_iterations():
+    from repro.planner import SampledRequest
+    rng = np.random.default_rng(0)
+    arrivals = [SampledRequest(
+        rid=i, t=0.0,
+        prompt=tuple(int(x) for x in rng.integers(1, 256, size=6)),
+        max_new=12) for i in range(2)]
+    plain = _engine_for(arrivals, chunk=8)
+    spec = _engine_for(arrivals, chunk=8, spec_k=4)
+    rep0 = simulate(arrivals, plain,
+                    iteration_cost=FixedIterationCost(0.01))
+    rep1 = simulate(arrivals, spec,
+                    iteration_cost=FixedIterationCost(0.01),
+                    spec_acceptance=0.8)
+    assert rep1["iterations"] < rep0["iterations"]
+    assert rep1["spec_accepted"] > 0
+    assert rep1["generated_tokens"] == rep0["generated_tokens"]
+
+
+# ===========================================================================
+# cost models
+# ===========================================================================
+
+def _st(p=0, d=0, s=0, ctx=0, c=1):
+    return IterationStats(prefill_tokens=p, decode_lanes=d,
+                          spec_tokens=s, context_tokens=ctx,
+                          active_clusters=c)
+
+
+def test_fixed_cost_is_constant():
+    cost = FixedIterationCost(0.01)
+    assert cost(_st()) == cost(_st(p=999, ctx=10_000)) == 0.01
+
+
+def test_analytic_cost_monotone_in_work(model_cfg):
+    engine = _engine_for([type("A", (), {"prompt": (1,) * 8,
+                                         "max_new": 4})()])
+    cost = AnalyticCostModel.for_engine(model_cfg, engine)
+    assert 0 < cost(_st(d=1)) <= cost(_st(p=64, d=1)) \
+        <= cost(_st(p=64, d=1, ctx=10_000))
+
+
+def test_analytic_cost_int8_kv_cheaper_on_memory_bound(model_cfg):
+    arr = [type("A", (), {"prompt": (1,) * 8, "max_new": 4})()]
+    bf16 = AnalyticCostModel.for_engine(model_cfg,
+                                        _engine_for(arr, kv_dtype="bf16"))
+    int8 = AnalyticCostModel.for_engine(model_cfg,
+                                        _engine_for(arr, kv_dtype="int8"))
+    big_ctx = _st(d=2, ctx=10_000_000)        # deep in the memory regime
+    assert int8(big_ctx) < bf16(big_ctx)
+    assert int8.kv_bytes_token == 136.0 and bf16.kv_bytes_token == 256.0
+
+
+def test_calibration_rejects_negative_quantum():
+    with pytest.raises(ValueError):
+        Calibration(iter_time_s=-1.0)
+    assert Calibration(iter_time_s=0.01).cost()(_st()) == 0.01
+
+
+# ===========================================================================
+# calibration from a recorded trace (real engine, virtual clock)
+# ===========================================================================
+
+def test_calibration_from_recorded_trace(model_cfg):
+    params = M.init_params(model_cfg, jax.random.PRNGKey(0))
+    tracer = TraceBuffer(capacity=1 << 14)
+    srv = make_engine(model_cfg, params, EngineConfig(
+        cache=CacheConfig(num_pages=32, page_size=4, max_pages_per_seq=8),
+        max_lanes=2, chunk=4, use_kernel=False, clock=VirtualClock(),
+        scheduler_policy=TokenBudgetPolicy(6)), tracer=tracer)
+    spec = _spec(requests=4, seed=1)
+    arrivals = [Arrival(t=r.t, request=GenerationRequest(
+                    rid=r.rid, prompt=list(r.prompt),
+                    sampling=SamplingParams(max_new=r.max_new)))
+                for r in spec.sample_arrivals(model_cfg.vocab_size)]
+    FrontDoor(srv, iter_time_s=0.01).serve(arrivals)
+    events = layer1_decode(srv.tracer.drain())
+    cal = layer2_calibration(events, iter_time_s=0.01)
+    # D2H ticks count engine iterations exactly
+    assert cal["iterations"] == srv.iterations
+    assert cal["arrived"] == cal["finished"] == 4
+    for row in cal["requests"].values():
+        assert row["service_iters"] >= 1
+        assert row["queue_delay_iters"] >= 0
+    assert cal["mean_service_s"] == \
+        pytest.approx(cal["mean_service_iters"] * 0.01)
+    assert cal["duration_s"] == pytest.approx(srv.iterations * 0.01)
+    c = Calibration.from_trace(events, iter_time_s=0.01)
+    assert c.mean_service_iters == cal["mean_service_iters"]
+    assert c.mean_queue_delay_iters == cal["mean_queue_delay_iters"]
+    assert c.cost()(_st()) == 0.01
+
+
+# ===========================================================================
+# plan_capacity: determinism + feasibility
+# ===========================================================================
+
+def test_candidate_grid_is_deterministic_and_sized():
+    spec = _spec()
+    a = candidate_grid(spec, max_clusters=4)
+    b = candidate_grid(spec, max_clusters=4)
+    assert a == b
+    longest = spec.prompt_max + spec.output_max
+    for e in a:
+        assert e.cache.max_pages_per_seq * e.cache.page_size >= longest
+        assert e.spec_k == 0                  # no acceptance -> no spec
+    assert any(e.spec_k == 4 for e in
+               candidate_grid(_spec(spec_acceptance_rate=0.7)))
+
+
+def test_plan_capacity_deterministic_and_meets_slo(model_cfg):
+    spec = _spec(requests=12, rate_rps=60.0)
+    slo = SLOSpec(ttft_p95_s=0.15, tpot_p95_s=0.03)
+    kw = dict(model_cfg=model_cfg, max_clusters=4,
+              calibration=Calibration(iter_time_s=0.01))
+    a = plan_capacity(spec, slo, **kw)
+    b = plan_capacity(spec, slo, **kw)
+    assert a.engine == b.engine
+    assert a.predicted == b.predicted
+    assert a.cost == b.cost == config_cost(a.engine, model_cfg)
+    assert slo.met_by(a.predicted)
+    assert a.evaluated >= 1
+
+
+def test_plan_capacity_impossible_slo_raises(model_cfg):
+    with pytest.raises(ValueError, match="no candidate"):
+        plan_capacity(_spec(), SLOSpec(ttft_p95_s=1e-6, tpot_p95_s=1e-6),
+                      model_cfg=model_cfg, max_clusters=2,
+                      calibration=Calibration(iter_time_s=0.01))
+
+
+def test_plan_capacity_restricted_candidates(model_cfg):
+    spec = _spec()
+    arrivals = spec.sample_arrivals(256)
+    only = [_engine_for(arrivals, max_lanes=4, token_budget=None)]
+    res = plan_capacity(spec, SLOSpec(ttft_p95_s=1.0, tpot_p95_s=1.0),
+                        model_cfg=model_cfg, candidates=only,
+                        calibration=Calibration(iter_time_s=0.01))
+    assert res.engine == only[0]
+
+
+# ===========================================================================
+# plan_capacity monotonicity (scripted-random, seeded)
+# ===========================================================================
+
+def _plan(model_cfg, rate, ttft, tpot, seed):
+    spec = WorkloadSpec(rate_rps=rate, requests=12, prompt_min=4,
+                        prompt_max=10, output_min=2, output_max=4,
+                        seed=seed)
+    return plan_capacity(spec, SLOSpec(ttft_p95_s=ttft, tpot_p95_s=tpot),
+                         model_cfg=model_cfg, max_clusters=4,
+                         calibration=Calibration(iter_time_s=0.01))
+
+
+def test_tighter_slo_never_cheaper(model_cfg):
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        rate = float(rng.uniform(20, 120))
+        ttft = float(rng.uniform(0.04, 0.2))
+        tpot = float(rng.uniform(0.01, 0.04))
+        loose = _plan(model_cfg, rate, ttft, tpot, seed)
+        try:
+            tight = _plan(model_cfg, rate, ttft / 2, tpot, seed)
+            cost_tight = tight.cost
+        except ValueError:
+            cost_tight = float("inf")         # infeasible = maximally dear
+        assert cost_tight >= loose.cost, \
+            f"seed {seed}: tighter SLO picked a cheaper config"
+
+
+def test_higher_rate_never_shrinks_the_pool(model_cfg):
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        rate = float(rng.uniform(20, 60))
+        ttft = float(rng.uniform(0.06, 0.2))
+        tpot = float(rng.uniform(0.015, 0.04))
+        prev = _plan(model_cfg, rate, ttft, tpot, seed)
+        for mult in (2, 4):
+            cur = _plan(model_cfg, rate * mult, ttft, tpot, seed)
+            assert cur.engine.clusters >= prev.engine.clusters, \
+                f"seed {seed} x{mult}: fewer clusters at higher rate"
+            assert cur.engine.clusters * cur.engine.cache.num_pages >= \
+                prev.engine.clusters * prev.engine.cache.num_pages, \
+                f"seed {seed} x{mult}: smaller pool at higher rate"
+            assert cur.cost >= prev.cost
+            prev = cur
+
+
+# ===========================================================================
+# no wall clock anywhere in the planner
+# ===========================================================================
+
+def test_planner_never_reads_the_wall_clock():
+    import repro.planner.capacity
+    import repro.planner.costs
+    import repro.planner.simulator
+    import repro.planner.workload
+    banned = ("time.time", "perf_counter", "time.monotonic",
+              "datetime", "time.sleep", "import time")
+    for mod in (repro.planner.capacity, repro.planner.costs,
+                repro.planner.simulator, repro.planner.workload):
+        src = inspect.getsource(mod)
+        for tok in banned:
+            assert tok not in src, f"{mod.__name__} uses {tok}"
+
+
+def test_plan_result_is_frozen(model_cfg):
+    res = plan_capacity(_spec(), SLOSpec(ttft_p95_s=1.0, tpot_p95_s=1.0),
+                        model_cfg=model_cfg, max_clusters=1,
+                        calibration=Calibration(iter_time_s=0.01))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        res.cost = 0.0

@@ -1,0 +1,142 @@
+"""Direct unit tests of the analytic roofline library
+(``repro.core.roofline``) — previously these byte/FLOP terms lived
+inside ``benchmarks/roofline.py`` and were only exercised indirectly
+through the artifact-driven table.  Covers:
+
+* ``param_counts`` — total vs MoE-active parameter split;
+* ``model_flops`` — the 6ND / 2ND / 2N-per-token convention;
+* ``kv_elt_bytes`` — int8 scale amortization per element;
+* ``cache_bytes`` — per-family decode-cache models and the int8
+  rescaling applying ONLY to paged-KV terms;
+* ``analytic_bytes`` — device scaling and kind dispatch;
+* ``kv_bytes_per_token`` — byte-identical to the serving engine's
+  ``cache_stats().bytes_per_token`` for both dtypes (the term the
+  capacity planner prices iterations with);
+* the ``benchmarks/roofline.py`` shim still re-exporting the moved
+  functions (old import paths keep working).
+"""
+import math
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core.roofline import (
+    KV_PAGE_SIZE, analytic_bytes, cache_bytes, kv_bytes_per_token,
+    kv_elt_bytes, model_flops, param_counts,
+)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("yi-6b").smoke()
+
+
+def test_param_counts_dense_total_equals_active(cfg):
+    pc = param_counts(cfg)
+    assert pc["total"] > 0
+    assert pc["active"] == pc["total"]     # dense: every weight is live
+
+
+def test_param_counts_moe_active_below_total():
+    moe = get_config("olmoe-1b-7b").smoke()
+    pc = param_counts(moe)
+    assert pc["active"] < pc["total"]
+    # routed expert weights scale by top_k/E; shared weights stay whole
+    assert pc["active"] >= pc["total"] * moe.moe_top_k / moe.moe_num_experts
+
+
+def test_model_flops_conventions(cfg):
+    n = param_counts(cfg)["active"]
+    train = SHAPES["train_4k"]
+    prefill = SHAPES["prefill_32k"]
+    decode = SHAPES["decode_32k"]
+    assert model_flops(cfg, train) == \
+        6.0 * n * train.global_batch * train.seq_len
+    assert model_flops(cfg, prefill) == \
+        2.0 * n * prefill.global_batch * prefill.seq_len
+    assert model_flops(cfg, decode) == 2.0 * n * decode.global_batch
+
+
+def test_kv_elt_bytes_amortization():
+    assert kv_elt_bytes("bf16", hd=64) == 2.0
+    # one f32 scale per (page, K/V, head) over hd*page_size elements
+    assert kv_elt_bytes("int8", hd=64, page_size=8) == 1.0 + 4.0 / 512
+    # smaller pages amortize worse
+    assert kv_elt_bytes("int8", hd=64, page_size=4) > \
+        kv_elt_bytes("int8", hd=64, page_size=8)
+
+
+def test_cache_bytes_int8_only_rescales_paged_kv(cfg):
+    shape = SHAPES["decode_32k"]
+    bf16 = cache_bytes(cfg, shape, "bf16")
+    int8 = cache_bytes(cfg, shape, "int8")
+    hd = cfg.resolved_head_dim
+    assert int8 / bf16 == pytest.approx(
+        kv_elt_bytes("int8", hd, KV_PAGE_SIZE) / 2.0)
+    # mLSTM state is not a paged pool: dtype must not change it
+    mlstm = get_config("xlstm-350m").smoke()
+    assert cache_bytes(mlstm, shape, "int8") == \
+        cache_bytes(mlstm, shape, "bf16")
+
+
+def test_analytic_bytes_decode_is_weights_plus_cache(cfg):
+    shape = SHAPES["decode_32k"]
+    dev = 4
+    got = analytic_bytes(cfg, shape, dev, "bf16")
+    want = (param_counts(cfg)["total"] * 2.0 +
+            cache_bytes(cfg, shape, "bf16")) / dev
+    assert got == pytest.approx(want)
+    # more devices -> fewer bytes per device
+    assert analytic_bytes(cfg, shape, 8) < got
+
+
+def test_analytic_bytes_train_includes_optimizer_traffic(cfg):
+    shape = SHAPES["train_4k"]
+    w_only = param_counts(cfg)["total"] * (2.0 * 3 + 4 * 4 + 2.0) / 16
+    assert analytic_bytes(cfg, shape, 16) > w_only
+
+
+def test_kv_bytes_per_token_matches_engine_cache_stats(cfg):
+    # the serving engine's measured bytes_per_token for the smoke model
+    # at page_size 4 (committed in BENCH_serve.json: 256 bf16, 136 int8)
+    assert kv_bytes_per_token(cfg, "bf16", page_size=4) == 256.0
+    assert kv_bytes_per_token(cfg, "int8", page_size=4) == 136.0
+    # closed form for any page size
+    hd = cfg.resolved_head_dim
+    ps = 16
+    assert kv_bytes_per_token(cfg, "int8", ps) == \
+        cfg.num_layers * 2.0 * (cfg.num_kv_heads * hd +
+                                4.0 * cfg.num_kv_heads / ps)
+
+
+def test_kv_bytes_per_token_int8_always_cheaper(cfg):
+    for ps in (2, 4, 8, 64):
+        assert kv_bytes_per_token(cfg, "int8", ps) < \
+            kv_bytes_per_token(cfg, "bf16", ps)
+
+
+def test_shim_reexports_library():
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                           / "benchmarks"))
+    try:
+        import roofline as shim
+    finally:
+        sys.path.pop(0)
+    assert shim.param_counts is param_counts
+    assert shim.model_flops is model_flops
+    assert shim.cache_bytes is cache_bytes
+    assert shim._kv_elt_bytes is kv_elt_bytes   # pre-refactor alias
+    assert shim.KV_PAGE_SIZE == KV_PAGE_SIZE
+
+
+def test_costs_are_finite_for_all_archs():
+    shape = SHAPES["decode_32k"]
+    for arch in ("yi-6b", "olmoe-1b-7b", "deepseek-v2-236b", "xlstm-350m",
+                 "hymba-1.5b", "gemma2-2b", "whisper-medium"):
+        c = get_config(arch).smoke()
+        for kv in ("bf16", "int8"):
+            assert math.isfinite(cache_bytes(c, shape, kv))
+            assert math.isfinite(analytic_bytes(c, shape, 8, kv))
+        assert math.isfinite(model_flops(c, shape))
